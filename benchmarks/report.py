@@ -1,0 +1,135 @@
+"""Render §Dry-run and §Roofline tables into EXPERIMENTS.md from the raw
+artifacts (idempotent: replaces the <!-- DRYRUN_TABLE --> and
+<!-- ROOFLINE_TABLE --> markers / previously generated blocks)."""
+import glob
+import json
+import os
+import re
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.join(HERE, "..")
+
+
+def dryrun_table() -> str:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(ROOT, "experiments/dryrun/*.json"))):
+        r = json.load(open(p))
+        if r.get("tag"):
+            continue
+        mem = r.get("memory", {})
+        arg = mem.get("argument_size_in_bytes", 0) / 2**30
+        tmp = mem.get("temp_size_in_bytes", 0) / 2**30
+        coll = r.get("collectives", {}).get("total_bytes", 0) / 2**30
+        status = r["status"]
+        if status == "skipped":
+            cell = f"skip: {r['skip_reason'][:48]}"
+            rows.append((r["arch"], r["shape"], r["mesh"], status, cell))
+        else:
+            cell = (f"args {arg:.2f} GiB, temps {tmp:.2f} GiB, "
+                    f"coll {coll:.2f} GiB, compile {r.get('compile_s', 0):.0f}s")
+            rows.append((r["arch"], r["shape"], r["mesh"], status, cell))
+    lines = ["| arch | shape | mesh | status | per-device memory & collectives |",
+             "|---|---|---|---|---|"]
+    for a, s, m, st, cell in rows:
+        lines.append(f"| {a} | {s} | {m} | {st} | {cell} |")
+    ok = sum(1 for r in rows if r[3] == "ok")
+    sk = sum(1 for r in rows if r[3] == "skipped")
+    lines.append(f"\n**{ok} compiled ok, {sk} declared skips, "
+                 f"{len(rows) - ok - sk} errors.**")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    import sys
+    sys.path.insert(0, ROOT)
+    from benchmarks.roofline import load_rows, markdown_table
+    rows = load_rows()
+    single = markdown_table(rows, "single_pod")
+    multi = markdown_table(rows, "multi_pod")
+    return ("### Single-pod (16x16 = 256 chips)\n\n" + single +
+            "\n\n### Multi-pod (2x16x16 = 512 chips) — proves the pod axis "
+            "shards\n\n" + multi)
+
+
+def inject(md: str, marker: str, content: str) -> str:
+    block = f"<!-- {marker} -->\n{content}\n<!-- /{marker} -->"
+    if f"<!-- /{marker} -->" in md:
+        return re.sub(
+            rf"<!-- {marker} -->.*?<!-- /{marker} -->", block, md,
+            flags=re.S)
+    return md.replace(f"<!-- {marker} -->", block)
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    md = open(path).read()
+    md = inject(md, "DRYRUN_TABLE", dryrun_table())
+    md = inject(md, "ROOFLINE_TABLE", roofline_table())
+    open(path, "w").write(md)
+    main_perf()
+    print("EXPERIMENTS.md tables regenerated")
+
+
+def _terms(path):
+    import sys
+    sys.path.insert(0, ROOT)
+    from benchmarks.roofline import analyze_record
+    r = json.load(open(path))
+    row = analyze_record(r)
+    if row is None:
+        return None
+    return row
+
+
+def perf_table(arch, shape, tags, mesh="single_pod"):
+    lines = ["| variant | compute s | memory s | collective s | dominant | 6ND/HLO |",
+             "|---|---|---|---|---|---|"]
+    for tag in tags:
+        suffix = f"__{tag}" if tag else ""
+        p = os.path.join(ROOT, f"experiments/dryrun/{arch}__{shape}__{mesh}{suffix}.json")
+        if not os.path.exists(p):
+            continue
+        row = _terms(p)
+        if row is None:
+            lines.append(f"| {tag or 'baseline'} | - | - | - | error | - |")
+            continue
+        lines.append(
+            f"| {tag or 'baseline'} | {row.compute_s:.2f} | {row.memory_s:.2f} "
+            f"| {row.collective_s:.2f} | {row.dominant} | {row.useful_ratio:.2f} |")
+    return "\n".join(lines)
+
+
+def sync_table():
+    p = os.path.join(ROOT, "experiments/bench/sync_sweep_qwen3-moe-30b-a3b.json")
+    if not os.path.exists(p):
+        return "(pending)"
+    d = json.load(open(p))
+    lines = ["| strategy | train-step collectives/dev | sync round/dev | amortized sync B/dev/step |",
+             "|---|---|---|---|"]
+    for tag, v in d.items():
+        if v.get("status") != "ok":
+            lines.append(f"| {tag} | error: {v.get('error','')[:60]} | | |")
+            continue
+        lines.append(
+            f"| {tag} | {v['train_step_collective_B_per_dev']/2**30:.2f} GiB "
+            f"| {v['sync_round_B_per_dev']/2**20:.1f} MiB "
+            f"| {v['amortized_sync_B_per_dev_step']/2**20:.2f} MiB |")
+    return "\n".join(lines)
+
+
+def main_perf():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    md = open(path).read()
+    md = inject(md, "PERF_KIMI_TABLE", perf_table(
+        "kimi-k2-1t-a32b", "train_4k",
+        ["", "grouped", "grouped_ff"]))
+    md = inject(md, "PERF_GEMMA3_TABLE", perf_table(
+        "gemma3-12b", "train_4k",
+        ["", "chunked", "onehot", "both", "dots", "chunked_dots", "best"]))
+    md = inject(md, "PERF_SYNC_TABLE", sync_table())
+    open(path, "w").write(md)
+    print("perf tables injected")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Benchmark harness — one function per paper table/figure plus the roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per benchmark) and writes
+full JSON results to ``experiments/bench/``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+OUT_DIR = os.path.join(HERE, "..", "experiments", "bench")
+
+
+def _run(name: str, fn, derived_key) -> None:
+    t0 = time.time()
+    result = fn()
+    dt_us = (time.time() - t0) * 1e6
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(result, f, indent=1)
+    derived = derived_key(result) if callable(derived_key) else derived_key
+    print(f"{name},{dt_us:.0f},{derived}", flush=True)
+
+
+def main() -> None:
+    from benchmarks import paper_repro as P
+
+    _run("table1_device_quantification", P.bench_table1,
+         lambda r: f"max_tn_err={r['max_tn_rel_err_vs_paper']}")
+
+    _run("fig7_usability_lenet", lambda: P.bench_usability(model="lenet"),
+         lambda r: f"acc_gap={r['acc_gap']}")
+    _run("fig7_usability_deepfm",
+         lambda: P.bench_usability(model="deepfm", steps=100),
+         lambda r: f"acc_gap={r['acc_gap']}")
+
+    _run("fig8_elastic_scheduling", P.bench_scheduling,
+         lambda r: "cost_red=" + "/".join(
+             str(r[c]["cost_reduction"]) for c in ("case1", "case2", "case3")))
+
+    _run("fig10_sync_strategies", P.bench_sync,
+         lambda r: f"deepfm_max_speedup="
+                   f"{max(v['speedup'] for v in r['deepfm'].values())}")
+
+    _run("fig11_sma_accuracy", P.bench_sma,
+         lambda r: f"sma_acc={r['accuracy']['sma@8']}")
+
+    # roofline from the dry-run artifacts (skips silently if none exist yet)
+    def _roofline():
+        from benchmarks import roofline as R
+        rows = R.load_rows()
+        with open(R.OUT_PATH, "w") as f:
+            json.dump([R.asdict(r) for r in rows], f, indent=1)
+        doms = {}
+        for r in rows:
+            if r.mesh == "single_pod":
+                doms[r.dominant] = doms.get(r.dominant, 0) + 1
+        return {"rows": len(rows), "dominant_histogram": doms}
+
+    _run("roofline", _roofline,
+         lambda r: f"rows={r['rows']} dominants={r['dominant_histogram']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Elastic scheduling walkthrough (paper §III.B, Figs 8-9).
+
+Models the paper's exact Tencent-Cloud setup: Shanghai (Cascade Lake CPUs)
+and Chongqing (Skylake CPUs) with uneven data, plans resources with
+Algorithm 1, and simulates the waiting-time/cost effect over a 100 Mbps WAN.
+
+Run:  PYTHONPATH=src python examples/elastic_scheduling.py
+"""
+from repro.core.scheduler import (CloudResources, optimal_matching,
+                                  predict_times, waiting_fraction)
+from repro.core.sync import SyncConfig
+from repro.core.wan import SimCloud, WANConfig, simulate
+
+# paper Table IV case 3: data ratio 2:1, Cascade vs Skylake, 12 cores each
+clouds = [CloudResources("shanghai", (("cascade", 6),), data_size=2.0),
+          CloudResources("chongqing", (("skylake", 6),), data_size=1.0)]
+
+print("=== Algorithm 1: optimal matching ===")
+plans = optimal_matching(clouds)
+for p in plans:
+    cores = {d: 2 * n for d, n in p.allocation}
+    print(f"  {p.region:10s} -> {cores} (LP={p.load_power:.2f})")
+
+print("\n=== predicted waiting fraction (greedy vs elastic) ===")
+print("  greedy :", {k: round(v, 3) for k, v in
+                     waiting_fraction(predict_times(clouds)).items()})
+print("  elastic:", {k: round(v, 3) for k, v in
+                     waiting_fraction(predict_times(clouds, plans)).items()})
+
+print("\n=== simulated 300-iteration run (ResNet/4, 0.6 MB grads) ===")
+for label, units in (("greedy", [6, 6]),
+                     ("elastic", [dict(p.allocation).get(d, 0)
+                                  for p, d in zip(plans,
+                                                  ("cascade", "skylake"))])):
+    sims = [SimCloud(c.region, iter_time_s=0.7 * c.data_size / (u / 6),
+                     units=2 * u) for c, u in zip(clouds, units)]
+    r = simulate(sims, SyncConfig("asgd", 1), n_iters=300, model_mb=0.6,
+                 wan=WANConfig(seed=0))
+    wait = sum(c.wait_s for c in r.clouds)
+    print(f"  {label:8s} makespan={r.makespan_s:8.1f}s wait={wait:8.1f}s "
+          f"cost={r.total_cost:.3f}")

@@ -1,0 +1,87 @@
+"""Sharding-aware pytree checkpointing (no orbax dependency).
+
+Saves a pytree as a flat ``.npz`` plus a JSON treedef manifest with dtype /
+shape / step metadata.  ``save`` gathers addressable shards to host;
+``restore`` re-places leaves onto a target sharding tree when one is given
+(so a checkpoint written under one mesh can be restored under another —
+needed when the elastic scheduler changes the resource plan between runs,
+the paper's rescheduling path).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+_MANIFEST = "manifest.json"
+_ARRAYS = "arrays.npz"
+
+
+def _flatten_with_paths(tree: Pytree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            for path, _ in flat]
+    return keys, [leaf for _, leaf in flat], treedef
+
+
+def save(directory: str, tree: Pytree, step: int = 0,
+         metadata: Optional[dict] = None) -> None:
+    os.makedirs(directory, exist_ok=True)
+    keys, leaves, _ = _flatten_with_paths(tree)
+    host_leaves = []
+    for x in leaves:
+        a = np.asarray(jax.device_get(x))
+        if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
+            # npz has no cast for ml_dtypes extension types; store upcast
+            # (bf16 ⊂ fp32, lossless) — the manifest keeps the true dtype
+            a = a.astype(np.float32)
+        host_leaves.append(a)
+    np.savez(os.path.join(directory, _ARRAYS),
+             **{f"a{i}": a for i, a in enumerate(host_leaves)})
+    manifest = {
+        "step": step,
+        "keys": keys,
+        "dtypes": [str(x.dtype) for x in leaves],
+        "shapes": [list(a.shape) for a in host_leaves],
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(directory, _MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_manifest(directory: str) -> dict:
+    with open(os.path.join(directory, _MANIFEST)) as f:
+        return json.load(f)
+
+
+def restore(directory: str, like: Pytree,
+            shardings: Optional[Pytree] = None) -> tuple[Pytree, int]:
+    """Restore into the structure of ``like``; keys are matched by path so
+    the pytree may be re-laid-out.  Returns (tree, step)."""
+    manifest = load_manifest(directory)
+    data = np.load(os.path.join(directory, _ARRAYS))
+    by_key = {k: data[f"a{i}"] for i, k in enumerate(manifest["keys"])}
+
+    keys, leaves, treedef = _flatten_with_paths(like)
+    out = []
+    for k, ref in zip(keys, leaves):
+        if k not in by_key:
+            raise KeyError(f"checkpoint missing leaf {k!r}")
+        arr = by_key[k]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(
+                f"shape mismatch for {k!r}: ckpt {arr.shape} vs model {ref.shape}")
+        out.append(arr.astype(ref.dtype))
+
+    if shardings is not None:
+        sh_leaves = jax.tree.leaves(
+            shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
+        out = [jax.device_put(a, s) for a, s in zip(out, sh_leaves)]
+    else:
+        out = [jax.device_put(a) for a in out]
+    return jax.tree.unflatten(treedef, out), manifest["step"]

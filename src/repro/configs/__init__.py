@@ -1,0 +1,48 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each entry carries the exact assigned full-scale config, its reduced smoke
+variant, and which model module executes it (decoder-only ``transformer`` or
+``encdec``).
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "qwen3-moe-30b-a3b": ("qwen3_moe_30b_a3b", "transformer"),
+    "jamba-1.5-large-398b": ("jamba_1_5_large_398b", "transformer"),
+    "mamba2-1.3b": ("mamba2_1_3b", "transformer"),
+    "whisper-tiny": ("whisper_tiny", "encdec"),
+    "granite-8b": ("granite_8b", "transformer"),
+    "kimi-k2-1t-a32b": ("kimi_k2_1t_a32b", "transformer"),
+    "gemma3-12b": ("gemma3_12b", "transformer"),
+    "minitron-8b": ("minitron_8b", "transformer"),
+    "qwen2-vl-2b": ("qwen2_vl_2b", "transformer"),
+    "gemma2-27b": ("gemma2_27b", "transformer"),
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+@dataclass(frozen=True)
+class Arch:
+    name: str
+    config: ModelConfig
+    smoke: ModelConfig
+    module: str  # "transformer" | "encdec"
+
+
+def get_arch(name: str) -> Arch:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    modname, kind = _MODULES[name]
+    mod = importlib.import_module(f"repro.configs.{modname}")
+    return Arch(name=name, config=mod.CONFIG, smoke=mod.smoke_config(),
+                module=kind)
+
+
+def all_archs():
+    return [get_arch(n) for n in ARCH_IDS]

@@ -1,0 +1,291 @@
+"""Control plane: the serverless orchestration layer (paper §III.A, §IV).
+
+Reimplements the paper's OpenFaaS customizations as an in-process runtime:
+
+- **FunctionRegistry / AddressTable** — the paper extends OpenFaaS with a
+  function addressing table storing ``identity, name, namespace, endpoint``
+  per replica, with *dynamic* endpoint updates.  Reproduced exactly,
+  including re-registration (endpoint churn) semantics.
+- **Workflow / WorkflowEngine** — OpenFaaS is extended with DAG workflows;
+  the gateway recognizes workflow invocations and invokes internal
+  functions.  Reproduced as a topological executor with per-function scale
+  (replica) counts and lifecycle hooks (serverless scale-to-zero on finish).
+- **SchedulerFunction** — the control-plane cloud function that loads the
+  elastic scheduling strategy (Algorithm 1), generates per-cloud training
+  plans and invokes the per-cloud sub-workflows.
+- **CommunicatorFunction** — the *global communicator*: waits for every
+  cloud's PS to register, assigns a unique WAN identity ``<IP, Port>`` per
+  PS communicator, and plans the inter-PS communication topology (each PS
+  sends to exactly one peer per round — a ring).
+
+On TPU this layer runs at *plan time*: its outputs (resource plans, ring
+topology, sync schedule) parameterize the SPMD launcher (`repro.launch`).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.scheduler import CloudResources, ResourcePlan, optimal_matching
+from repro.core.sync import SyncConfig
+
+# ---------------------------------------------------------------------------
+# function registry + addressing (OpenFaaS customization #2)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class FunctionReplica:
+    identity: str                # unique replica identity
+    name: str                    # function name
+    namespace: str               # cloud/region namespace
+    endpoint: str                # dynamic endpoint (host:port)
+    state: str = "ready"         # ready | running | terminated
+
+
+class AddressTable:
+    """identity -> replica record, with real-time endpoint updates."""
+
+    def __init__(self):
+        self._by_identity: Dict[str, FunctionReplica] = {}
+
+    def register(self, rep: FunctionReplica) -> None:
+        self._by_identity[rep.identity] = rep
+
+    def update_endpoint(self, identity: str, endpoint: str) -> None:
+        self._by_identity[identity].endpoint = endpoint
+
+    def resolve(self, identity: str) -> str:
+        rep = self._by_identity[identity]
+        if rep.state == "terminated":
+            raise LookupError(f"replica {identity} terminated")
+        return rep.endpoint
+
+    def lookup(self, *, name: Optional[str] = None,
+               namespace: Optional[str] = None) -> List[FunctionReplica]:
+        out = []
+        for rep in self._by_identity.values():
+            if name is not None and rep.name != name:
+                continue
+            if namespace is not None and rep.namespace != namespace:
+                continue
+            out.append(rep)
+        return out
+
+    def terminate(self, identity: str) -> None:
+        self._by_identity[identity].state = "terminated"
+
+    def __len__(self):
+        return sum(1 for r in self._by_identity.values() if r.state != "terminated")
+
+
+class FunctionRegistry:
+    """Deployable cloud functions (name -> callable) per namespace."""
+
+    def __init__(self):
+        self._fns: Dict[Tuple[str, str], Callable] = {}
+        self.addresses = AddressTable()
+        self._ids = itertools.count()
+
+    def deploy(self, namespace: str, name: str, fn: Callable) -> str:
+        self._fns[(namespace, name)] = fn
+        identity = f"{namespace}/{name}#{next(self._ids)}"
+        self.addresses.register(FunctionReplica(
+            identity=identity, name=name, namespace=namespace,
+            endpoint=f"{namespace}.faas:{8000 + len(self.addresses)}"))
+        return identity
+
+    def invoke(self, namespace: str, name: str, *args, **kw):
+        key = (namespace, name)
+        if key not in self._fns:
+            raise LookupError(f"function {name!r} not deployed in {namespace!r}")
+        return self._fns[key](*args, **kw)
+
+
+# ---------------------------------------------------------------------------
+# workflow DAG (OpenFaaS customization #1)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WorkflowNode:
+    name: str                      # function name to invoke
+    deps: Tuple[str, ...] = ()     # upstream node names
+    terminate_after: bool = False  # serverless scale-to-zero on completion
+
+
+@dataclass
+class Workflow:
+    """A DAG of cloud functions within one namespace."""
+
+    namespace: str
+    nodes: Dict[str, WorkflowNode] = field(default_factory=dict)
+
+    def add(self, name: str, deps: Sequence[str] = (),
+            terminate_after: bool = False) -> "Workflow":
+        self.nodes[name] = WorkflowNode(name, tuple(deps), terminate_after)
+        return self
+
+    def topo_order(self) -> List[str]:
+        order, seen, temp = [], set(), set()
+
+        def visit(n: str):
+            if n in seen:
+                return
+            if n in temp:
+                raise ValueError(f"workflow cycle at {n!r}")
+            temp.add(n)
+            for d in self.nodes[n].deps:
+                visit(d)
+            temp.discard(n)
+            seen.add(n)
+            order.append(n)
+
+        for n in self.nodes:
+            visit(n)
+        return order
+
+
+class WorkflowEngine:
+    """Gateway extension: recognizes workflow invocations and drives the DAG."""
+
+    def __init__(self, registry: FunctionRegistry):
+        self.registry = registry
+        self.history: List[Tuple[str, str]] = []   # (namespace, fn) invocations
+
+    def run(self, wf: Workflow, context: Optional[dict] = None) -> dict:
+        ctx = dict(context or {})
+        for name in wf.topo_order():
+            node = wf.nodes[name]
+            self.history.append((wf.namespace, name))
+            result = self.registry.invoke(wf.namespace, name, ctx)
+            if result is not None:
+                ctx[name] = result
+            if node.terminate_after:
+                for rep in self.registry.addresses.lookup(
+                        name=name, namespace=wf.namespace):
+                    self.registry.addresses.terminate(rep.identity)
+        return ctx
+
+
+# ---------------------------------------------------------------------------
+# control-plane functions
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TrainingRequest:
+    """User submission: model definition + training configuration."""
+
+    model: str
+    clouds: Tuple[CloudResources, ...]
+    sync: SyncConfig = SyncConfig()
+    n_iters: int = 100
+    global_batch: int = 64
+
+
+@dataclass(frozen=True)
+class TrainingPlan:
+    """Scheduler output: one sub-workflow deployment per cloud."""
+
+    request: TrainingRequest
+    resource_plans: Tuple[ResourcePlan, ...]
+    batch_split: Tuple[int, ...]
+    topology: Tuple[Tuple[int, int], ...]   # PS ring (sender -> receiver)
+    ps_identities: Tuple[str, ...]          # assigned <IP, Port> per PS
+
+
+class SchedulerFunction:
+    """Responds first to a training request (paper: 'the scheduler function
+    responds first, loads the scheduling strategy, generates training plans
+    for each cloud, and invocates sub workflows in each cloud')."""
+
+    def __init__(self, strategy: str = "optimal_matching"):
+        self.strategy = strategy
+
+    def __call__(self, request: TrainingRequest) -> List[ResourcePlan]:
+        if self.strategy == "optimal_matching":
+            return optimal_matching(request.clouds)
+        if self.strategy == "greedy":   # paper baseline: consume everything
+            return [ResourcePlan(c.region, c.devices,
+                                 load_power=0.0) for c in request.clouds]
+        raise ValueError(self.strategy)
+
+
+class CommunicatorFunction:
+    """The global communicator: assigns WAN identities and plans the
+    one-peer-per-round topology."""
+
+    def __init__(self, base_port: int = 50_051):
+        self.base_port = base_port
+        self._registered: Dict[str, str] = {}   # region -> ps function identity
+
+    def register_ps(self, region: str, identity: str) -> None:
+        self._registered[region] = identity
+
+    def ready(self, regions: Sequence[str]) -> bool:
+        return all(r in self._registered for r in regions)
+
+    def assign(self, regions: Sequence[str]) -> Tuple[Tuple[str, ...],
+                                                      Tuple[Tuple[int, int], ...]]:
+        if not self.ready(regions):
+            missing = [r for r in regions if r not in self._registered]
+            raise RuntimeError(f"PS not ready in: {missing}")
+        identities = tuple(
+            f"10.0.{i}.1:{self.base_port + i}" for i, _ in enumerate(regions))
+        n = len(regions)
+        topology = tuple((i, (i + 1) % n) for i in range(n))
+        return identities, topology
+
+
+def build_training_plan(request: TrainingRequest) -> TrainingPlan:
+    """Full control-plane startup phase: scheduler -> PS registration ->
+    communicator address + topology assignment."""
+    scheduler = SchedulerFunction()
+    plans = scheduler(request)
+
+    comm = CommunicatorFunction()
+    regions = [c.region for c in request.clouds]
+    for region in regions:
+        comm.register_ps(region, f"{region}/ps#0")
+    identities, topology = comm.assign(regions)
+
+    from repro.core.scheduler import plan_batch_split
+    powers = [p.load_power * c.data_size  # LP * S = raw compute power
+              for p, c in zip(plans, request.clouds)]
+    split = plan_batch_split(request.global_batch, powers)
+
+    return TrainingPlan(
+        request=request,
+        resource_plans=tuple(plans),
+        batch_split=tuple(split),
+        topology=topology,
+        ps_identities=identities,
+    )
+
+
+def reschedule(plan: TrainingPlan,
+               new_clouds: Tuple[CloudResources, ...]) -> TrainingPlan:
+    """Rescheduling path (paper: the communicator must 'notify each PS in
+    preparation or when rescheduling happens'): re-run Algorithm 1 against
+    the new resource picture, re-assign WAN identities and re-plan the ring.
+    Training state survives via ``repro.checkpoint`` (restore accepts a
+    different sharding layout)."""
+    request = TrainingRequest(
+        model=plan.request.model, clouds=new_clouds, sync=plan.request.sync,
+        n_iters=plan.request.n_iters, global_batch=plan.request.global_batch)
+    return build_training_plan(request)
+
+
+def training_workflow(region: str) -> Workflow:
+    """The per-cloud physical-training-plane workflow (paper Fig 4): data
+    access -> worker training functions -> PS update -> PS communicator,
+    with workers terminated immediately after local training finishes."""
+    wf = Workflow(namespace=region)
+    wf.add("load_data")
+    wf.add("workers", deps=["load_data"], terminate_after=True)
+    wf.add("ps_update", deps=["workers"])
+    wf.add("ps_communicator", deps=["ps_update"])
+    return wf

@@ -1,0 +1,45 @@
+"""Monetary cost accounting (paper Fig 8 d-f).
+
+The paper's cost waste model: resources in every cloud stay allocated for
+the whole job makespan, so a cloud that finishes its local work early burns
+``units × rate × waiting_time``.  Elastic scheduling trims allocations so
+waiting (and hence cost) shrinks while the makespan stays put (it is set by
+the straggler either way).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Sequence
+
+from repro.core.wan import SimResult
+
+
+@dataclass(frozen=True)
+class CostReport:
+    total_cost: float
+    waiting_cost: float            # cost attributable to straggler waiting
+    cost_by_region: Dict[str, float]
+    wait_fraction_by_region: Dict[str, float]
+
+    def reduction_vs(self, baseline: "CostReport") -> float:
+        return 1.0 - self.total_cost / baseline.total_cost
+
+    def waiting_reduction_vs(self, baseline: "CostReport") -> float:
+        if baseline.waiting_cost == 0:
+            return 0.0
+        return 1.0 - self.waiting_cost / baseline.waiting_cost
+
+
+def cost_report(result: SimResult, units: Dict[str, int],
+                rates: Dict[str, float]) -> CostReport:
+    by_region, wait_frac, waiting = {}, {}, 0.0
+    for c in result.clouds:
+        by_region[c.region] = c.cost
+        wait_frac[c.region] = c.wait_fraction
+        waiting += units[c.region] * rates[c.region] * c.wait_s / 3600.0
+    return CostReport(
+        total_cost=result.total_cost,
+        waiting_cost=waiting,
+        cost_by_region=by_region,
+        wait_fraction_by_region=wait_frac,
+    )

@@ -1,0 +1,160 @@
+"""Flash attention Pallas TPU kernel.
+
+Blockwise attention with online softmax, VMEM-tiled via explicit BlockSpecs.
+Supports causal masking, sliding windows (gemma2/gemma3 local layers), logit
+soft-capping (gemma2) and GQA (kv-head blocks indexed by query-head //
+group-size, so K/V are never materialized per query head).
+
+TPU adaptation notes: block shapes default to (128, 128) so the QK^T and PV
+matmuls hit the MXU at its native tile; the softmax statistics (m, l) and
+the output accumulator live in VMEM scratch in fp32 and persist across the
+key-block grid dimension (TPU grids iterate sequentially over the last axis,
+which is what replaces the CUDA thread-block loop of the original flash
+attention).  Fully-masked key blocks (beyond the causal frontier or outside
+the sliding window) are skipped with ``pl.when`` rather than warp-level
+early-exit.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            softcap: float, block_q: int, block_k: int, n_kb: int,
+            seq_q: int, seq_k: int):
+    qi = pl.program_id(2)   # query-block index
+    ki = pl.program_id(3)   # key-block index
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # block-level skip: is any (q, k) pair in this tile visible?
+    lo_vis = True
+    if causal:
+        lo_vis = (ki * block_k) <= (qi * block_q + block_q - 1)
+    hi_vis = True
+    if window is not None:
+        hi_vis = (ki * block_k + block_k - 1) > (qi * block_q - window)
+
+    @pl.when(jnp.logical_and(lo_vis, hi_vis))
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)       # (bq, Dh)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bk, Dh)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)       # (bk, Dh)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if softcap and softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+
+        mask = (k_pos < seq_k) & (q_pos < seq_q)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > (q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                              # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard fully-masked rows (all NEG_INF)
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kb - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_k",
+                     "interpret"))
+def flash_attention(
+    q: jnp.ndarray,                 # (B, Sq, H, Dh)
+    k: jnp.ndarray,                 # (B, Sk, K, Dh)
+    v: jnp.ndarray,                 # (B, Sk, K, Dh)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: float = 0.0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Blockwise flash attention; returns (B, Sq, H, Dh) in q.dtype."""
+    B, Sq, H, Dh = q.shape
+    Kh = k.shape[2]
+    assert H % Kh == 0, (H, Kh)
+    group = H // Kh
+    scale = 1.0 / math.sqrt(Dh)
+
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(k.shape[1], 8))
+    qp = _pad_to(q, 1, bq)
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    n_qb = qp.shape[1] // bq
+    n_kb = kp.shape[1] // bk
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_k=bk, n_kb=n_kb, seq_q=Sq, seq_k=k.shape[1])
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, Dh), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, Dh),
+                         lambda b, h, qi, ki, g=group: (b, ki, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, Dh),
+                         lambda b, h, qi, ki, g=group: (b, ki, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, Dh), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, qp.shape[1], H, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, Dh), jnp.float32),   # output accumulator
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denom l
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :Sq]

@@ -1,0 +1,55 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU backends the Pallas kernels run compiled; on CPU
+(this container) they run via ``interpret=True`` when explicitly requested,
+and otherwise fall back to the pure-jnp oracle (same numerics, fast enough
+for tests/examples).  Model code selects the path with
+``ModelConfig.attention_impl`` and the ``use_kernel`` flags.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
+from repro.kernels.topk_compress import topk_compress_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, softcap: float = 0.0,
+                    bias=None, interpret: bool = False) -> jnp.ndarray:
+    """Blockwise flash attention (Pallas on TPU / interpret / jnp oracle)."""
+    del bias  # masks are derived from causal/window inside the kernel
+    if _on_tpu() or interpret:
+        return _flash_pallas(q, k, v, causal=causal, window=window,
+                             softcap=softcap, interpret=not _on_tpu())
+    return _ref.sdpa(q, k, v, causal=causal, window=window, softcap=softcap)
+
+
+def ssd_scan(x, a, Bm, Cm, *, chunk: int = 256, init_state=None,
+             interpret: bool = False):
+    if _on_tpu() or interpret:
+        return _ssd_pallas(x, a, Bm, Cm, chunk=chunk, init_state=init_state,
+                           interpret=not _on_tpu())
+    return _ref.ssd(x, a, Bm, Cm, chunk=chunk, init_state=init_state)
+
+
+def topk_compress(x: jnp.ndarray, k: int, *, block: int = 1024,
+                  use_kernel: bool = False, interpret: bool = False
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if use_kernel and (_on_tpu() or interpret):
+        return topk_compress_pallas(x, k, block=block,
+                                    interpret=not _on_tpu())
+    return _ref.topk_block(x, k, block=block)
+
+
+def topk_decompress(vals: jnp.ndarray, idx: jnp.ndarray, n: int) -> jnp.ndarray:
+    return _ref.topk_decompress(vals, idx, n)

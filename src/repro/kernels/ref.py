@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for allclose tests).
+
+- ``sdpa`` — scaled-dot-product attention with causal/window/softcap masks
+  (delegates to ``repro.models.layers.sdpa_reference``).
+- ``ssd`` — chunked SSD scan (delegates to ``repro.models.ssm.ssd_chunked``,
+  which is itself validated against a naive O(S^2) recurrence in tests).
+- ``ssd_naive`` — the literal per-step recurrence (slowest, most obviously
+  correct; anchors the whole SSD stack).
+- ``topk_block`` / ``topk_exact`` — block-balanced and exact global top-k.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attn_bias, sdpa_reference
+from repro.models.ssm import ssd_chunked
+
+
+def sdpa(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+         softcap: float = 0.0) -> jnp.ndarray:
+    B, Sq = q.shape[0], q.shape[1]
+    Sk = k.shape[1]
+    qp = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Sk)[None], (B, Sk))
+    bias = attn_bias(qp, kp, None, causal, window)
+    return sdpa_reference(q, k, v, bias, softcap)
+
+
+def ssd(x, a, Bm, Cm, *, chunk: int = 256, init_state=None):
+    return ssd_chunked(x, a, Bm, Cm, chunk=min(chunk, x.shape[1]),
+                       init_state=init_state)
+
+
+def ssd_naive(x, a, Bm, Cm, init_state=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Literal recurrence: s_t = exp(a_t) s_{t-1} + B_t ⊗ x_t; y_t = C_t · s_t."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    s = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+         else init_state.astype(jnp.float32))
+
+    def step(s, t):
+        xt, at, bt, ct = t
+        s = s * jnp.exp(at)[..., None, None] + jnp.einsum("bhn,bhp->bhpn", bt, xt)
+        y = jnp.einsum("bhn,bhpn->bhp", ct, s)
+        return s, y
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0))
+    s, ys = jax.lax.scan(step, s, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s
+
+
+def topk_block(x: jnp.ndarray, k: int, block: int = 1024
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Block-balanced top-k: per contiguous block, keep k/nb largest |x|."""
+    n = x.shape[0]
+    block = min(block, n)
+    pad = (-n) % block
+    xp = jnp.pad(x, (0, pad))
+    nb = xp.shape[0] // block
+    k_block = max(1, k // nb)
+    xb = xp.reshape(nb, block)
+    _, loc = jax.lax.top_k(jnp.abs(xb), k_block)            # (nb, k_block)
+    idx = (loc + jnp.arange(nb)[:, None] * block).reshape(-1)
+    vals = xp[idx]
+    idx = jnp.minimum(idx, n - 1)
+    return vals[:k], idx[:k].astype(jnp.int32)
+
+
+def topk_exact(x: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    return x[idx], idx.astype(jnp.int32)
+
+
+def topk_decompress(vals: jnp.ndarray, idx: jnp.ndarray, n: int) -> jnp.ndarray:
+    return jnp.zeros((n,), vals.dtype).at[idx].set(vals)

@@ -1,0 +1,115 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+Implements the state-space-duality decomposition (arXiv:2405.21060) with
+explicit VMEM tiling: grid ``(B, H, n_chunks)`` where the chunk axis is the
+sequential (innermost) TPU grid dimension.  Per (batch, head) the recurrent
+state ``(P, N)`` lives in a fp32 VMEM scratch that persists across the chunk
+sweep — the TPU-native replacement for the GPU kernel's warp-parallel
+associative scan: on TPU the cross-chunk recurrence is cheap (one (P,N)
+FMA per chunk) while all heavy lifting is dense (L,N)x(N,L)/(L,L)x(L,P)
+matmuls that map straight onto the MXU.
+
+Per chunk (all fp32 in VMEM):
+    a_cum   = cumsum(a)                     # (L,)  log-decay prefix
+    Lmat    = tril(exp(segsum(a)))          # (L, L) intra-chunk decay
+    y_diag  = ((C B^T) * Lmat) x            # dense intra-chunk term
+    y_off   = (C state^T) * exp(a_cum)      # contribution of carried state
+    state   = state * exp(a_cum[-1]) + x^T (B * exp(a_cum[-1] - a_cum))
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, s0_ref, y_ref, sf_ref, state_ref, *,
+            n_chunks: int, L: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)   # (P, N)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)    # (L, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)       # (L,)
+    B = b_ref[0, :, 0, :].astype(jnp.float32)    # (L, N)
+    C = c_ref[0, :, 0, :].astype(jnp.float32)    # (L, N)
+
+    a_cum = jnp.cumsum(a)                        # (L,)
+    # segsum: seg[i, j] = a_cum[i] - a_cum[j], valid for j <= i
+    seg = a_cum[:, None] - a_cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    # segsum over (j, i] excludes a[j] itself (inclusive-cumsum difference);
+    # diagonal = exp(0) = 1.
+    Lmat = jnp.where(jj <= ii, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))   # (L, L)
+    y_diag = jax.lax.dot_general(scores * Lmat, x, (((1,), (0,)), ((), ())))
+
+    state = state_ref[...]                       # (P, N)
+    y_off = jax.lax.dot_general(C, state, (((1,), (1,)), ((), ()))) \
+        * jnp.exp(a_cum)[:, None]                # (L, P)
+
+    y_ref[0, :, 0, :] = (y_diag + y_off).astype(y_ref.dtype)
+
+    decay_in = jnp.exp(a_cum[-1] - a_cum)        # (L,)
+    new_state = state * jnp.exp(a_cum[-1]) + jax.lax.dot_general(
+        x, B * decay_in[:, None], (((0,), (0,)), ((), ())))        # (P, N)
+    state_ref[...] = new_state
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        sf_ref[0, 0] = new_state.astype(sf_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jnp.ndarray,       # (B, S, H, P) — inputs pre-multiplied by dt
+    a: jnp.ndarray,       # (B, S, H)    — per-step log decay (A*dt <= 0)
+    Bm: jnp.ndarray,      # (B, S, H, N)
+    Cm: jnp.ndarray,      # (B, S, H, N)
+    *,
+    chunk: int = 256,
+    init_state: Optional[jnp.ndarray] = None,   # (B, H, P, N)
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y: (B,S,H,P) in x.dtype, final_state: (B,H,P,N) fp32)."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    kernel = functools.partial(_kernel, n_chunks=nc, L=L)
+    y, sf = pl.pallas_call(
+        kernel,
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, L, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, L, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, L, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, a, Bm, Cm, init_state.astype(jnp.float32))
+    return y, sf

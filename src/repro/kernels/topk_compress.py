@@ -1,0 +1,71 @@
+"""Block-balanced top-k gradient compression Pallas TPU kernel.
+
+Beyond-paper WAN optimization: the paper cites DGC / top-K sparsification as
+the complementary family of synchronization optimizations (it only implements
+frequency reduction).  This kernel selects, *per contiguous block*, the
+largest-magnitude entries of an accumulated-gradient vector, producing a
+(values, indices) payload whose size is ``k`` — shipped over the inter-pod
+ring instead of the dense gradient.
+
+TPU adaptation: exact global top-k is a poor fit for the VPU (it serializes
+on a single sorted sequence).  Real distributed compressors (DGC included)
+use sampled-threshold or block-local selection; we use **block-local top-k**
+(each VMEM-resident block of the flat gradient contributes ``k_block``
+winners via iterative argmax on the 8x128 vector lanes), which additionally
+load-balances the scatter on the receiving pod.  ``ref.py`` provides the
+exact same block-local semantics as the oracle, plus an exact global top-k
+for compression-quality comparison tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, vals_ref, idx_ref, *, k_block: int, block: int):
+    bi = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)            # (block,)
+    mag = jnp.abs(x)
+    base = bi * block
+
+    def body(i, carry):
+        mag, = carry
+        j = jnp.argmax(mag)
+        vals_ref[i] = x[j]
+        idx_ref[i] = (base + j).astype(jnp.int32)
+        mag = mag.at[j].set(-1.0)
+        return (mag,)
+
+    jax.lax.fori_loop(0, k_block, body, (mag,))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def topk_compress_pallas(
+    x: jnp.ndarray, k: int, *, block: int = 1024, interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: flat (n,) -> (values (k,), indices (k,) int32), block-balanced."""
+    n = x.shape[0]
+    block = min(block, n)
+    pad = (-n) % block
+    xp = jnp.pad(x, (0, pad))
+    nb = xp.shape[0] // block
+    k_block = max(1, k // nb)
+
+    vals, idx = pl.pallas_call(
+        functools.partial(_kernel, k_block=k_block, block=block),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda b: (b,))],
+        out_specs=[pl.BlockSpec((k_block,), lambda b: (b,)),
+                   pl.BlockSpec((k_block,), lambda b: (b,))],
+        out_shape=[jax.ShapeDtypeStruct((nb * k_block,), x.dtype),
+                   jax.ShapeDtypeStruct((nb * k_block,), jnp.int32)],
+        interpret=interpret,
+    )(xp)
+    # clamp indices of padded region (their values are exact zeros anyway)
+    idx = jnp.minimum(idx, n - 1)
+    return vals[:k] if vals.shape[0] >= k else vals, \
+        idx[:k] if idx.shape[0] >= k else idx

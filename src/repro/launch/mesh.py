@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+Single-pod: (16, 16) = 256 v5e chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
+``"pod"`` axis is the paper's cloud-partition axis: cheap ICI inside a pod,
+scarce inter-pod links across it, synchronized by the strategies in
+``repro.core.sync``.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh
+
+# hardware constants (TPU v5e) used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (~intra-pod)
+INTER_POD_BW = 12.5e9             # bytes/s per chip (DCN-ish, conservative)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_pods: int = 2, data: int = 2, model: int = 2) -> Mesh:
+    """Small mesh for CPU multi-device tests (8 host devices)."""
+    if n_pods > 1:
+        return jax.make_mesh((n_pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_info(mesh: Mesh) -> Dict[str, int]:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return {
+        "n_devices": mesh.devices.size,
+        "n_pods": sizes.get("pod", 1),
+        "data": sizes.get("data", 1),
+        "model": sizes.get("model", 1),
+    }

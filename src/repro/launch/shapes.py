@@ -1,0 +1,98 @@
+"""Assigned input shapes and per-architecture ``input_specs``.
+
+``input_specs(arch, shape, n_pods)`` returns ``jax.ShapeDtypeStruct``
+stand-ins for every model input — weak-type-correct, shardable, zero
+allocation — which is what the dry-run lowers against.
+
+Shape semantics:
+- ``train_4k``    -> train_step   (stacked per-pod batches, labels shifted)
+- ``prefill_32k`` -> prefill      (build the KV cache from a 32k prompt)
+- ``decode_32k``  -> serve_step   (ONE new token, 32k cache)
+- ``long_500k``   -> serve_step   (ONE token, 524k cache) — sub-quadratic
+  state only (SSM / hybrid / windowed attention); skips recorded per arch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import Arch
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def long_context_supported(arch: Arch) -> Tuple[bool, str]:
+    """Which archs run long_500k (see DESIGN.md §long_500k applicability)."""
+    cfg = arch.config
+    if arch.module == "encdec":
+        return False, "enc-dec decoder context is architecturally bounded (448)"
+    if cfg.subquadratic:
+        return True, ""
+    return False, "pure global attention; no windowed variant in model card"
+
+
+def shape_supported(arch: Arch, shape_name: str) -> Tuple[bool, str]:
+    if shape_name == "long_500k":
+        return long_context_supported(arch)
+    return True, ""
+
+
+def _token_specs(cfg, batch: int, seq: int, *, labels: bool) -> Dict[str, SDS]:
+    d: Dict[str, SDS] = {"tokens": SDS((batch, seq), jnp.int32)}
+    if labels:
+        d["labels"] = SDS((batch, seq), jnp.int32)
+    return d
+
+
+def _extras(arch: Arch, batch: int, seq: int) -> Dict[str, SDS]:
+    cfg = arch.config
+    cdt = cfg.dtype("compute")
+    out: Dict[str, SDS] = {}
+    if arch.module == "encdec":
+        out["audio_emb"] = SDS((batch, cfg.encoder_ctx, cfg.d_model), cdt)
+    if cfg.vision_patches:
+        out["patch_emb"] = SDS((batch, cfg.vision_patches, cfg.d_model), cdt)
+        out["positions"] = SDS((3, batch, seq), jnp.int32)
+    return out
+
+
+def train_batch_specs(arch: Arch, shape: InputShape, n_pods: int
+                      ) -> Dict[str, SDS]:
+    """Stacked per-pod train batch: leaves (n_pods, B/pods, ...)."""
+    assert shape.global_batch % n_pods == 0
+    b = shape.global_batch // n_pods
+    flat = {**_token_specs(arch.config, b, shape.seq_len, labels=True),
+            **_extras(arch, b, shape.seq_len)}
+    return {k: SDS((n_pods,) + v.shape, v.dtype) for k, v in flat.items()}
+
+
+def prefill_specs(arch: Arch, shape: InputShape) -> Dict[str, SDS]:
+    b = shape.global_batch
+    return {**_token_specs(arch.config, b, shape.seq_len, labels=False),
+            **_extras(arch, b, shape.seq_len)}
+
+
+def decode_specs(arch: Arch, shape: InputShape) -> Dict[str, SDS]:
+    b = shape.global_batch
+    out = {"token": SDS((b, 1), jnp.int32),
+           "cache_pos": SDS((), jnp.int32)}
+    return out

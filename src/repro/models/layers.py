@@ -1,0 +1,410 @@
+"""Core neural-net layers as pure functions over explicit parameter pytrees.
+
+Conventions
+-----------
+- Arrays are ``(B, S, D)`` activations; attention uses ``(B, S, H, Dh)``.
+- Every layer has ``<name>_init(key, ...) -> params`` and ``<name>(params, ...)``.
+- Params are created in ``cfg.param_dtype``; compute runs in ``cfg.compute_dtype``
+  with fp32 softmax/normalization accumulation.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, LayerSpec
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE and qwen2-vl M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    half = x.shape[-1] // 2
+    freqs = _rope_freqs(x.shape[-1], theta)                     # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]                        # (B, S, 1, half)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float,
+    sections: Tuple[int, ...],
+) -> jnp.ndarray:
+    """Multimodal RoPE (qwen2-vl): ``positions`` is (3, B, S) — (t, h, w).
+
+    The ``head_dim/2`` frequency slots are split into ``sections`` (summing to
+    head_dim/2); slot group i rotates by the i-th position component.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = _rope_freqs(x.shape[-1], theta)                     # (half,)
+    # pick per-frequency-slot position component
+    comp = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=half
+    )                                                           # (half,)
+    pos = jnp.take(positions, comp, axis=0)                     # (half, B, S)
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)          # (B, S, half)
+    angles = pos * freqs                                        # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def position_embed(cfg: ModelConfig, x: jnp.ndarray, positions) -> jnp.ndarray:
+    if cfg.pos_embed == "rope":
+        return apply_rope(x, positions, cfg.rope_theta)
+    if cfg.pos_embed == "mrope":
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Decode-time cache for one attention layer position.
+
+    ``k``/``v``: (B, C, K, Dh) where C is the cache capacity (full seq_len for
+    global layers, window size for sliding-window layers).  ``ring`` marks a
+    circular buffer (sliding window).
+    """
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+def attention_init(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    D, H, K, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    pdt = cfg.dtype("param")
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, D, H * Dh, pdt),
+        "wk": dense_init(kk, D, K * Dh, pdt),
+        "wv": dense_init(kv, D, K * Dh, pdt),
+        "wo": dense_init(ko, H * Dh, D, pdt, scale=1.0 / math.sqrt(H * Dh)),
+    }
+
+
+def _softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap and cap > 0.0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def attn_bias(
+    q_pos: jnp.ndarray,          # (B, Sq) absolute positions of queries
+    k_pos: jnp.ndarray,          # (B, Sk) absolute positions of keys
+    k_valid: Optional[jnp.ndarray],  # (B, Sk) bool — False for empty cache slots
+    causal: bool,
+    window: Optional[int],
+) -> jnp.ndarray:
+    """Additive fp32 bias of shape (B, 1, Sq, Sk)."""
+    ok = jnp.ones((q_pos.shape[0], q_pos.shape[1], k_pos.shape[1]), bool)
+    if causal:
+        ok &= k_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        ok &= k_pos[:, None, :] > (q_pos[:, :, None] - window)
+    if k_valid is not None:
+        ok &= k_valid[:, None, :]
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[:, None, :, :]
+
+
+def sdpa_reference(q, k, v, bias, softcap: float = 0.0) -> jnp.ndarray:
+    """Pure-XLA scaled-dot-product attention.
+
+    q: (B, Sq, H, Dh); k, v: (B, Sk, K, Dh) with H a multiple of K (GQA).
+    bias: (B, 1, Sq, Sk) additive fp32.
+    """
+    B, Sq, H, Dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    qh = q.reshape(B, Sq, K, G, Dh)
+    logits = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qh.astype(jnp.float32), k.astype(jnp.float32)
+    ) / math.sqrt(Dh)
+    logits = _softcap(logits, softcap)
+    logits = logits + bias[:, :, None, :, :]  # (B,K,G,Sq,Sk) + (B,1,1,Sq,Sk)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def sdpa_chunked(q, k, v, q_pos, k_pos, *, causal: bool,
+                 window: Optional[int], softcap: float = 0.0,
+                 chunk: int = 512) -> jnp.ndarray:
+    """Flash-style blockwise attention in pure XLA (lax.scan over key chunks
+    with online softmax).  Never materializes the (Sq, Sk) score matrix —
+    peak attention memory drops from O(Sq*Sk) to O(Sq*chunk).  This is the
+    beyond-paper memory-term optimization for the XLA (non-Pallas) path;
+    numerics match ``sdpa_reference`` to fp32 rounding."""
+    B, Sq, H, Dh = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    c = min(chunk, Sk)
+    pad = (-Sk) % c
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1_000_000)
+    nc = (Sk + pad) // c
+
+    qh = q.reshape(B, Sq, K, G, Dh).astype(jnp.float32) / math.sqrt(Dh)
+    kc = jnp.moveaxis(k.reshape(B, nc, c, K, Dh), 1, 0).astype(jnp.float32)
+    vc = jnp.moveaxis(v.reshape(B, nc, c, K, Dh), 1, 0).astype(jnp.float32)
+    pc = jnp.moveaxis(k_pos.reshape(B, nc, c), 1, 0)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, pb = inp                       # (B,c,K,Dh),(B,c,K,Dh),(B,c)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qh, kb)
+        s = _softcap(s, softcap)
+        vis = pb[:, None, :] > (-1_000_000 + 1)    # padding slots off
+        if causal:
+            vis &= pb[:, None, :] <= q_pos[:, :, None]
+        if window is not None:
+            vis &= pb[:, None, :] > (q_pos[:, :, None] - window)
+        vis = jnp.broadcast_to(vis[:, None, None, :, :], s.shape)
+        s = jnp.where(vis, s, -1e30)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        m_safe = jnp.where(m_new <= -1e29, 0.0, m_new)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(vis, p, 0.0)
+        alpha = jnp.where(m <= -1e29, 0.0, jnp.exp(m - m_safe))
+        l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc = alpha * acc + jnp.einsum("bkgqs,bskd->bkgqd", p, vb)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, K, G, Sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l)                            # (B,K,G,Sq,Dh)
+    return jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, bias, *, causal: bool, window,
+          positions=None) -> jnp.ndarray:
+    """Dispatch between XLA reference, XLA chunked, and the Pallas kernel."""
+    if cfg.attention_impl in ("pallas", "pallas_interpret") and q.shape[1] > 1:
+        from repro.kernels import ops as kops
+
+        return kops.flash_attention(
+            q, k, v,
+            causal=causal,
+            window=window,
+            softcap=cfg.attn_softcap,
+            bias=bias,
+            interpret=cfg.attention_impl == "pallas_interpret",
+        )
+    if cfg.attention_impl == "xla_chunked" and q.shape[1] > 1 \
+            and positions is not None:
+        k_pos = jnp.broadcast_to(jnp.arange(k.shape[1])[None],
+                                 (k.shape[0], k.shape[1]))
+        return sdpa_chunked(q, k, v, positions, k_pos, causal=causal,
+                            window=window, softcap=cfg.attn_softcap)
+    return sdpa_reference(q, k, v, bias, softcap=cfg.attn_softcap)
+
+
+def attention_apply(
+    params: dict,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    x: jnp.ndarray,                     # (B, S, D)
+    positions: jnp.ndarray,             # (B, S) or (3, B, S) for mrope
+    *,
+    causal: bool = True,
+    cache: Optional[KVCache] = None,
+    cache_pos: Optional[jnp.ndarray] = None,   # scalar int32: tokens already cached
+    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # cross-attn
+) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """Self- or cross-attention with optional decode cache.
+
+    Modes:
+      - train/prefill: ``cache is None`` — full-sequence attention; returns
+        (out, None).
+      - decode: ``cache`` given, S == 1 — appends K/V at ``cache_pos`` (ring
+        buffer when ``spec.window`` is set and capacity == window) and attends
+        over the cache; returns (out, new_cache).
+      - cross-attention: ``kv_override`` provides precomputed (k, v).
+    """
+    B, S, D = x.shape
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    cdt = cfg.dtype("compute")
+    x = x.astype(cdt)
+
+    q = (x @ params["wq"].astype(cdt)).reshape(B, S, H, Dh)
+
+    tok_pos = positions if positions.ndim == 2 else positions[0]  # (B, S)
+
+    if kv_override is not None:
+        k, v = kv_override
+        q = position_embed(cfg, q, positions) if cfg.pos_embed != "none" else q
+        k_pos = jnp.broadcast_to(jnp.arange(k.shape[1])[None], (B, k.shape[1]))
+        bias = attn_bias(tok_pos, k_pos, None, causal=False, window=None)
+        out = _sdpa(cfg, q, k, v, bias, causal=False, window=None)
+        return (out.reshape(B, S, H * Dh) @ params["wo"].astype(cdt)), None
+
+    k = (x @ params["wk"].astype(cdt)).reshape(B, S, K, Dh)
+    v = (x @ params["wv"].astype(cdt)).reshape(B, S, K, Dh)
+    q = position_embed(cfg, q, positions)
+    k = position_embed(cfg, k, positions)
+
+    if cache is None:
+        if cfg.attention_impl == "xla_chunked" and S > 1:
+            bias = None   # masks are built chunk-wise from positions
+        else:
+            bias = attn_bias(tok_pos, tok_pos, None, causal=causal,
+                             window=spec.window)
+        out = _sdpa(cfg, q, k, v, bias, causal=causal, window=spec.window,
+                    positions=tok_pos)
+        return (out.reshape(B, S, H * Dh) @ params["wo"].astype(cdt)), None
+
+    # ------------------------------------------------------------- decode
+    assert S == 1, "decode path expects a single query token"
+    C = cache.k.shape[1]
+    ring = spec.window is not None and C == spec.window
+    slot = (cache_pos % C) if ring else jnp.minimum(cache_pos, C - 1)
+    new_k = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+
+    slots = jnp.arange(C)
+    if ring:
+        # slot j holds absolute position p = cache_pos - ((cache_pos - j) mod C)
+        k_pos_row = cache_pos - ((cache_pos - slots) % C)
+        k_valid_row = k_pos_row >= 0
+    else:
+        k_pos_row = slots
+        k_valid_row = slots <= cache_pos
+    k_pos = jnp.broadcast_to(k_pos_row[None], (B, C))
+    k_valid = jnp.broadcast_to(k_valid_row[None], (B, C))
+
+    bias = attn_bias(tok_pos, k_pos, k_valid, causal=True, window=spec.window)
+    out = sdpa_reference(q, new_k.astype(cdt), new_v.astype(cdt), bias,
+                         softcap=cfg.attn_softcap)
+    out = out.reshape(B, S, H * Dh) @ params["wo"].astype(cdt)
+    return out, KVCache(k=new_k, v=new_v)
+
+
+def init_kv_cache(
+    cfg: ModelConfig, spec: LayerSpec, batch: int, seq_len: int, dtype=None
+) -> KVCache:
+    """Allocate an empty decode cache for one attention position."""
+    dtype = dtype or cfg.dtype("compute")
+    cap = min(spec.window, seq_len) if spec.window is not None else seq_len
+    shape = (batch, cap, cfg.n_kv_heads, cfg.resolved_head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Dense (SwiGLU) MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    pdt = cfg.dtype("param")
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(kg, D, F, pdt),
+        "wu": dense_init(ku, D, F, pdt),
+        "wd": dense_init(kd, F, D, pdt, scale=1.0 / math.sqrt(F)),
+    }
+
+
+def mlp_apply(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    cdt = x.dtype
+    g = jax.nn.silu((x @ params["wg"].astype(cdt)).astype(jnp.float32)).astype(cdt)
+    u = x @ params["wu"].astype(cdt)
+    return (g * u) @ params["wd"].astype(cdt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, cfg: ModelConfig) -> dict:
+    V, D = cfg.padded_vocab, cfg.d_model
+    pdt = cfg.dtype("param")
+    p = {"tokens": dense_init(key, V, D, pdt, scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(jax.random.fold_in(key, 1), D, V, pdt)
+    return p
+
+
+def embed_apply(params: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    cdt = cfg.dtype("compute")
+    if cfg.embed_impl == "onehot":
+        # one-hot matmul: distributes cleanly over a vocab-sharded table
+        # (XLA SPMD handles x @ W_sharded with a partial-sum all-reduce),
+        # avoiding the gather path's involuntary full rematerialization of
+        # the embedding table on every device.
+        oh = jax.nn.one_hot(tokens, cfg.padded_vocab, dtype=cdt)
+        from repro.sharding.rules import shard
+        oh = shard(oh, "batch", "seq", "vocab")
+        emb = oh @ params["tokens"].astype(cdt)
+    else:
+        emb = params["tokens"].astype(cdt)[tokens]
+    if cfg.tie_embeddings:
+        emb = emb * jnp.asarray(math.sqrt(cfg.d_model), cdt)
+    return emb
+
+
+def unembed_apply(params: dict, cfg: ModelConfig, h: jnp.ndarray) -> jnp.ndarray:
+    cdt = cfg.dtype("compute")
+    if cfg.tie_embeddings:
+        logits = h @ params["tokens"].astype(cdt).T
+    else:
+        logits = h @ params["lm_head"].astype(cdt)
+    logits = _softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits

@@ -1,0 +1,206 @@
+"""Mixture-of-Experts FFN with sort-based token dispatch (TPU-native).
+
+Instead of the Mesh-TensorFlow one-hot dispatch einsum — whose ``(tokens, E,
+capacity)`` mask tensor is prohibitively large at assigned-architecture scale
+(e.g. kimi-k2: 384 experts) — tokens are *sorted by expert id* and scattered
+into a dense ``(E, capacity, D)`` buffer.  This keeps peak memory at exactly
+the buffer the expert matmuls need, and the expert dimension shards cleanly
+over the ``"model"`` mesh axis (expert parallelism: XLA inserts the
+all-to-all between the data-sharded token dim and the model-sharded expert
+dim, matching the paper-era PS all-to-all role on TPU).
+
+Top-k token-choice routing with capacity dropping; auxiliary load-balance and
+router-z losses are returned for the trainer to add to the objective.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+from repro.sharding.rules import shard
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    pdt = cfg.dtype("param")
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, D, E, pdt),
+        "wg": (jax.random.normal(kg, (E, D, F), jnp.float32) / math.sqrt(D)).astype(pdt),
+        "wu": (jax.random.normal(ku, (E, D, F), jnp.float32) / math.sqrt(D)).astype(pdt),
+        "wd": (jax.random.normal(kd, (E, F, D), jnp.float32) / math.sqrt(F)).astype(pdt),
+    }
+
+
+def expert_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    """Per-expert capacity: top_k * tokens * cf / E, rounded up to a multiple of 8."""
+    m = cfg.moe
+    cap = int(math.ceil(n_tokens * m.top_k * m.capacity_factor / m.num_experts))
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def moe_apply(params: dict, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, D) -> (y, aux) with aux = {lb_loss, z_loss, router_entropy}."""
+    if cfg.moe_dispatch == "grouped":
+        return moe_apply_grouped(params, cfg, x)
+    B, S, D = x.shape
+    m = cfg.moe
+    E, K = m.num_experts, m.top_k
+    cdt = x.dtype
+    T = B * S
+    C = expert_capacity(T, cfg)
+
+    xt = x.reshape(T, D)
+
+    # ------------------------------------------------------------- routing
+    logits = (xt @ params["router"].astype(cdt)).astype(jnp.float32)   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                              # (T, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)              # renormalize
+
+    # aux losses (Switch/GShard style)
+    me = jnp.mean(probs, axis=0)                                        # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=1), axis=0
+    )                                                                   # (E,)
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    entropy = -jnp.mean(jnp.sum(probs * jnp.log(probs + 1e-9), axis=-1))
+
+    # ----------------------------------------------------- sort-based dispatch
+    flat_e = top_e.reshape(T * K)                                       # expert id per slot
+    flat_w = top_p.reshape(T * K).astype(cdt)
+    flat_tok = jnp.repeat(jnp.arange(T), K)                             # token id per slot
+
+    order = jnp.argsort(flat_e, stable=True)                            # (T*K,)
+    sorted_e = flat_e[order]
+    sorted_tok = flat_tok[order]
+
+    counts = jnp.bincount(flat_e, length=E)                             # (E,)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(T * K) - starts[sorted_e]                     # rank within expert
+    keep = pos_in_e < C
+    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)              # overflow -> dropped
+
+    buf = jnp.zeros((E * C + 1, D), cdt).at[slot].set(xt[sorted_tok])
+    hidden = buf[: E * C].reshape(E, C, D)
+    # expert-parallel layout: the all-to-all between the token-sharded input
+    # and the expert-sharded buffer is inserted here by XLA
+    hidden = shard(hidden, "experts", "capacity", "d_model")
+
+    # --------------------------------------------------------- expert compute
+    g = jnp.einsum("ecd,edf->ecf", hidden, params["wg"].astype(cdt))
+    u = jnp.einsum("ecd,edf->ecf", hidden, params["wu"].astype(cdt))
+    act = jax.nn.silu(g.astype(jnp.float32)).astype(cdt) * u
+    out = jnp.einsum("ecf,efd->ecd", act, params["wd"].astype(cdt))     # (E, C, D)
+    out = shard(out, "experts", "capacity", "d_model")
+
+    # ----------------------------------------------------------- combine back
+    out_flat = jnp.concatenate([out.reshape(E * C, D), jnp.zeros((1, D), cdt)])
+    gathered = out_flat[slot]                                           # (T*K, D), dropped->0
+    gathered = gathered * flat_w[order][:, None]
+    y = jnp.zeros((T, D), cdt).at[sorted_tok].add(
+        jnp.where(keep[:, None], gathered, 0)
+    )
+
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss, "router_entropy": entropy}
+    return y.reshape(B, S, D), aux
+
+
+def moe_apply_grouped(params: dict, cfg: ModelConfig, x: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, dict]:
+    """Group-local dispatch: sort/scatter/combine stay *within each batch row*
+    (the data-sharded dimension), so the only cross-shard communication is
+    the expert einsum's all-to-all.
+
+    The global variant sorts all B*S*top_k slot assignments across the whole
+    (data-sharded) token set, which XLA must lower to a distributed sort plus
+    cross-shard scatters — measured at ~88 TB/device/step of all-reduce for
+    kimi-k2 train_4k.  Grouping makes those ops shard-local at a small
+    load-balancing cost (capacity is provisioned per S-token row instead of
+    per the global batch).
+    """
+    B, S, D = x.shape
+    m = cfg.moe
+    E, K = m.num_experts, m.top_k
+    cdt = x.dtype
+    N = S * K
+    C = expert_capacity(S, cfg)
+
+    # ------------------------------------------------------------- routing
+    logits = (x @ params["router"].astype(cdt)).astype(jnp.float32)   # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                            # (B,S,K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32),
+                          axis=2), axis=(0, 1))
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    entropy = -jnp.mean(jnp.sum(probs * jnp.log(probs + 1e-9), axis=-1))
+
+    # ----------------------------------------------- group-local dispatch
+    flat_e = top_e.reshape(B, N)                                      # (B, N)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)                 # local sort
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+
+    # rank within each expert run: i - first_occurrence(sorted_e[i])
+    first = jax.vmap(
+        lambda row: jnp.searchsorted(row, row, side="left"))(sorted_e)
+    pos_in_e = jnp.arange(N)[None, :] - first
+    keep = pos_in_e < C
+    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)            # (B, N)
+
+    # invert the sort: slot_tok[b, s, k] = capacity slot of token s's k-th
+    # expert choice (E*C = dropped).  All index math stays (B, N) int32.
+    rows = jnp.arange(B)[:, None]
+    slot_tok = jnp.zeros((B, N), jnp.int32).at[rows, order].set(
+        slot.astype(jnp.int32)).reshape(B, S, K)
+
+    # dispatch: K narrow scatters straight from x — the (B, S*K, D)
+    # duplicated-token tensor (240 GB fp32 for kimi-k2, which XLA replicated
+    # cross-shard in fwd AND bwd) never exists
+    def scatter_k(bufb, xb, sb):
+        return bufb.at[sb].set(xb)
+
+    x = shard(x, "batch", None, "d_model")
+    buf = shard(jnp.zeros((B, E * C + 1, D), cdt), "batch", None, "d_model")
+    for k in range(K):
+        buf = jax.vmap(scatter_k)(buf, x, slot_tok[:, :, k])
+        buf = shard(buf, "batch", None, "d_model")   # keep the scatter local
+    hidden = buf[:, : E * C].reshape(B, E, C, D)
+    hidden = shard(hidden, "batch", "experts", None, "d_model")
+
+    # --------------------------------------------------------- expert FFN
+    g = jnp.einsum("becd,edf->becf", hidden, params["wg"].astype(cdt))
+    u = jnp.einsum("becd,edf->becf", hidden, params["wu"].astype(cdt))
+    act = jax.nn.silu(g.astype(jnp.float32)).astype(cdt) * u
+    out = jnp.einsum("becf,efd->becd", act, params["wd"].astype(cdt))
+    out = shard(out, "batch", "experts", None, "d_model")
+
+    # ------------------------------------------------------------ combine
+    # K narrow gathers back to token order, weighted by router probs
+    out_flat = jnp.concatenate(
+        [out.reshape(B, E * C, D), jnp.zeros((B, 1, D), cdt)], axis=1)
+    out_flat = shard(out_flat, "batch", None, "d_model")
+    wk = top_p.astype(cdt)                                            # (B,S,K)
+    y = jnp.zeros((B, S, D), cdt)
+    for k in range(K):
+        got = jax.vmap(lambda ob, sb: jnp.take(ob, sb, axis=0))(
+            out_flat, slot_tok[:, :, k])                              # (B,S,D)
+        y = y + got * wk[:, :, k][..., None]
+        y = shard(y, "batch", None, "d_model")
+
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss, "router_entropy": entropy}
+    return y, aux
+
+
+def moe_loss(aux: dict, cfg: ModelConfig) -> jnp.ndarray:
+    m = cfg.moe
+    return m.router_aux_weight * aux["lb_loss"] + m.router_z_weight * aux["z_loss"]

@@ -1,0 +1,179 @@
+"""The paper's own evaluation models (Table III), reimplemented in JAX.
+
+Cloudless-Training evaluates LeNet (MNIST), a filters/4 ResNet18 variant
+(CIFAR-10) and DeepFM (Frappe).  These are used by the paper-reproduction
+experiments: usability/convergence parity (Fig 7), elastic scheduling
+(Figs 8-9) and the synchronization-strategy studies (Figs 10-11), both in
+the real multi-device CPU emulation tests and in the WAN simulator (where
+their measured gradient sizes — 0.4 / 0.6 / 2.4 MB — set the sync traffic).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _dense_init(key, i, o):
+    return jax.random.normal(key, (i, o), jnp.float32) / math.sqrt(i)
+
+
+def _conv_init(key, h, w, i, o):
+    return jax.random.normal(key, (h, w, i, o), jnp.float32) / math.sqrt(h * w * i)
+
+
+# ---------------------------------------------------------------------------
+# LeNet  (paper: MNIST, gradient size ~0.4 MB)
+# ---------------------------------------------------------------------------
+
+
+def lenet_init(key):
+    ks = jax.random.split(key, 5)
+    return {
+        "c1": _conv_init(ks[0], 5, 5, 1, 6),
+        "c2": _conv_init(ks[1], 5, 5, 6, 16),
+        "f1": _dense_init(ks[2], 7 * 7 * 16, 120),
+        "f2": _dense_init(ks[3], 120, 84),
+        "f3": _dense_init(ks[4], 84, 10),
+    }
+
+
+def lenet_apply(p, x):
+    """x: (B, 28, 28, 1) -> logits (B, 10)."""
+    h = jax.nn.relu(_conv(x, p["c1"]))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = jax.nn.relu(_conv(h, p["c2"]))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ p["f1"])
+    h = jax.nn.relu(h @ p["f2"])
+    return h @ p["f3"]
+
+
+# ---------------------------------------------------------------------------
+# ResNet18 / filters cut by 4  (paper: CIFAR-10, gradient size ~0.6 MB)
+# ---------------------------------------------------------------------------
+
+_RESNET_STAGES = (16, 32, 64, 128)  # 64..512 cut by 4
+
+
+def _block_init(key, cin, cout):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"c1": _conv_init(k1, 3, 3, cin, cout), "c2": _conv_init(k2, 3, 3, cout, cout)}
+    if cin != cout:
+        p["proj"] = _conv_init(k3, 1, 1, cin, cout)
+    return p
+
+
+def resnet_init(key):
+    ks = jax.random.split(key, 10)
+    p = {"stem": _conv_init(ks[0], 3, 3, 3, _RESNET_STAGES[0])}
+    cin = _RESNET_STAGES[0]
+    i = 1
+    for s, cout in enumerate(_RESNET_STAGES):
+        for b in range(2):
+            p[f"s{s}b{b}"] = _block_init(ks[i], cin, cout)
+            cin = cout
+            i += 1
+    p["head"] = _dense_init(ks[i], cin, 10)
+    return p
+
+
+def _resblock(p, x, stride):
+    h = jax.nn.relu(_conv(x, p["c1"], stride))
+    h = _conv(h, p["c2"])
+    if "proj" in p:
+        x = _conv(x, p["proj"], stride)
+    return jax.nn.relu(h + x)
+
+
+def resnet_apply(p, x):
+    """x: (B, 32, 32, 3) -> logits (B, 10)."""
+    h = jax.nn.relu(_conv(x, p["stem"]))
+    for s in range(len(_RESNET_STAGES)):
+        for b in range(2):
+            h = _resblock(p[f"s{s}b{b}"], h, 2 if (b == 0 and s > 0) else 1)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ p["head"]
+
+
+# ---------------------------------------------------------------------------
+# DeepFM  (paper: Frappe CTR, gradient size ~2.4 MB)
+# ---------------------------------------------------------------------------
+
+N_FIELDS = 10
+N_FEATURES = 5400   # Frappe-scale feature space
+EMB_DIM = 16
+
+
+def deepfm_init(key):
+    ks = jax.random.split(key, 5)
+    return {
+        "emb": jax.random.normal(ks[0], (N_FEATURES, EMB_DIM), jnp.float32) * 0.01,
+        "lin": jax.random.normal(ks[1], (N_FEATURES,), jnp.float32) * 0.01,
+        "f1": _dense_init(ks[2], N_FIELDS * EMB_DIM, 400),
+        "f2": _dense_init(ks[3], 400, 400),
+        "f3": _dense_init(ks[4], 400, 1),
+    }
+
+
+def deepfm_apply(p, feats):
+    """feats: (B, N_FIELDS) int32 feature ids -> logit (B,)."""
+    emb = p["emb"][feats]                         # (B, F, E)
+    linear = jnp.sum(p["lin"][feats], axis=-1)    # (B,)
+    # FM second-order: 0.5 * ((sum e)^2 - sum e^2)
+    s = jnp.sum(emb, axis=1)
+    fm = 0.5 * jnp.sum(jnp.square(s) - jnp.sum(jnp.square(emb), axis=1), axis=-1)
+    h = emb.reshape(emb.shape[0], -1)
+    h = jax.nn.relu(h @ p["f1"])
+    h = jax.nn.relu(h @ p["f2"])
+    deep = (h @ p["f3"])[:, 0]
+    return linear + fm + deep
+
+
+# ---------------------------------------------------------------------------
+# uniform train-task interface used by sync/scheduler experiments
+# ---------------------------------------------------------------------------
+
+
+def ce_loss(apply_fn):
+    def loss(params, batch):
+        logits = apply_fn(params, batch["x"])
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold)
+    return loss
+
+
+def bce_loss(apply_fn):
+    def loss(params, batch):
+        logit = apply_fn(params, batch["x"])
+        y = batch["y"].astype(jnp.float32)
+        return jnp.mean(jnp.maximum(logit, 0) - logit * y +
+                        jnp.log1p(jnp.exp(-jnp.abs(logit))))
+    return loss
+
+
+PAPER_MODELS = {
+    "lenet": dict(init=lenet_init, apply=lenet_apply, loss=ce_loss(lenet_apply),
+                  input_shape=(28, 28, 1), n_classes=10, grad_mb=0.4),
+    "resnet": dict(init=resnet_init, apply=resnet_apply, loss=ce_loss(resnet_apply),
+                   input_shape=(32, 32, 3), n_classes=10, grad_mb=0.6),
+    "deepfm": dict(init=deepfm_init, apply=deepfm_apply, loss=bce_loss(deepfm_apply),
+                   input_shape=(N_FIELDS,), n_classes=2, grad_mb=2.4),
+}
+
+
+def param_mb(params) -> float:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params)) / 1e6

@@ -1,0 +1,244 @@
+"""Mamba2 (SSD — state-space duality) layer in pure JAX.
+
+Implements the chunked SSD algorithm of arXiv:2405.21060: the sequence is
+split into chunks; within a chunk the recurrence is computed as a dense
+(quadratic-in-chunk) masked attention-like form that feeds the MXU, while
+across chunks a tiny recurrent state ``(B, heads, P, N)`` is carried by a
+``lax.scan``.  This is exactly the TPU-friendly formulation (dense tiles +
+small carried state) — the Pallas kernel in ``repro.kernels.ssd_scan``
+implements the same decomposition with explicit VMEM tiling; this module is
+also its oracle ground truth via ``repro.kernels.ref``.
+
+Decode keeps O(1) state: ``(B, H, P, N)`` SSM state + a ``(B, W-1, C)`` causal
+conv ring — this is what makes ``long_500k`` tractable for mamba2/jamba.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray       # (B, H, P, N) recurrent SSM state
+    conv: jnp.ndarray        # (B, W-1, C) last conv inputs
+
+
+def _conv_channels(cfg: ModelConfig) -> int:
+    c = cfg.ssm
+    return cfg.d_inner + 2 * c.n_groups * c.state_dim
+
+
+def ssm_init(key, cfg: ModelConfig) -> dict:
+    c = cfg.ssm
+    D = cfg.d_model
+    d_in = cfg.d_inner
+    H = cfg.ssm_heads
+    conv_ch = _conv_channels(cfg)
+    pdt = cfg.dtype("param")
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # in_proj emits [z, x, B, C, dt]
+    zxbcdt = 2 * d_in + 2 * c.n_groups * c.state_dim + H
+    dt_init = jnp.log(jnp.expm1(jnp.exp(
+        jax.random.uniform(k3, (H,), jnp.float32,
+                           math.log(0.001), math.log(0.1)))))
+    return {
+        "in_proj": dense_init(k1, D, zxbcdt, pdt),
+        "conv_w": (jax.random.normal(k2, (c.conv_width, conv_ch), jnp.float32)
+                   / math.sqrt(c.conv_width)).astype(pdt),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "dt_bias": dt_init,
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "gate_norm": rmsnorm_init(d_in, pdt),
+        "out_proj": dense_init(k4, d_in, D, pdt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} a[..., k], -inf above diag.
+
+    a: (..., L) -> (..., L, L) lower-triangular cumulative log-decay matrix.
+    """
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # sum over (j, i]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,       # (B, S, H, P)  pre-multiplied by dt
+    a: jnp.ndarray,       # (B, S, H)     log-decay per step (A * dt, <= 0)
+    Bm: jnp.ndarray,      # (B, S, H, N)  input matrix (already broadcast to heads)
+    Cm: jnp.ndarray,      # (B, S, H, N)  output matrix
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,   # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y: (B,S,H,P), final_state: (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, (S, L)
+    nc = S // L
+
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, L, H, P).astype(f32)
+    ac = a.reshape(Bsz, nc, L, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, L, H, N).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, L, H, N).astype(f32)
+
+    a_hl = jnp.moveaxis(ac, -1, -2)                     # (B, nc, H, L)
+    a_cum = jnp.cumsum(a_hl, axis=-1)                   # (B, nc, H, L)
+
+    # 1) intra-chunk dense block
+    Lmat = jnp.exp(_segsum(a_hl))                       # (B, nc, H, L, L)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)   # (B, nc, H, L, L)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores * Lmat, xc)
+
+    # 2) per-chunk end states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)     # (B, nc, H, L)
+    states = jnp.einsum("bclhn,bchl,bclhp->bchpn", Bc, decay_states, xc)
+
+    # 3) inter-chunk recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(a_cum[..., -1])               # (B, nc, H)
+    s0 = (jnp.zeros((Bsz, H, P, N), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(carry, inp):
+        st, dec = inp                                   # (B,H,P,N), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                               # emit the *incoming* state
+
+    states_t = jnp.moveaxis(states, 1, 0)               # (nc, B, H, P, N)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)           # (nc, B, H)
+    final, prev_states = jax.lax.scan(step, s0, (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (B, nc, H, P, N)
+
+    # 4) state -> output contribution
+    state_decay = jnp.exp(a_cum)                        # (B, nc, H, L)
+    y_off = jnp.einsum("bclhn,bchpn,bchl->bclhp", Cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), final
+
+
+# ---------------------------------------------------------------------------
+# full layer
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(seq: jnp.ndarray, w: jnp.ndarray,
+                 history: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv. seq: (B, S, C); w: (W, C); history: (B, W-1, C)."""
+    W = w.shape[0]
+    if history is None:
+        history = jnp.zeros((seq.shape[0], W - 1, seq.shape[2]), seq.dtype)
+    padded = jnp.concatenate([history, seq], axis=1)     # (B, S+W-1, C)
+    out = sum(padded[:, i : i + seq.shape[1]] * w[i][None, None, :] for i in range(W))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(seq.dtype)
+
+
+def ssm_apply(
+    params: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,                       # (B, S, D)
+    cache: Optional[SSMCache] = None,
+    *,
+    use_kernel: bool = False,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, Optional[SSMCache]]:
+    """Train/prefill when S > 1 (returns updated cache if one was passed);
+    single-token decode when S == 1 and cache is given."""
+    c = cfg.ssm
+    B_, S, D = x.shape
+    d_in, H, P, N, G = cfg.d_inner, cfg.ssm_heads, c.head_dim, c.state_dim, c.n_groups
+    cdt = cfg.dtype("compute")
+    x = x.astype(cdt)
+
+    zxbcdt = x @ params["in_proj"].astype(cdt)           # (B, S, ...)
+    z, xs, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + G * N, 2 * d_in + 2 * G * N], axis=-1
+    )
+
+    conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)     # (B, S, conv_ch)
+    w = params["conv_w"].astype(cdt)
+    Wd = w.shape[0]
+
+    if cache is not None and S == 1:
+        conv_hist = cache.conv.astype(cdt)
+        conv_out = _causal_conv(conv_in, w, conv_hist)
+        new_conv = jnp.concatenate([conv_hist, conv_in], axis=1)[:, 1:]
+    else:
+        conv_out = _causal_conv(conv_in, w)
+        if cache is not None:
+            tail = conv_in[:, -(Wd - 1):]
+            pad = Wd - 1 - tail.shape[1]
+            if pad > 0:
+                tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+            new_conv = tail.astype(cache.conv.dtype)
+        else:
+            new_conv = None
+
+    xs, Bc, Cc = jnp.split(conv_out, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(B_, S, H, P)
+    Bc = Bc.reshape(B_, S, G, N)
+    Cc = Cc.reshape(B_, S, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bc, rep, axis=2)                     # (B, S, H, N)
+    Ch = jnp.repeat(Cc, rep, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B, S, H)
+    A = -jnp.exp(params["A_log"])                        # (H,) negative
+    a = A[None, None, :] * dt                            # log decay, (B, S, H)
+    x_dt = xs.astype(jnp.float32) * dt[..., None]        # (B, S, H, P)
+
+    init_state = cache.state if cache is not None else None
+
+    if S == 1 and cache is not None:
+        # recurrent decode: state = state*exp(a) + B ⊗ x_dt ; y = C · state
+        st = cache.state.astype(jnp.float32)             # (B, H, P, N)
+        st = st * jnp.exp(a[:, 0, :, None, None]) + jnp.einsum(
+            "bhn,bhp->bhpn", Bh[:, 0], x_dt[:, 0]
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", Ch[:, 0], st)[:, None]   # (B, 1, H, P)
+        final_state = st
+    elif use_kernel:
+        from repro.kernels import ops as kops
+        y, final_state = kops.ssd_scan(
+            x_dt, a, Bh, Ch, chunk=c.chunk_size,
+            init_state=init_state, interpret=interpret)
+    else:
+        y, final_state = ssd_chunked(x_dt, a, Bh, Ch, chunk=min(c.chunk_size, S),
+                                     init_state=init_state)
+
+    y = y + xs.astype(jnp.float32) * params["D_skip"][None, None, :, None]
+    y = y.reshape(B_, S, d_in).astype(cdt)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(cdt)
+    y = rmsnorm(params["gate_norm"], y, cfg.norm_eps)
+    out = y @ params["out_proj"].astype(cdt)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = SSMCache(state=final_state.astype(cache.state.dtype),
+                             conv=new_conv.astype(cache.conv.dtype))
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=None) -> SSMCache:
+    c = cfg.ssm
+    sdt = jnp.float32
+    cdt = dtype or cfg.dtype("compute")
+    return SSMCache(
+        state=jnp.zeros((batch, cfg.ssm_heads, c.head_dim, c.state_dim), sdt),
+        conv=jnp.zeros((batch, c.conv_width - 1, _conv_channels(cfg)), cdt),
+    )

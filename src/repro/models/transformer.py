@@ -1,0 +1,451 @@
+"""Composable decoder-only transformer executed as a scan over layer groups.
+
+``init_params`` builds a parameter pytree whose repeated-block leaves are
+stacked over ``cfg.n_groups`` (leading ``layers`` axis); ``forward`` runs
+``jax.lax.scan`` over that axis so the lowered HLO contains the group body
+exactly once regardless of depth.  Sliding-window / global attention, MoE,
+and SSM positions are all expressed through ``cfg.pattern``.
+
+Decode (``decode_step``) carries a cache pytree with the same leading group
+axis; each pattern position owns its cache kind (ring-buffer KV for windowed
+attention, full KV for global attention, O(1) recurrent state for SSM).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.config import ATTN, SSM, LayerSpec, ModelConfig
+from repro.sharding.rules import LA, shard
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_position(key, cfg: ModelConfig, spec: LayerSpec) -> Params:
+    D = cfg.d_model
+    pdt = cfg.dtype("param")
+    k1, k2 = jax.random.split(key)
+    p: Params = {"ln1": L.rmsnorm_init(D, pdt)}
+    if spec.kind == ATTN:
+        p["attn"] = L.attention_init(k1, cfg)
+    else:
+        p["ssm"] = S.ssm_init(k1, cfg)
+    if spec.mlp:
+        p["ln2"] = L.rmsnorm_init(D, pdt)
+        p["moe" if spec.moe else "mlp"] = (
+            M.moe_init(k2, cfg) if spec.moe else L.mlp_init(k2, cfg)
+        )
+    return p
+
+
+def _init_group(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, cfg.period)
+    return {f"pos{i}": _init_position(keys[i], cfg, spec)
+            for i, spec in enumerate(cfg.pattern)}
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ke, kb = jax.random.split(key)
+    group_keys = jax.random.split(kb, cfg.n_groups)
+    blocks = jax.vmap(lambda k: _init_group(k, cfg))(group_keys)
+    return {
+        "embed": L.embed_init(ke, cfg),
+        "blocks": blocks,
+        "final_norm": L.rmsnorm_init(cfg.d_model, cfg.dtype("param")),
+    }
+
+
+def abstract_params(cfg: ModelConfig):
+    """Shape/dtype pytree without allocating (for dry-runs)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# logical sharding axes for every parameter
+# ---------------------------------------------------------------------------
+
+
+def _position_axes(cfg: ModelConfig, spec: LayerSpec) -> Params:
+    g = lambda *names: LA(("layers",) + names)  # noqa: E731  (stacked leading dim)
+    p: Params = {"ln1": {"scale": g(None)}}
+    if spec.kind == ATTN:
+        p["attn"] = {
+            "wq": g("fsdp", "heads"),
+            "wk": g("fsdp", "kv_heads"),
+            "wv": g("fsdp", "kv_heads"),
+            "wo": g("heads", "fsdp"),
+        }
+    else:
+        p["ssm"] = {
+            "in_proj": g("fsdp", None),
+            "conv_w": g(None, "conv_ch"),
+            "A_log": g(None),
+            "dt_bias": g(None),
+            "D_skip": g(None),
+            "gate_norm": {"scale": g(None)},
+            "out_proj": g(None, "fsdp"),
+        }
+    if spec.mlp:
+        p["ln2"] = {"scale": g(None)}
+        if spec.moe:
+            if cfg.moe_param_shard == "ff":
+                # shard the expert FFN hidden dim over the data axis:
+                # weights never gather; the F-contraction psums activations
+                p["moe"] = {
+                    "router": g("fsdp", "experts"),
+                    "wg": g("experts", None, "expert_ff"),
+                    "wu": g("experts", None, "expert_ff"),
+                    "wd": g("experts", "expert_ff", None),
+                }
+            else:
+                p["moe"] = {
+                    "router": g("fsdp", "experts"),
+                    "wg": g("experts", "fsdp", None),
+                    "wu": g("experts", "fsdp", None),
+                    "wd": g("experts", None, "fsdp"),
+                }
+        else:
+            p["mlp"] = {
+                "wg": g("fsdp", "d_ff"),
+                "wu": g("fsdp", "d_ff"),
+                "wd": g("d_ff", "fsdp"),
+            }
+    return p
+
+
+def param_logical_axes(cfg: ModelConfig) -> Params:
+    embed: Params = {"tokens": LA(("vocab", "fsdp"))}
+    if not cfg.tie_embeddings:
+        embed["lm_head"] = LA(("fsdp", "vocab"))
+    return {
+        "embed": embed,
+        "blocks": {f"pos{i}": _position_axes(cfg, spec)
+                   for i, spec in enumerate(cfg.pattern)},
+        "final_norm": {"scale": LA((None,))},
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _positions_for(cfg: ModelConfig, tokens: jnp.ndarray,
+                   positions: Optional[jnp.ndarray]) -> jnp.ndarray:
+    if positions is not None:
+        return positions
+    B, Sq = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    if cfg.pos_embed == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, B, Sq))
+    return pos
+
+
+def _apply_position(p: Params, cfg: ModelConfig, spec: LayerSpec, h, positions,
+                    cache=None, cache_pos=None, use_ssm_kernel=False):
+    """One pattern position: (attn|ssm) + optional (mlp|moe), pre-norm residual."""
+    aux = {"lb_loss": jnp.zeros((), jnp.float32),
+           "z_loss": jnp.zeros((), jnp.float32),
+           "router_entropy": jnp.zeros((), jnp.float32)}
+    hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+    if spec.kind == ATTN:
+        out, new_cache = L.attention_apply(
+            p["attn"], cfg, spec, hn, positions,
+            cache=cache, cache_pos=cache_pos)
+    else:
+        out, new_cache = S.ssm_apply(
+            p["ssm"], cfg, hn, cache=cache,
+            use_kernel=use_ssm_kernel,
+            interpret=cfg.attention_impl == "pallas_interpret")
+    h = h + out
+    if spec.mlp:
+        hn = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+        if spec.moe:
+            out, aux = M.moe_apply(p["moe"], cfg, hn)
+        else:
+            out = L.mlp_apply(p["mlp"], hn)
+        h = h + out
+    h = shard(h, "batch", "seq", "d_model")
+    return h, new_cache, aux
+
+
+def _group_body(cfg: ModelConfig, use_ssm_kernel: bool):
+    def body(h, group_params, positions, caches=None, cache_pos=None):
+        new_caches = {} if caches is not None else None
+        aux_sum = None
+        for i, spec in enumerate(cfg.pattern):
+            key = f"pos{i}"
+            c = caches.get(key) if caches is not None else None
+            h, nc, aux = _apply_position(
+                group_params[key], cfg, spec, h, positions,
+                cache=c, cache_pos=cache_pos, use_ssm_kernel=use_ssm_kernel)
+            if new_caches is not None:
+                new_caches[key] = nc
+            aux_sum = aux if aux_sum is None else jax.tree.map(
+                jnp.add, aux_sum, aux)
+        return h, new_caches, aux_sum
+
+    return body
+
+
+def scan_groups(fn, carry, xs, *, length: int, use_scan: bool):
+    """``lax.scan`` or an exact python unroll (for cost-analysis dry-runs —
+    XLA-CPU cost_analysis counts while-loop bodies once)."""
+    if use_scan:
+        return jax.lax.scan(fn, carry, xs)
+    ys = []
+    for g in range(length):
+        xg = jax.tree.map(lambda x: x[g], xs)
+        carry, y = fn(carry, xg)
+        ys.append(y)
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,                        # (B, S) int32
+    *,
+    positions: Optional[jnp.ndarray] = None,    # (B,S) or (3,B,S)
+    patch_emb: Optional[jnp.ndarray] = None,    # VLM stub: (B, Np, D)
+    use_ssm_kernel: bool = False,
+    return_hidden: bool = False,
+) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence forward. Returns (logits fp32, aux)."""
+    positions = _positions_for(cfg, tokens, positions)
+    h = L.embed_apply(params["embed"], cfg, tokens)
+    if patch_emb is not None and cfg.vision_patches:
+        # the first `vision_patches` positions are image placeholders whose
+        # embeddings come from the (stubbed) vision encoder
+        h = jax.lax.dynamic_update_slice(
+            h, patch_emb.astype(h.dtype), (0, 0, 0))
+    h = shard(h, "batch", "seq", "d_model")
+
+    body = _group_body(cfg, use_ssm_kernel)
+
+    def scan_fn(carry, group_params):
+        h = carry
+        h, _, aux = body(h, group_params, positions)
+        return h, aux
+
+    h, aux_stack = scan_groups(_maybe_remat(cfg, scan_fn), h,
+                               params["blocks"], length=cfg.n_groups,
+                               use_scan=cfg.scan_layers)
+    aux = jax.tree.map(lambda a: jnp.sum(a, axis=0), aux_stack)
+
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if return_hidden:
+        return h, aux
+    logits = L.unembed_apply(params["embed"], cfg, h)
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token-mean CE. logits (B,S,V) fp32, labels (B,S) int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: dict,
+            use_ssm_kernel: bool = False) -> Tuple[jnp.ndarray, dict]:
+    """Next-token LM loss + MoE auxiliaries. batch: {tokens, labels[, mask,
+    positions, patch_emb]}."""
+    logits, aux = forward(
+        params, cfg, batch["tokens"],
+        positions=batch.get("positions"),
+        patch_emb=batch.get("patch_emb"),
+        use_ssm_kernel=use_ssm_kernel)
+    ce = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+    total = ce + (M.moe_loss(aux, cfg) if cfg.has_moe else 0.0)
+    metrics = {"loss": total, "ce": ce, **aux}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Params:
+    """Cache pytree: per pattern position, stacked over groups (leading axis)."""
+
+    def one_group(_):
+        caches = {}
+        for i, spec in enumerate(cfg.pattern):
+            if spec.kind == ATTN:
+                caches[f"pos{i}"] = L.init_kv_cache(cfg, spec, batch, seq_len)
+            else:
+                caches[f"pos{i}"] = S.init_ssm_cache(cfg, batch)
+        return caches
+
+    return jax.vmap(one_group)(jnp.arange(cfg.n_groups))
+
+
+def cache_logical_axes(cfg: ModelConfig, seq_len: int) -> Params:
+    """Logical axes for the cache pytree.  Full (global-attention) caches get
+    a shardable ``cache_seq`` axis — the decode rule set maps it onto the
+    ``"model"`` axis (flash-decoding-style sequence sharding), which is what
+    keeps 32k/500k caches within HBM even when ``kv_heads`` doesn't divide
+    the model axis.  Ring-buffer (windowed) caches stay unsharded on seq."""
+    axes = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.kind == ATTN:
+            full = spec.window is None
+            axes[f"pos{i}"] = L.KVCache(
+                k=LA(("layers", "batch", "cache_seq" if full else None,
+                      "kv_heads", None)),
+                v=LA(("layers", "batch", "cache_seq" if full else None,
+                      "kv_heads", None)),
+            )
+        else:
+            axes[f"pos{i}"] = S.SSMCache(
+                state=LA(("layers", "batch", "ssm_heads", None, None)),
+                conv=LA(("layers", "batch", None, "conv_ch")),
+            )
+    return axes
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    token: jnp.ndarray,         # (B, 1) int32 — the newest token
+    cache: Params,
+    cache_pos: jnp.ndarray,     # scalar int32 — #tokens already in the cache
+) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode. Returns (logits (B,1,V) fp32, new_cache)."""
+    B = token.shape[0]
+    pos = jnp.broadcast_to(cache_pos.astype(jnp.int32), (B, 1))
+    if cfg.pos_embed == "mrope":
+        positions = jnp.broadcast_to(pos[None], (3, B, 1))
+    else:
+        positions = pos
+
+    h = L.embed_apply(params["embed"], cfg, token)
+    body = _group_body(cfg, use_ssm_kernel=False)
+
+    def scan_fn(carry, xs):
+        group_params, caches = xs
+        h = carry
+        h, new_caches, _ = body(h, group_params, positions,
+                                caches=caches, cache_pos=cache_pos)
+        return h, new_caches
+
+    h, new_cache = scan_groups(scan_fn, h, (params["blocks"], cache),
+                               length=cfg.n_groups, use_scan=cfg.scan_layers)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], cfg, h)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill (forward + cache construction)
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,        # (B, S)
+    cache_len: int,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    patch_emb: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Params]:
+    """Run the full prompt, building the decode cache.
+
+    For simplicity and HLO compactness the prompt K/V are recomputed per layer
+    inside the same scan that runs the forward pass; attention positions write
+    their prompt K/V into the allocated cache, SSM positions write their final
+    state.  Returns (last-token logits (B, V) fp32, cache).
+    """
+    B, Sq = tokens.shape
+    positions = _positions_for(cfg, tokens, positions)
+    cache = init_cache(cfg, B, cache_len)
+
+    h = L.embed_apply(params["embed"], cfg, tokens)
+    if patch_emb is not None and cfg.vision_patches:
+        h = jax.lax.dynamic_update_slice(h, patch_emb.astype(h.dtype), (0, 0, 0))
+    h = shard(h, "batch", "seq", "d_model")
+
+    cdt = cfg.dtype("compute")
+
+    def scan_fn(h, xs):
+        group_params, caches = xs
+        new_caches = {}
+        for i, spec in enumerate(cfg.pattern):
+            p = group_params[f"pos{i}"]
+            hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+            if spec.kind == ATTN:
+                out, _ = L.attention_apply(p["attn"], cfg, spec, hn, positions)
+                # recompute prompt K/V into the cache
+                K, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+                k = (hn @ p["attn"]["wk"].astype(cdt)).reshape(B, Sq, K, Dh)
+                v = (hn @ p["attn"]["wv"].astype(cdt)).reshape(B, Sq, K, Dh)
+                k = L.position_embed(cfg, k, positions)
+                c = caches[f"pos{i}"]
+                C = c.k.shape[1]
+                if C >= Sq:
+                    nk = jax.lax.dynamic_update_slice(
+                        c.k, k.astype(c.k.dtype), (0, 0, 0, 0))
+                    nv = jax.lax.dynamic_update_slice(
+                        c.v, v.astype(c.v.dtype), (0, 0, 0, 0))
+                else:  # ring buffer smaller than the prompt: keep the tail,
+                    # rolled so that slot j holds position p ≡ j (mod C)
+                    tail_k, tail_v = k[:, -C:], v[:, -C:]
+                    shift = Sq % C
+                    nk = jnp.roll(tail_k, shift, axis=1).astype(c.k.dtype)
+                    nv = jnp.roll(tail_v, shift, axis=1).astype(c.v.dtype)
+                new_caches[f"pos{i}"] = L.KVCache(k=nk, v=nv)
+            else:
+                out, nc = S.ssm_apply(p["ssm"], cfg, hn,
+                                      cache=caches[f"pos{i}"])
+                new_caches[f"pos{i}"] = nc
+            h = h + out
+            if spec.mlp:
+                hn = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+                out = (M.moe_apply(p["moe"], cfg, hn)[0] if spec.moe
+                       else L.mlp_apply(p["mlp"], hn))
+                h = h + out
+            h = shard(h, "batch", "seq", "d_model")
+        return h, new_caches
+
+    h, cache = scan_groups(_maybe_remat(cfg, scan_fn), h,
+                           (params["blocks"], cache),
+                           length=cfg.n_groups, use_scan=cfg.scan_layers)
+    h = L.rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    logits = L.unembed_apply(params["embed"], cfg, h)[:, 0]
+    return logits, cache

@@ -1,0 +1,153 @@
+"""Minimal pytree optimizers (no optax dependency).
+
+The paper trains with SGD (its PS update rule and both sync strategies are
+defined over SGD), so ``sgd``/``momentum`` are the paper-faithful choices and
+the memory-planning default for the trillion-parameter configs; ``adamw`` is
+provided for the modern-LLM training path.  Optimizer states follow the
+parameter sharding (the launcher shards them with the same logical axes), and
+their dtype is configurable (bf16 momentum halves optimizer HBM — used by the
+kimi-k2 plan).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree, jnp.ndarray], Tuple[Pytree, Pytree]]
+    # update(grads, opt_state, params, lr) -> (new_params, new_opt_state)
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        new = jax.tree.map(
+            lambda p, g: _cast_like(
+                p.astype(jnp.float32) - lr * g.astype(jnp.float32), p),
+            params, grads)
+        return new, state
+
+    return Optimizer("sgd", init, update)
+
+
+def momentum(beta: float = 0.9, state_dtype: str = "float32",
+             nesterov: bool = False) -> Optimizer:
+    sdt = jnp.dtype(state_dtype)
+
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), params)
+
+    def update(grads, state, params, lr):
+        new_m = jax.tree.map(
+            lambda m, g: _cast_like(beta * m.astype(jnp.float32)
+                                    + g.astype(jnp.float32), m),
+            state, grads)
+        if nesterov:
+            step = jax.tree.map(
+                lambda g, m: g.astype(jnp.float32) + beta * m.astype(jnp.float32),
+                grads, new_m)
+        else:
+            step = jax.tree.map(lambda m: m.astype(jnp.float32), new_m)
+        new_p = jax.tree.map(
+            lambda p, s: _cast_like(p.astype(jnp.float32) - lr * s, p),
+            params, step)
+        return new_p, new_m
+
+    return Optimizer(f"momentum{beta}", init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Pytree
+    nu: Pytree
+    count: jnp.ndarray
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype: str = "float32") -> Optimizer:
+    sdt = jnp.dtype(state_dtype)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, sdt)  # noqa: E731
+        return AdamState(mu=jax.tree.map(z, params),
+                         nu=jax.tree.map(z, params),
+                         count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        count = state.count + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        new_mu = jax.tree.map(
+            lambda m, g: _cast_like(b1 * m.astype(jnp.float32)
+                                    + (1 - b1) * g.astype(jnp.float32), m),
+            state.mu, grads)
+        new_nu = jax.tree.map(
+            lambda v, g: _cast_like(b2 * v.astype(jnp.float32)
+                                    + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                                    v),
+            state.nu, grads)
+
+        def upd(p, m, v):
+            mh = m.astype(jnp.float32) / c1
+            vh = v.astype(jnp.float32) / c2
+            step = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay and p.ndim >= 2:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return _cast_like(p.astype(jnp.float32) - lr * step, p)
+
+        new_p = jax.tree.map(upd, params, new_mu, new_nu)
+        return new_p, AdamState(new_mu, new_nu, count)
+
+    return Optimizer(f"adamw{b1},{b2}", init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adamw": adamw}[name](**kw)
+
+
+# ---------------------------------------------------------------------------
+# learning-rate schedules
+# ---------------------------------------------------------------------------
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine_schedule(peak_lr: float, warmup: int, total: int,
+                           floor: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (peak_lr - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree: Pytree, max_norm: float) -> Pytree:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        tree)

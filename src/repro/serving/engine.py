@@ -1,0 +1,138 @@
+"""Batched serving engine: prefill + KV-cache decode.
+
+Serves a model with batched requests (the inference counterpart used by the
+``prefill_32k`` / ``decode_32k`` / ``long_500k`` input shapes).  The decode
+cache kinds come from the model config: ring-buffer KV for sliding-window
+positions, full KV for global positions, O(1) recurrent state for SSM
+positions — so ``long_500k`` is served with bounded memory by SSM/hybrid/
+local-attention architectures.
+
+Serving is per-pod independent (the paper's technique synchronizes
+*training* state; serving replicas don't synchronize), so the engine has no
+pod dimension — on a multi-pod mesh each pod serves its own replica.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import Arch
+from repro.models.registry import get_model_fns
+
+Pytree = Any
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, n_new)
+    steps: int
+    prefill_len: int
+
+
+class ServingEngine:
+    def __init__(self, arch: Arch, params: Pytree, *,
+                 cache_len: int = 1024, use_smoke: bool = False):
+        self.arch = arch
+        self.cfg = arch.smoke if use_smoke else arch.config
+        self.fns = get_model_fns(arch.module)
+        self.params = params
+        self.cache_len = cache_len
+        self._decode = jax.jit(
+            lambda p, t, c, pos: self.fns.decode_step(p, self.cfg, t, c, pos))
+
+    # ------------------------------------------------------------- prefill
+    def prefill(self, tokens: jnp.ndarray, **extras) -> Tuple[jnp.ndarray, Pytree]:
+        """tokens: (B, S) prompt. Returns (last-token logits, cache)."""
+        if self.arch.module == "encdec":
+            enc = extras["audio_emb"]
+            from repro.models import encdec
+            cache = encdec.init_cache(self.cfg, tokens.shape[0], self.cache_len,
+                                      enc=jnp.asarray(enc, self.cfg.dtype("compute")),
+                                      params=self.params)
+            logits = None
+            pos = jnp.int32(0)
+            for i in range(tokens.shape[1]):   # teacher-forced prompt feed
+                logits, cache = self._decode(self.params, tokens[:, i:i + 1],
+                                             cache, pos)
+                pos = pos + 1
+            return logits[:, 0], cache
+        logits, cache = jax.jit(
+            lambda p, t: self.fns.prefill(p, self.cfg, t, self.cache_len,
+                                          patch_emb=extras.get("patch_emb"))
+        )(self.params, tokens)
+        return logits, cache
+
+    # -------------------------------------------------------------- decode
+    def generate(self, prompt: jnp.ndarray, n_new: int, *,
+                 temperature: float = 0.0, key=None, **extras
+                 ) -> GenerationResult:
+        B, S = prompt.shape
+        logits, cache = self.prefill(prompt, **extras)
+        pos = jnp.int32(S)
+        out = []
+        tok = self._sample(logits, temperature, key, 0)
+        for i in range(n_new):
+            out.append(np.asarray(tok))
+            logits, cache = self._decode(self.params, tok, cache, pos)
+            pos = pos + 1
+            tok = self._sample(logits[:, 0], temperature, key, i + 1)
+        return GenerationResult(tokens=np.concatenate(out, axis=1),
+                                steps=n_new, prefill_len=S)
+
+    def _sample(self, logits: jnp.ndarray, temperature: float, key, i: int
+                ) -> jnp.ndarray:
+        logits = logits[:, : self.cfg.vocab_size]   # strip padded vocab
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        k = jax.random.fold_in(key if key is not None else jax.random.key(0), i)
+        return jax.random.categorical(
+            k, logits / temperature, axis=-1)[:, None].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# request batching (simple continuous-batching front)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,)
+    max_new: int
+    done: bool = False
+    output: Optional[np.ndarray] = None
+
+
+class BatchScheduler:
+    """Greedy static batcher: groups pending requests into fixed-size decode
+    batches (right-padded prompts), runs them to completion."""
+
+    def __init__(self, engine: ServingEngine, batch_size: int):
+        self.engine = engine
+        self.batch_size = batch_size
+        self.queue: List[Request] = []
+
+    def submit(self, prompt: np.ndarray, max_new: int) -> int:
+        rid = len(self.queue)
+        self.queue.append(Request(rid, prompt, max_new))
+        return rid
+
+    def run(self) -> Dict[int, np.ndarray]:
+        results: Dict[int, np.ndarray] = {}
+        pending = [r for r in self.queue if not r.done]
+        for i in range(0, len(pending), self.batch_size):
+            group = pending[i:i + self.batch_size]
+            S = max(len(r.prompt) for r in group)
+            n_new = max(r.max_new for r in group)
+            prompts = np.stack([
+                np.pad(r.prompt, (S - len(r.prompt), 0)) for r in group])
+            gen = self.engine.generate(jnp.asarray(prompts, jnp.int32), n_new)
+            for j, r in enumerate(group):
+                r.done = True
+                r.output = gen.tokens[j, : r.max_new]
+                results[r.rid] = r.output
+        return results

@@ -1,0 +1,174 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Model code annotates activations/params with *logical* axis names via
+``shard(x, "batch", "seq", "d_model")``.  The launcher installs a rule table
+mapping logical names to physical mesh axes; ``shard`` builds a
+``PartitionSpec``, dropping any mesh axis that does not divide the concrete
+dimension (e.g. 6 attention heads cannot shard over a 16-way ``"model"``
+axis — whisper-tiny — so the dim is replicated instead of erroring).  When no
+rules/mesh are installed (plain CPU unit tests) ``shard`` is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+
+class LA(tuple):
+    """Marker leaf: logical axis names of one parameter (kept opaque to
+    jax.tree by being checked via ``is_leaf`` everywhere it is mapped)."""
+
+    def __new__(cls, names):
+        return super().__new__(cls, tuple(names))
+
+    @property
+    def names(self):
+        return tuple(self)
+
+
+def is_la(x) -> bool:
+    return isinstance(x, LA)
+
+# default logical -> physical mapping (single- and multi-pod)
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "cache_seq": "data",        # sequence-sharded KV cache (long_500k decode)
+    "d_model": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "d_ff": "model",
+    "experts": "model",
+    "expert_ff": "data",
+    "capacity": None,
+    "vocab": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "conv_ch": "model",
+    "fsdp": "data",             # parameter sharding axis (ZeRO-3 style)
+    "pattern": None,
+    "layers": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.rules: Optional[Dict[str, Axis]] = None
+        self.mesh: Optional[Mesh] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Dict[str, Axis], mesh: Optional[Mesh] = None):
+    """Install logical sharding rules (and optionally the mesh) for a scope."""
+    old = (_CTX.rules, _CTX.mesh)
+    _CTX.rules = dict(rules)
+    _CTX.mesh = mesh if mesh is not None else _CTX.mesh
+    try:
+        yield
+    finally:
+        _CTX.rules, _CTX.mesh = old
+
+
+def current_mesh() -> Optional[Mesh]:
+    if _CTX.mesh is not None:
+        return _CTX.mesh
+    # fall back to the ambient mesh installed by `with mesh:`
+    try:
+        from jax._src import mesh as _mesh_lib
+        env_mesh = _mesh_lib.thread_resources.env.physical_mesh
+        if env_mesh is not None and not env_mesh.empty:
+            return env_mesh
+    except Exception:
+        pass
+    return None
+
+
+def _mesh_axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    names = (axis,) if isinstance(axis, str) else axis
+    size = 1
+    for n in names:
+        size *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(n, 1)
+    return size
+
+
+def logical_to_spec(
+    shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    rules: Optional[Dict[str, Axis]] = None,
+    mesh: Optional[Mesh] = None,
+) -> P:
+    """Build a PartitionSpec for ``shape`` from logical axis names.
+
+    Mesh axes that don't exist in the mesh or don't divide the dimension are
+    dropped (replicated).  A multi-axis rule like ``("pod", "data")`` keeps
+    the longest divisible prefix.
+    """
+    rules = rules if rules is not None else (_CTX.rules or DEFAULT_RULES)
+    mesh = mesh if mesh is not None else current_mesh()
+    parts = []
+    used: set = set()   # a mesh axis may appear at most once per spec
+    for dim, name in zip(shape, logical):
+        axis = rules.get(name) if name else None
+        if axis is None or mesh is None:
+            parts.append(None)
+            continue
+        names = (axis,) if isinstance(axis, str) else tuple(axis)
+        mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        kept = []
+        size = 1
+        for n in names:
+            s = mesh_sizes.get(n, 1)
+            if n not in used and s > 1 and dim % (size * s) == 0:
+                kept.append(n)
+                used.add(n)
+                size *= s
+        parts.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*parts)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint described by logical axis names (no-op
+    without rules+mesh)."""
+    mesh = current_mesh()
+    if mesh is None or (_CTX.rules is None):
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"shard: {len(logical)} names for rank-{x.ndim} array")
+    spec = logical_to_spec(x.shape, logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def sharding_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+                 mesh: Optional[Mesh] = None) -> NamedSharding:
+    mesh = mesh if mesh is not None else current_mesh()
+    return NamedSharding(mesh, logical_to_spec(shape, logical, mesh=mesh))
+
+
+def spec_tree_for_params(logical_tree, abstract_params,
+                         rules: Optional[Dict[str, Axis]] = None,
+                         mesh: Optional[Mesh] = None):
+    """Map a pytree of ``LA`` leaves (+ matching abstract params) to
+    PartitionSpecs, dropping non-divisible axes per leaf shape."""
+    return jax.tree.map(
+        lambda names, leaf: logical_to_spec(leaf.shape, names.names, rules, mesh),
+        logical_tree, abstract_params, is_leaf=is_la)
+
+
+def sharding_tree_for_params(logical_tree, abstract_params, mesh: Mesh,
+                             rules: Optional[Dict[str, Axis]] = None):
+    specs = spec_tree_for_params(logical_tree, abstract_params, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

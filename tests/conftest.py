@@ -1,0 +1,17 @@
+"""Shared fixtures.  NOTE: no XLA device-count flags here — unit/smoke tests
+run on the single real CPU device; multi-device tests spawn subprocesses
+(see test_dryrun_small.py) so they never leak 512 fake devices into this
+process."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _x64_off():
+    jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,149 @@
+"""Required per-architecture smoke tests: a REDUCED variant of each assigned
+family runs one forward + one train step + one decode step on CPU, asserting
+output shapes and the absence of NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.core.sync import SyncConfig
+from repro.models.registry import get_model_fns
+from repro.training.trainer import Trainer, TrainerConfig
+
+B, S = 2, 32
+
+
+def _batch(arch, cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    tokens = jax.random.randint(k1, (B, S), 0, cfg.vocab_size)
+    labels = jnp.roll(tokens, -1, axis=1)
+    batch = {"tokens": tokens, "labels": labels}
+    if arch.module == "encdec":
+        batch["audio_emb"] = jax.random.normal(
+            k2, (B, cfg.encoder_ctx, cfg.d_model)) * 0.1
+    if cfg.vision_patches:
+        batch["patch_emb"] = jax.random.normal(
+            k3, (B, cfg.vision_patches, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_smoke_forward_and_shapes(name):
+    arch = get_arch(name)
+    cfg = arch.smoke
+    assert cfg.n_layers <= 2 * cfg.period and cfg.d_model <= 512
+    if cfg.has_moe:
+        assert cfg.moe.num_experts <= 4
+    fns = get_model_fns(arch.module)
+    params = fns.init_params(jax.random.key(0), cfg)
+
+    # analytic parameter count must match the actual tree exactly
+    if arch.module == "transformer":
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        assert actual == cfg.param_count()
+
+    batch = _batch(arch, cfg, jax.random.key(1))
+    if arch.module == "encdec":
+        from repro.models import encdec
+        logits, _ = encdec.forward(params, cfg, batch["tokens"],
+                                   batch["audio_emb"])
+    else:
+        from repro.models import transformer
+        logits, _ = transformer.forward(params, cfg, batch["tokens"],
+                                        patch_emb=batch.get("patch_emb"))
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_smoke_train_step(name):
+    arch = get_arch(name)
+    cfg = arch.smoke
+    fns = get_model_fns(arch.module)
+    tcfg = TrainerConfig(n_pods=1, optimizer="sgd", lr=0.01,
+                         sync=SyncConfig("asgd", 1))
+    trainer = Trainer(lambda p, b: fns.loss_fn(p, cfg, b),
+                      lambda k: fns.init_params(k, cfg), tcfg)
+    state = trainer.init_state(jax.random.key(0))
+    batch = jax.tree.map(lambda x: x[None], _batch(arch, cfg, jax.random.key(1)))
+    state, metrics = trainer.train_step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state.step) == 1
+    # params actually changed and stayed finite
+    leaves = jax.tree.leaves(state.params)
+    assert all(bool(jnp.isfinite(x).all()) for x in leaves)
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_smoke_decode_step(name):
+    arch = get_arch(name)
+    cfg = arch.smoke
+    fns = get_model_fns(arch.module)
+    params = fns.init_params(jax.random.key(0), cfg)
+    cache = fns.init_cache(cfg, B, 24)
+    tok = jax.random.randint(jax.random.key(2), (B, 1), 0, cfg.vocab_size)
+    logits, new_cache = fns.decode_step(params, cfg, tok, cache, jnp.int32(0))
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+def test_full_configs_match_assignment():
+    """The full-scale configs carry the exact assigned dimensions."""
+    expect = {
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "mamba2-1.3b": (48, 2048, None, None, 0, 50280),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+        "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+    }
+    for name, (L, D, H, K, F, V) in expect.items():
+        c = get_arch(name).config
+        assert c.n_layers == L and c.d_model == D and c.d_ff == F \
+            and c.vocab_size == V, name
+        if H is not None:
+            assert c.n_heads == H and c.n_kv_heads == K, name
+
+    moe = get_arch("qwen3-moe-30b-a3b").config.moe
+    assert moe.num_experts == 128 and moe.top_k == 8
+    moe = get_arch("kimi-k2-1t-a32b").config.moe
+    assert moe.num_experts == 384 and moe.top_k == 8
+    moe = get_arch("jamba-1.5-large-398b").config.moe
+    assert moe.num_experts == 16 and moe.top_k == 2
+    assert get_arch("mamba2-1.3b").config.ssm.state_dim == 128
+
+
+def test_param_scale_sanity():
+    """Analytic parameter counts are in the advertised ballpark."""
+    assert 25e9 < get_arch("qwen3-moe-30b-a3b").config.param_count() < 36e9
+    assert 0.9e12 < get_arch("kimi-k2-1t-a32b").config.param_count() < 1.2e12
+    assert 320e9 < get_arch("jamba-1.5-large-398b").config.param_count() < 480e9
+    assert 1.0e9 < get_arch("mamba2-1.3b").config.param_count() < 1.8e9
+    assert 9e9 < get_arch("gemma3-12b").config.param_count() < 15e9
+    assert 22e9 < get_arch("gemma2-27b").config.param_count() < 33e9
+    a3b = get_arch("qwen3-moe-30b-a3b").config.active_param_count()
+    assert 2e9 < a3b < 5e9
+    k2a = get_arch("kimi-k2-1t-a32b").config.active_param_count()
+    assert 25e9 < k2a < 45e9
+
+
+def test_jamba_pattern_ratio():
+    cfg = get_arch("jamba-1.5-large-398b").config
+    kinds = [s.kind for s in cfg.pattern]
+    assert kinds.count("attn") == 1 and kinds.count("ssm") == 7
+    assert sum(s.moe for s in cfg.pattern) == 4  # every other position
+
+
+def test_gemma_patterns():
+    g3 = get_arch("gemma3-12b").config
+    assert [s.window for s in g3.pattern] == [1024] * 5 + [None]
+    g2 = get_arch("gemma2-27b").config
+    assert [s.window for s in g2.pattern] == [4096, None]
+    assert g2.attn_softcap == 50.0 and g2.final_softcap == 30.0

@@ -1,0 +1,142 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+from repro.kernels.topk_compress import topk_compress_pallas
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+# ------------------------------------------------------------ flash attention
+
+
+@pytest.mark.parametrize("B,S,H,K,Dh", [
+    (2, 128, 4, 2, 64),
+    (1, 256, 4, 4, 64),
+    (2, 96, 6, 2, 32),     # non-multiple of block
+    (1, 64, 8, 1, 128),    # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_ref(B, S, H, K, Dh, dtype):
+    q, k, v = (_rand((B, S, H, Dh), dtype), _rand((B, S, K, Dh), dtype),
+               _rand((B, S, K, Dh), dtype))
+    out = flash_attention(q, k, v, causal=True, interpret=True,
+                          block_q=64, block_k=64)
+    expect = ref.sdpa(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_flash_window_softcap(window, softcap):
+    q, k, v = (_rand((1, 128, 4, 64), jnp.float32),
+               _rand((1, 128, 2, 64), jnp.float32),
+               _rand((1, 128, 2, 64), jnp.float32))
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          softcap=softcap, interpret=True,
+                          block_q=32, block_k=32)
+    expect = ref.sdpa(q, k, v, causal=True, window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_noncausal():
+    q, k, v = (_rand((2, 64, 2, 32), jnp.float32),
+               _rand((2, 64, 2, 32), jnp.float32),
+               _rand((2, 64, 2, 32), jnp.float32))
+    out = flash_attention(q, k, v, causal=False, interpret=True,
+                          block_q=32, block_k=32)
+    expect = ref.sdpa(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------------ SSD scan
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 128, 4, 16, 32, 32),
+    (1, 256, 2, 64, 128, 64),
+    (2, 64, 8, 8, 16, 64),
+])
+def test_ssd_kernel_matches_chunked_ref(B, S, H, P, N, chunk):
+    x = _rand((B, S, H, P), jnp.float32)
+    a = -jnp.abs(_rand((B, S, H), jnp.float32)) * 0.1
+    Bm, Cm = _rand((B, S, H, N), jnp.float32), _rand((B, S, H, N), jnp.float32)
+    y1, f1 = ssd_scan(x, a, Bm, Cm, chunk=chunk, interpret=True)
+    y2, f2 = ref.ssd(x, a, Bm, Cm, chunk=chunk)
+    scale = float(jnp.max(jnp.abs(y2)))
+    np.testing.assert_allclose(np.asarray(y1) / scale, np.asarray(y2) / scale,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=1e-3)
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    """Anchor: the chunked SSD algorithm == the literal per-step recurrence."""
+    B, S, H, P, N = 1, 64, 2, 8, 16
+    x = _rand((B, S, H, P), jnp.float32)
+    a = -jnp.abs(_rand((B, S, H), jnp.float32)) * 0.2
+    Bm, Cm = _rand((B, S, H, N), jnp.float32), _rand((B, S, H, N), jnp.float32)
+    s0 = _rand((B, H, P, N), jnp.float32)
+    y1, f1 = ref.ssd(x, a, Bm, Cm, chunk=16, init_state=s0)
+    y2, f2 = ref.ssd_naive(x, a, Bm, Cm, init_state=s0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_with_initial_state_continues_stream():
+    """Splitting a sequence in two with state carry == one full pass."""
+    B, S, H, P, N = 1, 128, 2, 8, 16
+    x = _rand((B, S, H, P), jnp.float32)
+    a = -jnp.abs(_rand((B, S, H), jnp.float32)) * 0.1
+    Bm, Cm = _rand((B, S, H, N), jnp.float32), _rand((B, S, H, N), jnp.float32)
+    y_full, f_full = ref.ssd(x, a, Bm, Cm, chunk=32)
+    y1, f1 = ref.ssd(x[:, :64], a[:, :64], Bm[:, :64], Cm[:, :64], chunk=32)
+    y2, f2 = ref.ssd(x[:, 64:], a[:, 64:], Bm[:, 64:], Cm[:, 64:], chunk=32,
+                     init_state=f1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(f2), np.asarray(f_full), atol=1e-4)
+
+
+# --------------------------------------------------------------------- top-k
+
+
+@pytest.mark.parametrize("n,k,block", [(4096, 64, 512), (1000, 16, 256),
+                                       (8192, 128, 1024), (256, 8, 256)])
+def test_topk_kernel_matches_ref(n, k, block):
+    x = _rand((n,), jnp.float32)
+    v1, i1 = topk_compress_pallas(x, k, block=block, interpret=True)
+    v2, i2 = ref.topk_block(x, k, block=block)
+    d1 = ref.topk_decompress(v1, i1, n)
+    d2 = ref.topk_decompress(v2, i2, n)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+def test_topk_block_energy_close_to_exact():
+    x = _rand((8192,), jnp.float32)
+    k = 256
+    db = ref.topk_decompress(*ref.topk_block(x, k, block=1024), 8192)
+    de = ref.topk_decompress(*ref.topk_exact(x, k), 8192)
+    assert float(jnp.sum(db ** 2)) >= 0.9 * float(jnp.sum(de ** 2))
+
+
+def test_topk_roundtrip_preserves_selected():
+    x = _rand((512,), jnp.float32)
+    v, i = ref.topk_block(x, 32, block=128)
+    d = ref.topk_decompress(v, i, 512)
+    np.testing.assert_allclose(np.asarray(d[np.asarray(i)]), np.asarray(v))

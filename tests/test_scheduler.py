@@ -1,0 +1,137 @@
+"""Elastic scheduler tests (paper §III.B, Table I/II/IV) + hypothesis
+property tests on Algorithm 1's invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import (CATALOG, CloudResources, load_power,
+                                  optimal_matching, plan_batch_split,
+                                  predict_times, waiting_fraction)
+
+# ------------------------------------------------------------- Table I
+
+
+def test_table1_normalizations():
+    """TN / IN / ratio columns of paper Table I."""
+    assert CATALOG["icelake"].tn == pytest.approx(1.0)
+    assert CATALOG["cascade"].tn == pytest.approx(0.938, abs=0.01)
+    assert CATALOG["skylake"].tn == pytest.approx(1.167, abs=0.01)
+    assert CATALOG["t4"].tn == pytest.approx(57.854, abs=0.1)
+    assert CATALOG["v100"].tn == pytest.approx(139.010, abs=0.1)
+    assert CATALOG["cascade"].in_ == pytest.approx(0.666, abs=0.01)
+    assert CATALOG["skylake"].in_ == pytest.approx(0.973, abs=0.01)
+    assert CATALOG["t4"].in_ == pytest.approx(59.629, abs=0.3)
+    assert CATALOG["v100"].in_ == pytest.approx(154.042, abs=0.5)
+    assert CATALOG["v100"].in_tn_ratio == pytest.approx(1.108, abs=0.01)
+
+
+def test_load_power_formula():
+    # LP = (sum N*P) / S_data, measured (IN) powers preferred
+    lp = load_power((("cascade", 6), ("t4", 1)), data_size=2.0)
+    assert lp == pytest.approx((6 * 0.666 + 59.629) / 2.0, rel=1e-2)
+    assert load_power((("cascade", 1),), 0.0) == math.inf
+
+
+# --------------------------------------------------------- Algorithm 1
+
+
+def _paper_case3():
+    sh = CloudResources("sh", (("cascade", 6),), data_size=2.0)
+    cq = CloudResources("cq", (("sky", 6),), data_size=1.0)
+    return [sh, cq]
+
+
+def test_optimal_matching_trims_fast_cloud():
+    """Paper Table IV case 3 (data 2:1, Cascade vs Sky): the straggler keeps
+    its full allocation; the fast region is trimmed."""
+    plans = optimal_matching(_paper_case3())
+    by = {p.region: p for p in plans}
+    assert by["sh"].allocation == (("cascade", 6),)    # straggler untouched
+    assert by["cq"].units < 6                          # fast region trimmed
+    assert by["cq"].load_power >= by["sh"].load_power - 1e-9
+
+
+def test_waiting_reduced_by_plan():
+    clouds = _paper_case3()
+    base = waiting_fraction(predict_times(clouds))
+    plan = waiting_fraction(predict_times(clouds, optimal_matching(clouds)))
+    assert max(plan.values()) < max(base.values())
+
+
+def test_even_setup_keeps_everything():
+    a = CloudResources("a", (("cascade", 4),), data_size=1.0)
+    b = CloudResources("b", (("cascade", 4),), data_size=1.0)
+    plans = optimal_matching([a, b])
+    assert all(p.allocation == (("cascade", 4),) for p in plans)
+
+
+# --------------------------------------------------- hypothesis properties
+
+_dev = st.sampled_from(["icelake", "cascade", "skylake", "t4", "v100"])
+
+
+@st.composite
+def _clouds(draw):
+    n = draw(st.integers(2, 4))
+    out = []
+    for i in range(n):
+        dev = draw(_dev)
+        units = draw(st.integers(1, 6))
+        data = draw(st.floats(0.5, 4.0))
+        out.append(CloudResources(f"c{i}", ((dev, units),), data_size=data))
+    return out
+
+
+@settings(max_examples=40, deadline=None)
+@given(_clouds())
+def test_plan_never_exceeds_available(clouds):
+    plans = optimal_matching(clouds)
+    for c, p in zip(clouds, plans):
+        avail = dict(c.devices)
+        for dev, n in p.allocation:
+            assert 1 <= n <= avail[dev]
+
+
+@settings(max_examples=40, deadline=None)
+@given(_clouds())
+def test_plan_lp_at_least_straggler(clouds):
+    """No planned cloud becomes a worse straggler than the reference."""
+    full = [load_power(c.devices, c.data_size) for c in clouds]
+    ref = min(full)
+    plans = optimal_matching(clouds)
+    for p in plans:
+        assert p.load_power >= ref - 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(_clouds())
+def test_plan_weakly_reduces_units(clouds):
+    plans = optimal_matching(clouds)
+    for c, p in zip(clouds, plans):
+        assert p.units <= sum(n for _, n in c.devices)
+
+
+@settings(max_examples=40, deadline=None)
+@given(_clouds())
+def test_straggler_keeps_full_allocation(clouds):
+    full = [load_power(c.devices, c.data_size) for c in clouds]
+    i = full.index(min(full))
+    plans = optimal_matching(clouds)
+    assert plans[i].allocation == clouds[i].devices
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 512), st.lists(st.floats(0.1, 10.0), min_size=2,
+                                     max_size=8))
+def test_batch_split_sums_and_positive(batch, powers):
+    if batch < len(powers):
+        batch = len(powers)
+    split = plan_batch_split(batch, powers)
+    assert sum(split) == batch
+    assert all(s >= 1 for s in split)
+
+
+def test_batch_split_proportional():
+    split = plan_batch_split(90, [2.0, 1.0])
+    assert split == [60, 30]

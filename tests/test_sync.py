@@ -1,0 +1,211 @@
+"""Synchronization-strategy semantics + convergence (paper §III.C, Figs 7/10).
+
+Runs the real SPMD code path (stacked pod dim) as a faithful multi-cloud
+emulation on CPU.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sync as S
+from repro.core.sync import SyncConfig, apply_sync, init_sync_state, \
+    is_sync_step, on_step_gradients
+from repro.data.pipeline import GeoDataset, synthetic_classification
+from repro.models.reference import PAPER_MODELS
+from repro.training.trainer import Trainer, TrainerConfig, accuracy_eval, \
+    stack_pod_batches
+
+
+def _tree(n_pods, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(n_pods, 4, 3)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(n_pods, 3)), jnp.float32)}
+
+
+# ---------------------------------------------------------------- unit-level
+
+
+def test_asgd_baseline_is_cross_pod_mean():
+    g = _tree(4)
+    st = init_sync_state(SyncConfig("asgd"), g)
+    out, _ = on_step_gradients(SyncConfig("asgd"), g, st)
+    for k in g:
+        np.testing.assert_allclose(
+            np.asarray(out[k]),
+            np.broadcast_to(np.mean(np.asarray(g[k]), 0, keepdims=True),
+                            g[k].shape), rtol=1e-6)
+
+
+def test_sma_is_global_average():
+    p = _tree(3)
+    cfg = SyncConfig("sma", 4)
+    st = init_sync_state(cfg, p)
+    out, _ = apply_sync(cfg, p, st)
+    for k in p:
+        np.testing.assert_allclose(
+            np.asarray(out[k]),
+            np.broadcast_to(np.mean(np.asarray(p[k]), 0, keepdims=True),
+                            p[k].shape), rtol=1e-6)
+
+
+def test_ama_is_pairwise_with_one_ring_peer():
+    p = _tree(4)
+    cfg = SyncConfig("ama", 4)
+    out, _ = apply_sync(cfg, p, init_sync_state(cfg, p))
+    for k in p:
+        expect = 0.5 * (np.asarray(p[k]) + np.roll(np.asarray(p[k]), 1, 0))
+        np.testing.assert_allclose(np.asarray(out[k]), expect, rtol=1e-6)
+
+
+def test_asgd_ga_accumulates_and_ships_to_one_peer():
+    cfg = SyncConfig("asgd_ga", interval=2)
+    p = _tree(2, seed=1)
+    st = init_sync_state(cfg, p)
+    g1, g2 = _tree(2, seed=2), _tree(2, seed=3)
+    _, st = on_step_gradients(cfg, g1, st)
+    _, st = on_step_gradients(cfg, g2, st)
+    assert int(st.steps_since_sync) == 2
+    out, st2 = apply_sync(cfg, p, st, lr=0.1)
+    for k in p:
+        acc = (np.asarray(g1[k]) + np.asarray(g2[k])) / 2.0
+        peer = np.roll(acc, 1, axis=0)       # receive from previous pod
+        np.testing.assert_allclose(np.asarray(out[k]),
+                                   np.asarray(p[k]) - 0.1 * peer, rtol=1e-5)
+    # buffer reset
+    assert all(float(jnp.abs(x).max()) == 0.0
+               for x in jax.tree.leaves(st2.ga_buffer))
+    assert int(st2.steps_since_sync) == 0
+
+
+def test_single_pod_sync_is_identity():
+    for strat in S.STRATEGIES:
+        cfg = SyncConfig(strat, 4)
+        p = _tree(1)
+        out, _ = apply_sync(cfg, p, init_sync_state(cfg, p))
+        for k in p:
+            np.testing.assert_array_equal(np.asarray(out[k]),
+                                          np.asarray(p[k]))
+
+
+def test_is_sync_step_schedule():
+    cfg = SyncConfig("ama", 4)
+    assert [is_sync_step(cfg, s) for s in range(8)] == \
+        [False, False, False, True] * 2
+    assert not any(is_sync_step(SyncConfig("asgd"), s) for s in range(8))
+
+
+def test_traffic_model():
+    assert S.traffic_per_step_mb(SyncConfig("asgd"), 48.0) == 48.0
+    assert S.traffic_per_step_mb(SyncConfig("ama", 8), 48.0) == 6.0
+    c = SyncConfig("asgd_ga", 8, compress_topk=0.01)
+    assert S.traffic_per_step_mb(c, 48.0) == pytest.approx(48 * 0.02 / 8)
+
+
+def test_topk_compressed_shipping_approximates_dense():
+    cfg_d = SyncConfig("asgd_ga", 1)
+    cfg_c = SyncConfig("asgd_ga", 1, compress_topk=0.5)
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(2, 64, 8)), jnp.float32)}
+    p = jax.tree.map(jnp.zeros_like, g)
+    std = init_sync_state(cfg_d, p)
+    _, std = on_step_gradients(cfg_d, g, std)
+    dense, _ = apply_sync(cfg_d, p, std, lr=1.0)
+    stc = init_sync_state(cfg_c, p)
+    _, stc = on_step_gradients(cfg_c, g, stc)
+    comp, _ = apply_sync(cfg_c, p, stc, lr=1.0)
+    # compressed update preserves the largest-magnitude half of the energy
+    e_d = float(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(dense)))
+    e_c = float(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(comp)))
+    assert 0.5 < e_c / e_d <= 1.0
+
+
+# ----------------------------------------------------------- convergence
+
+
+@pytest.mark.parametrize("strat,interval", [
+    ("asgd", 1), ("asgd_ga", 4), ("ama", 4), ("sma", 4)])
+def test_convergence_parity_lenet(strat, interval):
+    """Paper Fig 7/10(d-f): all strategies reach baseline-level accuracy with
+    SGD (the paper's optimizer) on 2 uneven clouds."""
+    m = PAPER_MODELS["lenet"]
+    data = synthetic_classification(1500, m["input_shape"], m["n_classes"],
+                                    seed=0)
+    test = synthetic_classification(400, m["input_shape"], m["n_classes"],
+                                    seed=1)
+    geo = GeoDataset.partition(data, ["sh", "cq"], [2, 1])
+    loaders = [geo.loader("sh", 32, seed=0), geo.loader("cq", 32, seed=1)]
+
+    tr = Trainer(lambda p, b: (m["loss"](p, b), {}), m["init"],
+                 TrainerConfig(n_pods=2, optimizer="sgd", lr=0.05,
+                               sync=SyncConfig(strat, interval)))
+    st = tr.init_state(jax.random.key(0))
+    st, hist = tr.fit(st, lambda s: stack_pod_batches([next(l) for l in loaders]),
+                      120, eval_fn=accuracy_eval(m["apply"], test),
+                      eval_every=120)
+    acc = hist["eval"][-1][1]
+    assert acc > 0.9, (strat, acc)
+    assert hist["loss"][-1] < hist["loss"][0] * 0.5
+
+
+def test_pods_stay_identical_under_asgd():
+    """Baseline per-step all-reduce keeps pod replicas bit-identical."""
+    m = PAPER_MODELS["lenet"]
+    data = synthetic_classification(256, m["input_shape"], m["n_classes"])
+    geo = GeoDataset.partition(data, ["a", "b"], [1, 1])
+    loaders = [geo.loader("a", 16, seed=0), geo.loader("b", 16, seed=1)]
+    tr = Trainer(lambda p, b: (m["loss"](p, b), {}), m["init"],
+                 TrainerConfig(n_pods=2, optimizer="sgd", lr=0.05,
+                               sync=SyncConfig("asgd", 1)))
+    st = tr.init_state(jax.random.key(0))
+    for step in range(5):
+        st, _ = tr.train_step(st, stack_pod_batches([next(l) for l in loaders]))
+    for leaf in jax.tree.leaves(st.params):
+        np.testing.assert_array_equal(np.asarray(leaf[0]), np.asarray(leaf[1]))
+
+
+def test_pods_diverge_then_sma_reconverges():
+    m = PAPER_MODELS["lenet"]
+    data = synthetic_classification(256, m["input_shape"], m["n_classes"])
+    geo = GeoDataset.partition(data, ["a", "b"], [1, 1])
+    loaders = [geo.loader("a", 16, seed=0), geo.loader("b", 16, seed=1)]
+    tr = Trainer(lambda p, b: (m["loss"](p, b), {}), m["init"],
+                 TrainerConfig(n_pods=2, optimizer="sgd", lr=0.05,
+                               sync=SyncConfig("sma", 4)))
+    st = tr.init_state(jax.random.key(0))
+    for step in range(3):
+        st, _ = tr.train_step(st, stack_pod_batches([next(l) for l in loaders]))
+    # diverged between syncs
+    w = jax.tree.leaves(st.params)[0]
+    assert float(jnp.abs(w[0] - w[1]).max()) > 0
+    st = tr._sync_step(st)
+    for leaf in jax.tree.leaves(st.params):
+        np.testing.assert_array_equal(np.asarray(leaf[0]), np.asarray(leaf[1]))
+
+
+def test_asp_significance_gating_and_convergence():
+    """Gaia-style ASP baseline: converges to parity while shipping only the
+    significant fraction of parameter deltas."""
+    m = PAPER_MODELS["lenet"]
+    data = synthetic_classification(1200, m["input_shape"], m["n_classes"],
+                                    seed=0)
+    test = synthetic_classification(400, m["input_shape"], m["n_classes"],
+                                    seed=1)
+    geo = GeoDataset.partition(data, ["a", "b"], [2, 1])
+    loaders = [geo.loader("a", 32, seed=0), geo.loader("b", 32, seed=1)]
+    tr = Trainer(lambda p, b: (m["loss"](p, b), {}), m["init"],
+                 TrainerConfig(n_pods=2, optimizer="sgd", lr=0.05,
+                               sync=SyncConfig("asp", 4, asp_threshold=0.02)))
+    st = tr.init_state(jax.random.key(0))
+    fracs = []
+    for step in range(120):
+        st, _ = tr.train_step(
+            st, stack_pod_batches([next(l) for l in loaders]))
+        if is_sync_step(tr.cfg.sync, step):
+            st = tr._sync_step(st)
+            fracs.append(float(st.sync_state.significant_frac))
+    acc = accuracy_eval(m["apply"], test)(st)
+    assert acc > 0.9, acc
+    # significance filter actually filters (and late-training deltas shrink)
+    assert 0.0 < np.mean(fracs) < 1.0
+    assert fracs[-1] <= fracs[0] + 1e-6

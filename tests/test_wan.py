@@ -1,0 +1,154 @@
+"""WAN simulator invariants + control-plane tests."""
+import pytest
+
+from repro.core.control_plane import (AddressTable, CommunicatorFunction,
+                                      FunctionRegistry, FunctionReplica,
+                                      TrainingRequest, Workflow,
+                                      WorkflowEngine, build_training_plan,
+                                      training_workflow)
+from repro.core.cost import cost_report
+from repro.core.scheduler import CloudResources
+from repro.core.sync import SyncConfig
+from repro.core.wan import SimCloud, WANConfig, compare_strategies, simulate
+
+CLOUDS = [SimCloud("sh", iter_time_s=0.12, units=12),
+          SimCloud("cq", iter_time_s=0.08, units=12)]
+WAN = WANConfig(seed=1)
+
+
+def _run(strategy, interval, **kw):
+    return simulate(CLOUDS, SyncConfig(strategy, interval), n_iters=200,
+                    model_mb=0.6, wan=WAN, **kw)
+
+
+def test_makespan_at_least_compute():
+    r = _run("asgd_ga", 8)
+    for c in r.clouds:
+        assert c.total_s >= c.compute_s - 1e-9
+
+
+def test_frequency_reduction_cuts_traffic_and_comm():
+    base = _run("asgd", 1)
+    ga4 = _run("asgd_ga", 4)
+    ga8 = _run("asgd_ga", 8)
+    assert ga4.total_traffic_mb < base.total_traffic_mb
+    assert ga8.total_traffic_mb < ga4.total_traffic_mb
+    assert ga8.clouds[0].comm_s < ga4.clouds[0].comm_s < base.clouds[0].comm_s
+    assert base.makespan_s > ga4.makespan_s > 0
+
+
+def test_sma_barrier_waits_more():
+    sma = _run("sma", 4)
+    ama = _run("ama", 4)
+    assert sum(c.wait_s for c in sma.clouds) >= \
+        sum(c.wait_s for c in ama.clouds) - 1e-9
+    # sync barrier also makes SMA slower than async MA (paper Fig 11)
+    assert sma.makespan_s >= ama.makespan_s
+
+
+def test_traffic_accounting_exact():
+    r = _run("ama", 4)
+    n_syncs = 200 // 4
+    assert r.clouds[0].traffic_mb == pytest.approx(n_syncs * 0.6)
+    base = _run("asgd", 1)
+    assert base.clouds[0].traffic_mb == pytest.approx(200 * 0.6 * 2)  # push+pull
+
+
+def test_cost_report_reduction():
+    base = _run("asgd", 1)
+    fast = _run("asgd_ga", 8)
+    units = {"sh": 12, "cq": 12}
+    rates = {"sh": 1.0, "cq": 1.0}
+    rb = cost_report(base, units, rates)
+    rf = cost_report(fast, units, rates)
+    assert rf.reduction_vs(rb) > 0
+
+
+def test_compare_strategies_keys():
+    res = compare_strategies(CLOUDS, n_iters=50, model_mb=0.6, wan=WAN)
+    assert set(res) == {"asgd", "asgd_ga@4", "ama@4", "sma@4",
+                        "asgd_ga@8", "ama@8", "sma@8", "asp"}
+    # ASP ships less than the dense per-step baseline but more than freq-8
+    assert res["asp"].total_traffic_mb < res["asgd"].total_traffic_mb
+    assert res["asp"].total_traffic_mb > res["ama@8"].total_traffic_mb
+
+
+def test_deterministic_given_seed():
+    a = _run("asgd_ga", 4)
+    b = _run("asgd_ga", 4)
+    assert a.makespan_s == b.makespan_s
+
+
+# ------------------------------------------------------------ control plane
+
+
+def test_address_table_dynamic_endpoints():
+    t = AddressTable()
+    t.register(FunctionReplica("sh/ps#0", "ps", "sh", "10.0.0.1:50051"))
+    assert t.resolve("sh/ps#0") == "10.0.0.1:50051"
+    t.update_endpoint("sh/ps#0", "10.0.0.9:50051")   # endpoint churn
+    assert t.resolve("sh/ps#0") == "10.0.0.9:50051"
+    t.terminate("sh/ps#0")
+    with pytest.raises(LookupError):
+        t.resolve("sh/ps#0")
+
+
+def test_workflow_topology_and_scale_to_zero():
+    reg = FunctionRegistry()
+    calls = []
+    for name in ("load_data", "workers", "ps_update", "ps_communicator"):
+        reg.deploy("sh", name, lambda ctx, n=name: calls.append(n))
+    wf = training_workflow("sh")
+    eng = WorkflowEngine(reg)
+    eng.run(wf)
+    assert calls == ["load_data", "workers", "ps_update", "ps_communicator"]
+    # workers terminated after completion (serverless scale-to-zero)
+    workers = reg.addresses.lookup(name="workers", namespace="sh")
+    assert all(r.state == "terminated" for r in workers)
+
+
+def test_workflow_cycle_detection():
+    wf = Workflow("x")
+    wf.add("a", deps=["b"])
+    wf.add("b", deps=["a"])
+    with pytest.raises(ValueError):
+        wf.topo_order()
+
+
+def test_communicator_requires_all_ps():
+    comm = CommunicatorFunction()
+    comm.register_ps("sh", "sh/ps#0")
+    with pytest.raises(RuntimeError):
+        comm.assign(["sh", "cq"])
+    comm.register_ps("cq", "cq/ps#0")
+    ids, topo = comm.assign(["sh", "cq"])
+    assert len(ids) == 2 and topo == ((0, 1), (1, 0))
+
+
+def test_build_training_plan_end_to_end():
+    req = TrainingRequest(
+        model="lenet",
+        clouds=(CloudResources("sh", (("cascade", 6),), 2.0),
+                CloudResources("cq", (("sky", 6),), 1.0)),
+        sync=SyncConfig("ama", 8), global_batch=96)
+    plan = build_training_plan(req)
+    assert sum(plan.batch_split) == 96
+    assert plan.batch_split[0] > plan.batch_split[1]   # more data+power -> more batch
+    assert plan.topology == ((0, 1), (1, 0))
+    assert len(plan.ps_identities) == 2
+
+
+def test_reschedule_replans_topology_and_split():
+    from repro.core.control_plane import reschedule
+    req = TrainingRequest(
+        model="lenet",
+        clouds=(CloudResources("sh", (("cascade", 6),), 2.0),
+                CloudResources("cq", (("sky", 6),), 1.0)),
+        sync=SyncConfig("ama", 8), global_batch=96)
+    plan = build_training_plan(req)
+    # a third region comes online mid-run
+    new = req.clouds + (CloudResources("bj", (("sky", 3),), 1.0),)
+    plan2 = reschedule(plan, new)
+    assert len(plan2.ps_identities) == 3
+    assert plan2.topology == ((0, 1), (1, 2), (2, 0))
+    assert sum(plan2.batch_split) == 96
