@@ -1,0 +1,208 @@
+"""Elasticity-engine benchmark: elastic re-plan vs static plan under churn.
+
+Scenario (paper §III.B made mid-training): three cloud regions train with the
+Algorithm-1 plan when (1) a region departs and (2) WAN bandwidth collapses.
+
+- **static** — no runtime control plane.  The departed region's batch shard
+  is absorbed wholesale by its ring predecessor (no re-split is possible
+  without a scheduler), allocations stay as planned at launch, and the sync
+  interval never adapts to the bandwidth drop.
+- **elastic** — the ``ElasticityController`` consumes both events, re-runs
+  Algorithm 1 incrementally, re-splits the global batch across the survivors
+  and scales the sync interval with the bandwidth; each reconfiguration is
+  charged a simulated pause (checkpointed pod re-stack + re-plan).
+
+Both timelines run on the same discrete-event WAN simulator with the same
+seed; the report prints the comparison and writes
+``experiments/bench/BENCH_elasticity.json``.
+
+Run:  PYTHONPATH=src python -m benchmarks.elasticity
+      PYTHONPATH=src python -m benchmarks.elasticity --compare A.json B.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Sequence
+
+from repro.core.control_plane import (CloudEvent, ElasticityController,
+                                      TrainingPlan, TrainingRequest,
+                                      build_training_plan)
+from repro.core.scheduler import CloudResources, load_power
+from repro.core.sync import SyncConfig
+from repro.core.wan import SimCloud, SimEvent, WANConfig, simulate
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+OUT_DIR = os.path.join(HERE, "..", "experiments", "bench")
+OUT_PATH = os.path.join(OUT_DIR, "BENCH_elasticity.json")
+
+# per-unit-of-batch-per-unit-of-power iteration time (calibrated so the
+# straggler region lands near the paper's ~0.5 s ResNet iteration)
+KAPPA = 0.05
+MODEL_MB = 44.6          # ResNet18 gradient size, paper Table III ballpark
+N_ITERS = 600
+T_LEAVE = 100.0          # chongqing departs
+T_BANDWIDTH = 200.0      # WAN drops 100 -> 25 Mbps
+NEW_BANDWIDTH = 25.0
+
+
+def paper_clouds() -> tuple:
+    return (CloudResources("shanghai", (("cascade", 6),), data_size=2.0),
+            CloudResources("chongqing", (("sky", 6),), data_size=1.0),
+            CloudResources("beijing", (("sky", 3),), data_size=1.0))
+
+
+def sim_clouds(plan: TrainingPlan) -> List[SimCloud]:
+    """Map a control-plane plan onto simulator clouds: iteration time grows
+    with the batch shard and shrinks with the allocated computing power."""
+    out = []
+    for p, b in zip(plan.resource_plans, plan.batch_split):
+        power = load_power(p.allocation, 1.0)
+        out.append(SimCloud(region=p.region, iter_time_s=KAPPA * b / power,
+                            units=p.units))
+    return out
+
+
+def reconfig_pause_s(model_mb: float, bandwidth_mbps: float,
+                     replan_s: float = 5.0) -> float:
+    """Checkpointed pod re-stack (save + restore over the WAN) + re-plan."""
+    return 2.0 * model_mb * 8.0 / bandwidth_mbps + replan_s
+
+
+def _accounting(result) -> Dict:
+    return {
+        "makespan_s": round(result.makespan_s, 1),
+        "total_cost": round(result.total_cost, 4),
+        "total_traffic_mb": round(result.total_traffic_mb, 1),
+        "wait_s": round(sum(c.wait_s for c in result.clouds), 1),
+        "reconfig_s": round(sum(c.reconfig_s for c in result.clouds), 1),
+        "n_reconfigs": result.n_reconfigs,
+        "final_interval": result.sync_cfg.interval,
+        "per_region": {c.region: {"total_s": round(c.total_s, 1),
+                                  "wait_s": round(c.wait_s, 1),
+                                  "cost": round(c.cost, 4)}
+                       for c in result.clouds},
+    }
+
+
+def bench_elasticity(seed: int = 0) -> Dict:
+    clouds = paper_clouds()
+    request = TrainingRequest(model="resnet18", clouds=clouds,
+                              sync=SyncConfig("asgd_ga", 8),
+                              n_iters=N_ITERS, global_batch=96)
+    plan = build_training_plan(request)
+    sims = sim_clouds(plan)
+    wan = WANConfig(bandwidth_mbps=100.0, seed=seed)
+    by_region = {s.region: s for s in sims}
+    split = dict(zip((p.region for p in plan.resource_plans),
+                     plan.batch_split))
+
+    # ---- static timeline: predecessor absorbs the dead region's shard,
+    # interval stays fixed
+    ring = dict((plan.resource_plans[b].region, plan.resource_plans[a].region)
+                for a, b in plan.topology)          # receiver -> sender
+    absorber = ring["chongqing"]
+    absorb_factor = (split[absorber] + split["chongqing"]) / split[absorber]
+    static_events = [
+        SimEvent(T_LEAVE, "cloud_left", region="chongqing"),
+        SimEvent(T_LEAVE, "slowdown", region=absorber, factor=absorb_factor),
+        SimEvent(T_BANDWIDTH, "bandwidth_changed",
+                 bandwidth_mbps=NEW_BANDWIDTH),
+    ]
+    static = simulate(sims, request.sync, n_iters=N_ITERS, model_mb=MODEL_MB,
+                      wan=wan, events=static_events)
+
+    # ---- elastic timeline: the controller replans after each event
+    controller = ElasticityController(plan, ref_bandwidth_mbps=100.0)
+    rc_leave = controller.handle(
+        CloudEvent("cloud_left", region="chongqing", time_s=T_LEAVE))
+    rc_bw = controller.handle(
+        CloudEvent("bandwidth_changed", bandwidth_mbps=NEW_BANDWIDTH,
+                   time_s=T_BANDWIDTH))
+    elastic_events = [
+        SimEvent(T_LEAVE, "reconfig", clouds=sim_clouds(rc_leave.new),
+                 sync=rc_leave.new.request.sync,
+                 pause_s=reconfig_pause_s(MODEL_MB, 100.0)),
+        SimEvent(T_BANDWIDTH, "bandwidth_changed",
+                 bandwidth_mbps=NEW_BANDWIDTH),
+        SimEvent(T_BANDWIDTH, "reconfig", clouds=sim_clouds(rc_bw.new),
+                 sync=rc_bw.new.request.sync,
+                 pause_s=reconfig_pause_s(MODEL_MB, NEW_BANDWIDTH)),
+    ]
+    elastic = simulate(sims, request.sync, n_iters=N_ITERS,
+                       model_mb=MODEL_MB, wan=wan, events=elastic_events)
+
+    result = {
+        "scenario": {
+            "clouds": {c.region: dict(c.devices) for c in clouds},
+            "global_batch": request.global_batch,
+            "sync": "asgd_ga@8",
+            "n_iters": N_ITERS,
+            "model_mb": MODEL_MB,
+            "events": [f"cloud_left:chongqing@{T_LEAVE:.0f}s",
+                       f"bandwidth:100->{NEW_BANDWIDTH:.0f}Mbps"
+                       f"@{T_BANDWIDTH:.0f}s"],
+            "static_absorber": absorber,
+            "elastic_diffs": [rc_leave.diff.summary(), rc_bw.diff.summary()],
+            "elastic_batch_split": list(rc_bw.new.batch_split),
+        },
+        "static": _accounting(static),
+        "elastic": _accounting(elastic),
+        "speedup": round(static.makespan_s / elastic.makespan_s, 3),
+        "cost_reduction": round(1.0 - elastic.total_cost / static.total_cost,
+                                3),
+        "traffic_reduction": round(
+            1.0 - elastic.total_traffic_mb / static.total_traffic_mb, 3),
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def print_report(r: Dict) -> None:
+    print("=== elasticity: elastic re-plan vs static plan under churn ===")
+    for ev in r["scenario"]["events"]:
+        print(f"  event: {ev}")
+    print(f"  elastic re-plans: {r['scenario']['elastic_diffs']}")
+    print(f"  {'':10s} {'makespan':>10s} {'cost':>10s} {'traffic':>10s} "
+          f"{'wait':>8s} {'interval':>8s}")
+    for label in ("static", "elastic"):
+        v = r[label]
+        print(f"  {label:10s} {v['makespan_s']:>9.1f}s {v['total_cost']:>10.3f} "
+              f"{v['total_traffic_mb']:>8.1f}MB {v['wait_s']:>7.1f}s "
+              f"{v['final_interval']:>8d}")
+    print(f"  -> speedup {r['speedup']}x, cost reduction "
+          f"{100 * r['cost_reduction']:.1f}%, traffic reduction "
+          f"{100 * r['traffic_reduction']:.1f}%")
+    print(f"  written: {os.path.relpath(OUT_PATH)}")
+
+
+def compare(path_a: str, path_b: str) -> None:
+    a, b = json.load(open(path_a)), json.load(open(path_b))
+    print(f"{'metric':24s} {os.path.basename(path_a):>16s} "
+          f"{os.path.basename(path_b):>16s}")
+    for key in ("speedup", "cost_reduction", "traffic_reduction"):
+        print(f"{key:24s} {a[key]:>16} {b[key]:>16}")
+    for label in ("static", "elastic"):
+        for key in ("makespan_s", "total_cost", "total_traffic_mb"):
+            print(f"{label}.{key:18s} {a[label][key]:>16} {b[label][key]:>16}")
+
+
+def main(argv: Sequence[str] = None) -> Dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compare", nargs=2, metavar=("A", "B"),
+                    help="diff two BENCH_elasticity.json files instead")
+    args = ap.parse_args(argv)
+    if args.compare:
+        compare(*args.compare)
+        return {}
+    r = bench_elasticity(seed=args.seed)
+    print_report(r)
+    return r
+
+
+if __name__ == "__main__":
+    main()

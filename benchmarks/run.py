@@ -47,6 +47,11 @@ def main() -> None:
     _run("fig11_sma_accuracy", P.bench_sma,
          lambda r: f"sma_acc={r['accuracy']['sma@8']}")
 
+    from benchmarks import elasticity as E
+    _run("elasticity", E.bench_elasticity,
+         lambda r: f"speedup={r['speedup']} "
+                   f"cost_red={r['cost_reduction']}")
+
     # roofline from the dry-run artifacts (skips silently if none exist yet)
     def _roofline():
         from benchmarks import roofline as R

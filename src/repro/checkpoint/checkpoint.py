@@ -23,7 +23,9 @@ _ARRAYS = "arrays.npz"
 
 
 def _flatten_with_paths(tree: Pytree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists in newer jax; the tree_util
+    # spelling works across the versions this repo supports
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
             for path, _ in flat]
     return keys, [leaf for _, leaf in flat], treedef
@@ -59,10 +61,48 @@ def load_manifest(directory: str) -> dict:
         return json.load(f)
 
 
+def _resize_pod_dim(arr: np.ndarray, n_new: int, how: str) -> np.ndarray:
+    """Host-side pod-dimension resize, matching ``repro.core.sync``'s
+    transforms: grow seeds new pods with the mean replica ("mean") or copies
+    of pod 0 ("clone"); shrink keeps the first ``n_new`` pods, shifted so
+    their mean equals the old global mean ("mean") or plainly dropped
+    ("drop" / "clone")."""
+    n_old = arr.shape[0]
+    if n_new == n_old:
+        return arr
+    if n_new > n_old:
+        if how == "drop":
+            raise ValueError(
+                f"pod_resize='drop' cannot grow {n_old} -> {n_new} pods")
+        if how == "clone":
+            fill = np.broadcast_to(arr[:1], (n_new - n_old,) + arr.shape[1:])
+        else:
+            fill = np.broadcast_to(
+                arr.astype(np.float32).mean(axis=0, keepdims=True),
+                (n_new - n_old,) + arr.shape[1:]).astype(arr.dtype)
+        return np.concatenate([arr, fill], axis=0)
+    kept = arr[:n_new]
+    if how == "mean":
+        shift = (arr.astype(np.float32).mean(axis=0, keepdims=True)
+                 - kept.astype(np.float32).mean(axis=0, keepdims=True))
+        kept = (kept.astype(np.float32) + shift).astype(arr.dtype)
+    return kept
+
+
 def restore(directory: str, like: Pytree,
-            shardings: Optional[Pytree] = None) -> tuple[Pytree, int]:
+            shardings: Optional[Pytree] = None,
+            pod_resize: Optional[str] = None) -> tuple[Pytree, int]:
     """Restore into the structure of ``like``; keys are matched by path so
-    the pytree may be re-laid-out.  Returns (tree, step)."""
+    the pytree may be re-laid-out.  Returns (tree, step).
+
+    ``pod_resize`` ("mean" | "clone" | "drop") makes the restore
+    resharding-aware for the elasticity engine: a checkpoint written with one
+    leading pod-dimension size restores into a model stacked for another —
+    the leading dimension is grown/shrunk with the named transform while all
+    trailing dimensions must still match exactly.
+    """
+    if pod_resize not in (None, "mean", "clone", "drop"):
+        raise ValueError(f"unknown pod_resize mode {pod_resize!r}")
     manifest = load_manifest(directory)
     data = np.load(os.path.join(directory, _ARRAYS))
     by_key = {k: data[f"a{i}"] for i, k in enumerate(manifest["keys"])}
@@ -74,8 +114,14 @@ def restore(directory: str, like: Pytree,
             raise KeyError(f"checkpoint missing leaf {k!r}")
         arr = by_key[k]
         if tuple(arr.shape) != tuple(ref.shape):
-            raise ValueError(
-                f"shape mismatch for {k!r}: ckpt {arr.shape} vs model {ref.shape}")
+            if (pod_resize is not None and arr.ndim == len(ref.shape)
+                    and arr.ndim >= 1
+                    and tuple(arr.shape[1:]) == tuple(ref.shape[1:])):
+                arr = _resize_pod_dim(arr, ref.shape[0], pod_resize)
+            else:
+                raise ValueError(
+                    f"shape mismatch for {k!r}: ckpt {arr.shape} "
+                    f"vs model {ref.shape}")
         out.append(arr.astype(ref.dtype))
 
     if shardings is not None:

@@ -25,10 +25,13 @@ from __future__ import annotations
 
 import itertools
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
-from repro.core.scheduler import CloudResources, ResourcePlan, optimal_matching
+from repro.core.scheduler import (CloudResources, PlanDiff, ResourcePlan,
+                                  diff_plans, incremental_matching,
+                                  load_power, optimal_matching,
+                                  plan_batch_split)
 from repro.core.sync import SyncConfig
 
 # ---------------------------------------------------------------------------
@@ -252,7 +255,6 @@ def build_training_plan(request: TrainingRequest) -> TrainingPlan:
         comm.register_ps(region, f"{region}/ps#0")
     identities, topology = comm.assign(regions)
 
-    from repro.core.scheduler import plan_batch_split
     powers = [p.load_power * c.data_size  # LP * S = raw compute power
               for p, c in zip(plans, request.clouds)]
     split = plan_batch_split(request.global_batch, powers)
@@ -277,6 +279,186 @@ def reschedule(plan: TrainingPlan,
         model=plan.request.model, clouds=new_clouds, sync=plan.request.sync,
         n_iters=plan.request.n_iters, global_batch=plan.request.global_batch)
     return build_training_plan(request)
+
+
+# ---------------------------------------------------------------------------
+# elasticity engine (paper §III.B "elastic scheduling" made mid-training)
+# ---------------------------------------------------------------------------
+
+
+EVENT_KINDS = ("cloud_joined", "cloud_left", "bandwidth_changed",
+               "straggler_detected")
+
+
+@dataclass(frozen=True)
+class CloudEvent:
+    """A runtime change in the multi-cloud resource picture."""
+
+    kind: str                                   # one of EVENT_KINDS
+    region: str = ""                            # subject cloud (where relevant)
+    time_s: float = 0.0                         # wall/sim time of the event
+    resources: Optional[CloudResources] = None  # cloud_joined payload
+    bandwidth_mbps: Optional[float] = None      # bandwidth_changed payload
+    slowdown: float = 1.0                       # straggler_detected factor (>1)
+
+    def __post_init__(self):
+        if self.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown event kind {self.kind!r}")
+
+
+class EventBus:
+    """Tiny in-process pub/sub: the WAN monitor / health checker side of the
+    paper's communicator publishes, the ElasticityController subscribes."""
+
+    def __init__(self):
+        self._subs: Dict[str, List[Callable]] = {}
+        self.history: List[CloudEvent] = []
+
+    def subscribe(self, kind: str, fn: Callable) -> None:
+        if kind != "*" and kind not in EVENT_KINDS:
+            raise ValueError(f"unknown event kind {kind!r}")
+        self._subs.setdefault(kind, []).append(fn)
+
+    def publish(self, event: CloudEvent) -> List:
+        self.history.append(event)
+        out = []
+        for fn in self._subs.get(event.kind, []) + self._subs.get("*", []):
+            out.append(fn(event))
+        return out
+
+
+@dataclass(frozen=True)
+class ReconfigPlan:
+    """Controller output: the old plan, the re-matched plan, and the diff the
+    trainer needs to decide whether (and how) to re-stack pods."""
+
+    event: CloudEvent
+    old: TrainingPlan
+    new: TrainingPlan
+    diff: PlanDiff
+
+    @property
+    def is_noop(self) -> bool:
+        return (self.diff.is_empty
+                and self.new.batch_split == self.old.batch_split
+                and self.new.request.sync == self.old.request.sync
+                and self.new.topology == self.old.topology)
+
+    def pod_transition(self) -> Tuple[Tuple[int, ...], int]:
+        """(keep, n_new): old pod indices that survive, in new pod order, and
+        the new pod count — the arguments of the trainer's re-stacking."""
+        old_regions = [p.region for p in self.old.resource_plans]
+        new_regions = [p.region for p in self.new.resource_plans]
+        keep = tuple(old_regions.index(r) for r in new_regions
+                     if r in old_regions)
+        return keep, len(new_regions)
+
+
+def adapt_interval(sync: SyncConfig, base_interval: int,
+                   ref_bandwidth_mbps: float, bandwidth_mbps: float,
+                   max_interval: int = 64) -> SyncConfig:
+    """Scale the sync interval inversely with available WAN bandwidth (the
+    §III.C sync-frequency knob driven by the §III.B monitor): half the
+    bandwidth -> double the interval, so per-step blocking communication time
+    stays roughly constant.  ASGD (interval-free baseline) is left alone."""
+    if sync.strategy == "asgd" or bandwidth_mbps <= 0:
+        return sync
+    k = round(base_interval * ref_bandwidth_mbps / bandwidth_mbps)
+    k = max(1, min(max_interval, k))
+    if k == sync.interval:
+        return sync
+    return replace(sync, interval=k)
+
+
+class ElasticityController:
+    """Long-lived control-plane loop (tentpole of the elasticity engine).
+
+    Consumes ``CloudEvent``s — from an :class:`EventBus`, the WAN simulator,
+    or the launcher's host loop — maintains the current resource picture
+    (clouds, per-region straggler factors, WAN bandwidth estimate), re-runs
+    Algorithm 1 *incrementally* against it, and emits a
+    :class:`ReconfigPlan` whose diff the trainer applies at the next sync
+    barrier via checkpointed pod re-stacking."""
+
+    def __init__(self, plan: TrainingPlan, bus: Optional[EventBus] = None,
+                 ref_bandwidth_mbps: float = 100.0, max_interval: int = 64):
+        self.plan = plan
+        self.clouds: Dict[str, CloudResources] = {
+            c.region: c for c in plan.request.clouds}
+        self.slowdowns: Dict[str, float] = {}
+        self.ref_bandwidth_mbps = ref_bandwidth_mbps
+        self.bandwidth_mbps = ref_bandwidth_mbps
+        self.base_interval = plan.request.sync.interval
+        self.max_interval = max_interval
+        self.history: List[ReconfigPlan] = []
+        if bus is not None:
+            for kind in EVENT_KINDS:
+                bus.subscribe(kind, self.handle)
+
+    # ------------------------------------------------------------ events
+    def handle(self, event: CloudEvent) -> ReconfigPlan:
+        if event.kind == "cloud_joined":
+            if event.resources is None:
+                raise ValueError("cloud_joined event needs resources")
+            self.clouds[event.resources.region] = event.resources
+        elif event.kind == "cloud_left":
+            if event.region not in self.clouds:
+                raise KeyError(f"unknown region {event.region!r}")
+            if len(self.clouds) == 1:
+                raise ValueError("cannot remove the last cloud")
+            del self.clouds[event.region]
+            self.slowdowns.pop(event.region, None)
+        elif event.kind == "bandwidth_changed":
+            if event.bandwidth_mbps is None:
+                raise ValueError("bandwidth_changed event needs bandwidth_mbps")
+            self.bandwidth_mbps = event.bandwidth_mbps
+        elif event.kind == "straggler_detected":
+            self.slowdowns[event.region] = max(1.0, event.slowdown)
+        reconfig = self._replan(event)
+        self.history.append(reconfig)
+        self.plan = reconfig.new
+        return reconfig
+
+    # ------------------------------------------------------------ replan
+    def _effective_clouds(self) -> Tuple[CloudResources, ...]:
+        """Straggler factors enter Algorithm 1 as inflated effective data
+        sizes (same iterations take ``slowdown`` times longer per unit of
+        computing power)."""
+        out = []
+        for c in self.clouds.values():
+            f = self.slowdowns.get(c.region, 1.0)
+            out.append(replace(c, data_size=c.data_size * f) if f != 1.0 else c)
+        return tuple(out)
+
+    def _replan(self, event: CloudEvent) -> ReconfigPlan:
+        old = self.plan
+        effective = self._effective_clouds()
+        plans = incremental_matching(effective, prev=old.resource_plans)
+
+        regions = [c.region for c in effective]
+        comm = CommunicatorFunction()
+        for region in regions:
+            comm.register_ps(region, f"{region}/ps#0")
+        identities, topology = comm.assign(regions)
+
+        # slowdown-discounted raw compute power drives the batch re-split
+        powers = [load_power(p.allocation, 1.0)
+                  / self.slowdowns.get(p.region, 1.0) for p in plans]
+        split = plan_batch_split(old.request.global_batch, powers)
+
+        sync = adapt_interval(old.request.sync, self.base_interval,
+                              self.ref_bandwidth_mbps, self.bandwidth_mbps,
+                              self.max_interval)
+        request = TrainingRequest(
+            model=old.request.model,
+            clouds=tuple(self.clouds.values()),
+            sync=sync, n_iters=old.request.n_iters,
+            global_batch=old.request.global_batch)
+        new = TrainingPlan(request=request, resource_plans=tuple(plans),
+                           batch_split=tuple(split), topology=topology,
+                           ps_identities=identities)
+        return ReconfigPlan(event=event, old=old, new=new,
+                            diff=diff_plans(old.resource_plans, plans))
 
 
 def training_workflow(region: str) -> Workflow:

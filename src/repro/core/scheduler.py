@@ -134,21 +134,135 @@ def optimal_matching(clouds: Sequence[CloudResources],
     full_lp = [load_power(c.devices, c.data_size, prefer_measured) for c in clouds]
     min_lp = min(full_lp)
 
+    return [_match_one(cloud, min_lp, prefer_measured) for cloud in clouds]
+
+
+# ---------------------------------------------------------------------------
+# plan diffing + incremental re-matching (elasticity engine)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PlanDiff:
+    """Difference between two resource-plan sets, keyed by region.
+
+    ``resized`` carries (region, old_allocation, new_allocation) for regions
+    present in both plans whose allocation changed.  An all-empty diff means
+    a reconfiguration would be a no-op and the trainer skips the barrier
+    re-stacking entirely.
+    """
+
+    added: Tuple[str, ...] = ()
+    removed: Tuple[str, ...] = ()
+    resized: Tuple[Tuple[str, Tuple[Tuple[str, int], ...],
+                         Tuple[Tuple[str, int], ...]], ...] = ()
+
+    @property
+    def is_empty(self) -> bool:
+        return not (self.added or self.removed or self.resized)
+
+    def summary(self) -> str:
+        if self.is_empty:
+            return "no-op"
+        parts = []
+        if self.added:
+            parts.append("+" + ",".join(self.added))
+        if self.removed:
+            parts.append("-" + ",".join(self.removed))
+        for region, old, new in self.resized:
+            parts.append(f"{region}:{dict(old)}->{dict(new)}")
+        return " ".join(parts)
+
+
+def diff_plans(old: Sequence[ResourcePlan],
+               new: Sequence[ResourcePlan]) -> PlanDiff:
+    """Region-keyed structural diff of two Algorithm-1 outputs."""
+    old_by = {p.region: p for p in old}
+    new_by = {p.region: p for p in new}
+    added = tuple(r for r in new_by if r not in old_by)
+    removed = tuple(r for r in old_by if r not in new_by)
+    resized = tuple(
+        (r, old_by[r].allocation, new_by[r].allocation)
+        for r in old_by
+        if r in new_by and old_by[r].allocation != new_by[r].allocation)
+    return PlanDiff(added=added, removed=removed, resized=resized)
+
+
+def incremental_matching(
+    clouds: Sequence[CloudResources],
+    prev: Optional[Sequence[ResourcePlan]] = None,
+    prefer_measured: bool = True,
+) -> List[ResourcePlan]:
+    """Incremental Algorithm 1 for the elasticity engine.
+
+    Re-computes the straggler reference for the *new* resource picture, then
+    reuses the previous allocation for every cloud whose resources are
+    unchanged and whose previous allocation is still optimal against the new
+    reference (exact same LP-excess bound), searching only the clouds the
+    event actually perturbed.  Output is identical to a fresh
+    ``optimal_matching`` call; only the work is incremental.
+    """
+    if not clouds:
+        return []
+    prev_by = {p.region: p for p in (prev or [])}
+    full_lp = [load_power(c.devices, c.data_size, prefer_measured)
+               for c in clouds]
+    min_lp = min(full_lp)
+
     plans: List[ResourcePlan] = []
-    for cloud in clouds:
-        best: Optional[Tuple[float, int, Tuple[Tuple[str, int], ...], float]] = None
-        for alloc in _allocations(cloud):
-            lp = load_power(alloc, cloud.data_size, prefer_measured)
-            if lp < min_lp - 1e-12:
-                continue  # would become a worse straggler
-            units = sum(n for _, n in alloc)
-            key = (lp - min_lp, units)
-            if best is None or key < (best[0], best[1]):
-                best = (lp - min_lp, units, alloc, lp)
-        assert best is not None  # full allocation always qualifies
-        plans.append(ResourcePlan(region=cloud.region, allocation=best[2],
-                                  load_power=best[3]))
+    for cloud, flp in zip(clouds, full_lp):
+        old = prev_by.get(cloud.region)
+        if old is not None and _reusable(cloud, old, min_lp, prefer_measured):
+            lp = load_power(old.allocation, cloud.data_size, prefer_measured)
+            plans.append(old if abs(lp - old.load_power) <= 1e-12 else
+                         ResourcePlan(region=cloud.region,
+                                      allocation=old.allocation,
+                                      load_power=lp))
+            continue
+        if flp <= min_lp + 1e-12:
+            # this cloud *is* the straggler: full allocation by construction
+            plans.append(ResourcePlan(region=cloud.region,
+                                      allocation=cloud.devices,
+                                      load_power=flp))
+            continue
+        plans.append(_match_one(cloud, min_lp, prefer_measured))
     return plans
+
+
+def _match_one(cloud: CloudResources, min_lp: float,
+               prefer_measured: bool) -> ResourcePlan:
+    """Single-cloud Algorithm-1 inner search against a fixed reference."""
+    best: Optional[Tuple[float, int, Tuple[Tuple[str, int], ...], float]] = None
+    for alloc in _allocations(cloud):
+        lp = load_power(alloc, cloud.data_size, prefer_measured)
+        if lp < min_lp - 1e-12:
+            continue
+        units = sum(n for _, n in alloc)
+        key = (lp - min_lp, units)
+        if best is None or key < (best[0], best[1]):
+            best = (lp - min_lp, units, alloc, lp)
+    assert best is not None
+    return ResourcePlan(region=cloud.region, allocation=best[2],
+                        load_power=best[3])
+
+
+def _reusable(cloud: CloudResources, old: ResourcePlan, min_lp: float,
+              prefer_measured: bool) -> bool:
+    """Previous allocation still optimal: feasible, not below the new
+    reference, and no strictly better (smaller-excess or cheaper) allocation
+    exists — checked cheaply by re-running the inner search only when the old
+    excess is non-zero."""
+    avail = dict(cloud.devices)
+    for dev, n in old.allocation:
+        if dev not in avail or n > avail[dev]:
+            return False
+    lp = load_power(old.allocation, cloud.data_size, prefer_measured)
+    if lp < min_lp - 1e-12:
+        return False
+    if abs(lp - min_lp) <= 1e-12:
+        return True     # zero excess cannot be beaten
+    fresh = _match_one(cloud, min_lp, prefer_measured)
+    return fresh.allocation == old.allocation
 
 
 # ---------------------------------------------------------------------------

@@ -42,7 +42,7 @@ tests reproduce the paper's Figs 7/9/10 accuracy results for real.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, NamedTuple, Optional, Tuple, Union
+from typing import Any, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -246,6 +246,127 @@ def apply_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
             p.shape).astype(p.dtype),
         params)
     return params, zero
+
+
+# ---------------------------------------------------------------------------
+# pod-count-changing state transforms (elasticity engine)
+# ---------------------------------------------------------------------------
+#
+# A reconfiguration (cloud joined / left) changes ``n_pods`` mid-run.  Under
+# the stacked representation that is a resize of every leaf's leading pod
+# dimension, applied at a sync barrier.  Two families:
+#
+# - parameter-like leaves ("mean" semantics): the global parameter mean must
+#   be preserved — new pods are seeded with the mean replica on grow, and on
+#   shrink the survivors are shifted so their mean equals the old global mean
+#   (removed pods' progress is re-averaged in, not discarded).
+# - accumulator-like leaves ("sum" semantics, the ASGD-GA gradient buffer):
+#   the *total* accumulated gradient must be preserved — new pods start at
+#   zero on grow, and on shrink the removed pods' accumulations are
+#   replay-distributed evenly across the survivors.
+
+
+def grow_pods(tree: Pytree, n_new: int, how: str = "mean") -> Pytree:
+    """Grow the leading pod dimension to ``n_new`` (>= current).
+
+    ``how``: "mean" appends mean-of-existing replicas (preserves the global
+    parameter mean), "clone" appends copies of pod 0, "zeros" appends zero
+    pods (preserves accumulator totals).
+    """
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return tree   # stateless (e.g. plain-SGD optimizer state)
+    n_old = leaves[0].shape[0]
+    if n_new < n_old:
+        raise ValueError(f"grow_pods: {n_new} < current {n_old}")
+    if n_new == n_old:
+        return tree
+    k = n_new - n_old
+
+    def grow(x):
+        if x.ndim == 0 or x.shape[0] != n_old:
+            return x   # scalar bookkeeping leaf, no pod dim
+        if how == "mean":
+            fill = jnp.broadcast_to(
+                jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True),
+                (k,) + x.shape[1:]).astype(x.dtype)
+        elif how == "clone":
+            fill = jnp.broadcast_to(x[:1], (k,) + x.shape[1:])
+        elif how == "zeros":
+            fill = jnp.zeros((k,) + x.shape[1:], x.dtype)
+        else:
+            raise ValueError(f"grow_pods: unknown how={how!r}")
+        return jnp.concatenate([x, fill], axis=0)
+
+    return jax.tree.map(grow, tree)
+
+
+def shrink_pods(tree: Pytree, keep: Sequence[int], how: str = "mean") -> Pytree:
+    """Shrink the leading pod dimension to the pods in ``keep`` (ordered).
+
+    ``how``: "mean" shifts survivors so their mean equals the old global mean
+    (re-averaging the departed pods' progress in), "sum" redistributes the
+    removed pods' values evenly over survivors (preserves the total —
+    replay-accumulate for gradient buffers), "drop" discards removed pods.
+    """
+    keep = tuple(int(i) for i in keep)
+    if not keep:
+        raise ValueError("shrink_pods: keep must be non-empty")
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return tree   # stateless (e.g. plain-SGD optimizer state)
+    n_old = leaves[0].shape[0]
+    if any(i < 0 or i >= n_old for i in keep):
+        raise ValueError(f"shrink_pods: keep {keep} out of range for {n_old}")
+    if len(set(keep)) != len(keep):
+        raise ValueError("shrink_pods: duplicate indices in keep")
+    removed = tuple(i for i in range(n_old) if i not in keep)
+    idx = jnp.asarray(keep)
+
+    def shrink(x):
+        if x.ndim == 0 or x.shape[0] != n_old:
+            return x
+        kept = jnp.take(x, idx, axis=0)
+        if how == "drop" or not removed:
+            return kept
+        xf = x.astype(jnp.float32)
+        kf = kept.astype(jnp.float32)
+        if how == "mean":
+            shift = (jnp.mean(xf, axis=0, keepdims=True)
+                     - jnp.mean(kf, axis=0, keepdims=True))
+            return (kf + shift).astype(x.dtype)
+        if how == "sum":
+            lost = jnp.sum(jnp.take(xf, jnp.asarray(removed), axis=0),
+                           axis=0, keepdims=True)
+            return (kf + lost / len(keep)).astype(x.dtype)
+        raise ValueError(f"shrink_pods: unknown how={how!r}")
+
+    return jax.tree.map(shrink, tree)
+
+
+def resize_sync_state(cfg: SyncConfig, state: SyncState, new_params: Pytree,
+                      keep: Optional[Sequence[int]] = None) -> SyncState:
+    """Carry ``SyncState`` across a pod-count change.
+
+    ``new_params`` are the already-resized stacked parameters.  Strategy
+    semantics: ASGD-GA replay-accumulates the departed pods' gradient buffer
+    into the survivors (sum-preserving) and zero-seeds joiners; ASP resets
+    its reference to the new parameters (deltas restart from the
+    reconfigured model); the bufferless strategies just re-init.
+    """
+    n_new = jax.tree.leaves(new_params)[0].shape[0]
+    if cfg.strategy == "asgd_ga":
+        buf = state.ga_buffer
+        n_old = jax.tree.leaves(buf)[0].shape[0] if jax.tree.leaves(buf) else 0
+        if keep is not None and len(keep) < n_old:
+            buf = shrink_pods(buf, keep, how="sum")
+            n_old = len(keep)
+        if n_new > n_old:
+            buf = grow_pods(buf, n_new, how="zeros")
+        return state._replace(ga_buffer=buf)
+    fresh = init_sync_state(cfg, new_params)
+    return fresh._replace(steps_since_sync=state.steps_since_sync,
+                          significant_frac=state.significant_frac)
 
 
 # ---------------------------------------------------------------------------

@@ -49,6 +49,35 @@ class WANConfig:
     seed: int = 0
 
 
+@dataclass(frozen=True)
+class SimEvent:
+    """External event injected into the discrete-event timeline.
+
+    Kinds: ``bandwidth_changed`` (new WAN bandwidth), ``cloud_left`` (region
+    departs, resources released), ``cloud_joined`` (``cloud`` payload comes
+    online), ``slowdown`` (region's iter time scaled by ``factor``), and
+    ``reconfig`` (elasticity engine output: swap in a new cloud set /
+    ``SyncConfig`` after a ``pause_s`` reconfiguration stall — checkpoint
+    re-stack + re-plan cost — charged to every active region)."""
+
+    time_s: float
+    kind: str                               # see docstring
+    region: str = ""
+    bandwidth_mbps: Optional[float] = None
+    factor: float = 1.0
+    cloud: Optional[SimCloud] = None
+    clouds: Optional[Sequence[SimCloud]] = None   # reconfig payload
+    sync: Optional[SyncConfig] = None             # reconfig payload
+    pause_s: float = 0.0
+
+    _KINDS = ("bandwidth_changed", "cloud_left", "cloud_joined",
+              "slowdown", "reconfig")
+
+    def __post_init__(self):
+        if self.kind not in self._KINDS:
+            raise ValueError(f"unknown sim event kind {self.kind!r}")
+
+
 @dataclass
 class CloudTimeline:
     region: str
@@ -57,6 +86,7 @@ class CloudTimeline:
     comm_s: float = 0.0               # WAN transfer time attributable to training
     comm_blocking_s: float = 0.0      # portion that blocked the critical path
     traffic_mb: float = 0.0
+    reconfig_s: float = 0.0           # stall paying for re-plan + re-stacking
     total_s: float = 0.0
     cost: float = 0.0
 
@@ -73,6 +103,7 @@ class CloudTimeline:
 class SimResult:
     clouds: List[CloudTimeline]
     sync_cfg: SyncConfig
+    n_reconfigs: int = 0
 
     @property
     def makespan_s(self) -> float:
@@ -90,11 +121,20 @@ class SimResult:
         return other.makespan_s / self.makespan_s
 
 
-def _transfer_time(size_mb: float, wan: WANConfig, rng: np.random.Generator) -> float:
-    base = size_mb * 8.0 / wan.bandwidth_mbps + wan.latency_s
+def _transfer_time(size_mb: float, bandwidth_mbps: float, wan: WANConfig,
+                   rng: np.random.Generator) -> float:
+    base = size_mb * 8.0 / bandwidth_mbps + wan.latency_s
     if wan.fluctuation > 0:
         base *= float(rng.lognormal(mean=0.0, sigma=wan.fluctuation))
     return base
+
+
+def _schedule(sync: SyncConfig, model_mb: float, wan: WANConfig):
+    payload = sync.payload_mb(model_mb)
+    if sync.strategy == "asgd":
+        payload *= wan.baseline_roundtrip   # PS push + pull every iteration
+    sync_every = 1 if sync.strategy == "asgd" else sync.interval
+    return payload, sync_every, sync.strategy == "sma"
 
 
 def simulate(
@@ -104,25 +144,125 @@ def simulate(
     n_iters: int,
     model_mb: float,
     wan: WANConfig = WANConfig(),
+    events: Sequence[SimEvent] = (),
 ) -> SimResult:
-    """Run the discrete-event timeline and return per-cloud accounting."""
+    """Run the discrete-event timeline and return per-cloud accounting.
+
+    ``events`` are external :class:`SimEvent`s (sorted internally) applied at
+    iteration boundaries once the lagging active cloud's clock passes their
+    ``time_s`` — this is how the elasticity engine's reconfigurations get a
+    simulated wall-clock and cost.  With no events the timeline is identical
+    to the static simulator.
+    """
     rng = np.random.default_rng(wan.seed)
-    tl = {c.region: CloudTimeline(region=c.region) for c in clouds}
-    clock = {c.region: c.load_time_s for c in clouds}   # absolute time per cloud
-    for c in clouds:
+    active = list(clouds)
+    iter_time = {c.region: c.iter_time_s for c in active}
+    units = {c.region: c.units for c in active}
+    rate = {c.region: c.cost_per_unit_hour for c in active}
+    tl = {c.region: CloudTimeline(region=c.region) for c in active}
+    clock = {c.region: c.load_time_s for c in active}   # absolute time per cloud
+    born = {c.region: 0.0 for c in active}              # start of current life
+    ended: Dict[str, float] = {}                        # region -> departure time
+    life_s = {c.region: 0.0 for c in active}            # summed lifetimes
+    cost_acc = {c.region: 0.0 for c in active}          # summed per-life cost
+    for c in active:
         tl[c.region].compute_s += c.load_time_s  # model load counts as local work
 
-    payload = sync.payload_mb(model_mb)
-    if sync.strategy == "asgd":
-        payload *= wan.baseline_roundtrip   # PS push + pull every iteration
-    sync_every = 1 if sync.strategy == "asgd" else sync.interval
-    barrier = sync.strategy == "sma"
+    bandwidth = wan.bandwidth_mbps
+    payload, sync_every, barrier = _schedule(sync, model_mb, wan)
+    pending = sorted(events, key=lambda e: e.time_s)
+    ev_i = 0
+    n_reconfigs = 0
+
+    def _register(c: SimCloud) -> None:
+        iter_time[c.region] = c.iter_time_s
+        units[c.region] = c.units
+        rate[c.region] = c.cost_per_unit_hour
+        life_s.setdefault(c.region, 0.0)
+        cost_acc.setdefault(c.region, 0.0)
+
+    def _close_life(region: str, end: float) -> None:
+        """A region departs (or the job ends): bill its current life."""
+        life_s[region] += end - born[region]
+        cost_acc[region] += units[region] * rate[region] \
+            * (end - born[region]) / 3600.0
 
     for it in range(n_iters):
+        # ---- external events due at this iteration boundary
+        while (ev_i < len(pending) and active
+               and pending[ev_i].time_s
+               <= min(clock[c.region] for c in active)):
+            e = pending[ev_i]
+            ev_i += 1
+            if e.kind == "bandwidth_changed":
+                bandwidth = float(e.bandwidth_mbps)
+            elif e.kind == "slowdown":
+                if e.region in iter_time:
+                    iter_time[e.region] *= e.factor
+            elif e.kind == "cloud_left":
+                for i, c in enumerate(active):
+                    if c.region == e.region:
+                        _close_life(c.region, clock[c.region])
+                        ended[c.region] = clock[c.region]
+                        del active[i]
+                        break
+            elif e.kind == "cloud_joined":
+                c = e.cloud
+                if any(x.region == c.region for x in active):
+                    continue   # already running
+                t_now = min(clock[x.region] for x in active)
+                _register(c)
+                ended.pop(c.region, None)
+                if c.region not in tl:
+                    tl[c.region] = CloudTimeline(region=c.region,
+                                                 compute_s=c.load_time_s)
+                else:   # rejoin: keep the earlier life's accounting
+                    tl[c.region].compute_s += c.load_time_s
+                born[c.region] = t_now
+                clock[c.region] = t_now + c.load_time_s
+                active.append(c)
+            elif e.kind == "reconfig":
+                n_reconfigs += 1
+                # barrier to the slowest, then everyone stalls for the
+                # checkpointed re-stack + re-plan
+                t_bar = max(clock[c.region] for c in active)
+                for c in active:
+                    tl[c.region].wait_s += t_bar - clock[c.region]
+                    tl[c.region].reconfig_s += e.pause_s
+                    clock[c.region] = t_bar + e.pause_s
+                t_bar += e.pause_s
+                if e.sync is not None:
+                    sync = e.sync
+                    payload, sync_every, barrier = _schedule(sync, model_mb, wan)
+                if e.clouds is not None:
+                    new = list(e.clouds)
+                    keep = {c.region for c in new}
+                    for c in active:
+                        if c.region not in keep:
+                            _close_life(c.region, t_bar)
+                            ended[c.region] = t_bar
+                    for c in new:
+                        _register(c)
+                        if c.region in ended:   # rejoin: a new billed life
+                            ended.pop(c.region)
+                            born[c.region] = t_bar
+                            clock[c.region] = t_bar + c.load_time_s
+                            tl[c.region].compute_s += c.load_time_s
+                        elif c.region not in tl:
+                            tl[c.region] = CloudTimeline(
+                                region=c.region, compute_s=c.load_time_s)
+                            born[c.region] = t_bar
+                            clock[c.region] = t_bar + c.load_time_s
+                        else:   # continuing region, life uninterrupted
+                            clock[c.region] = t_bar
+                    active = new
+        if not active:
+            break
+
         # local compute
-        for c in clouds:
-            clock[c.region] += c.iter_time_s
-            tl[c.region].compute_s += c.iter_time_s
+        for c in active:
+            clock[c.region] += iter_time[c.region]
+            tl[c.region].compute_s += iter_time[c.region]
 
         if (it + 1) % sync_every:
             continue
@@ -130,13 +270,13 @@ def simulate(
         # ---- synchronization point
         if barrier:
             # all partitions align to the slowest before exchanging
-            t_bar = max(clock.values())
-            for c in clouds:
+            t_bar = max(clock[c.region] for c in active)
+            for c in active:
                 tl[c.region].wait_s += t_bar - clock[c.region]
                 clock[c.region] = t_bar
 
-        for c in clouds:
-            t = _transfer_time(payload, wan, rng)
+        for c in active:
+            t = _transfer_time(payload, bandwidth, wan, rng)
             tl[c.region].comm_s += t
             tl[c.region].traffic_mb += payload
             blocking = t if (barrier or sync.strategy == "asgd") else \
@@ -145,16 +285,21 @@ def simulate(
             clock[c.region] += blocking
 
     # straggler wait at job end: resources stay allocated until every
-    # partition finishes (the paper's waiting-time / cost-waste term)
-    t_end = max(clock.values())
-    for c in clouds:
-        if not barrier:
-            tl[c.region].wait_s += t_end - clock[c.region]
-        tl[c.region].total_s = t_end
-        tl[c.region].cost = (
-            c.units * c.cost_per_unit_hour * t_end / 3600.0
-            + tl[c.region].traffic_mb / 1024.0 * wan.traffic_cost_per_gb)
-    return SimResult(clouds=list(tl.values()), sync_cfg=sync)
+    # partition finishes (the paper's waiting-time / cost-waste term);
+    # departed clouds released their resources at their departure time
+    t_end = max([*(clock[c.region] for c in active), *ended.values()]) \
+        if (active or ended) else 0.0
+    for region, timeline in tl.items():
+        if region not in ended:
+            if not barrier:
+                timeline.wait_s += t_end - clock[region]
+            _close_life(region, t_end)
+        timeline.total_s = life_s[region]
+        timeline.cost = (cost_acc[region]
+                         + timeline.traffic_mb / 1024.0
+                         * wan.traffic_cost_per_gb)
+    return SimResult(clouds=list(tl.values()), sync_cfg=sync,
+                     n_reconfigs=n_reconfigs)
 
 
 # ---------------------------------------------------------------------------

@@ -35,12 +35,48 @@ import numpy as np
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import ARCH_IDS, get_arch
 from repro.configs.base import dense
-from repro.core.control_plane import TrainingRequest, build_training_plan
-from repro.core.scheduler import CloudResources
-from repro.core.sync import SyncConfig, traffic_per_step_mb
+from repro.core.control_plane import (CloudEvent, ElasticityController,
+                                      ReconfigPlan, TrainingRequest,
+                                      build_training_plan)
+from repro.core.scheduler import CloudResources, diff_plans
+from repro.core.sync import SyncConfig, is_sync_step, traffic_per_step_mb
 from repro.data.pipeline import TokenStream
 from repro.models.registry import get_model_fns
-from repro.training.trainer import Trainer, TrainerConfig
+from repro.training.trainer import Trainer, TrainerConfig, apply_reconfig
+
+
+def parse_events(spec: str) -> Dict[int, list]:
+    """Parse ``--events`` into step-indexed control-plane events.
+
+    Comma-separated ``kind:arg@step`` entries:
+      ``cloud_left:pod1@40``  ``bandwidth:25@60``  ``straggler:pod0x2.0@80``
+      ``cloud_joined:pod7@100`` (joins with the default v5e x4 slice).
+    """
+    out: Dict[int, list] = {}
+    if not spec:
+        return out
+    for entry in spec.split(","):
+        body, step_s = entry.strip().rsplit("@", 1)
+        kind, _, arg = body.partition(":")
+        step = int(step_s)
+        if kind == "cloud_left":
+            ev = CloudEvent("cloud_left", region=arg, time_s=step)
+        elif kind == "bandwidth":
+            ev = CloudEvent("bandwidth_changed", bandwidth_mbps=float(arg),
+                            time_s=step)
+        elif kind == "straggler":
+            region, _, factor = arg.partition("x")
+            ev = CloudEvent("straggler_detected", region=region,
+                            slowdown=float(factor or 2.0), time_s=step)
+        elif kind == "cloud_joined":
+            ev = CloudEvent("cloud_joined", time_s=step,
+                            resources=CloudResources(
+                                region=arg, devices=(("v5e", 4),),
+                                data_size=1.0))
+        else:
+            raise ValueError(f"unknown event kind {kind!r} in {entry!r}")
+        out.setdefault(step, []).append(ev)
+    return out
 
 
 def preset_100m():
@@ -80,6 +116,10 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--events", default="",
+                    help="mid-run cloud events, e.g. "
+                         "'cloud_left:pod1@40,bandwidth:25@60' "
+                         "(see parse_events)")
     args = ap.parse_args(argv)
 
     # ----------------------------------------------------------- model
@@ -111,22 +151,30 @@ def main(argv=None):
     print(f"[control-plane] batch split:   {plan.batch_split}")
 
     # ------------------------------------------------------------- data
-    per_pod = max(plan.batch_split)   # stacked shape pads to the max split
-    streams = [TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
-                           batch_size=per_pod, seed=7, shard=i,
-                           n_shards=args.pods)
-               for i in range(args.pods)]
+    def make_batches(active_plan):
+        """Per-pod stacked batch closure for the current plan (rebuilt after
+        every applied reconfiguration: pod count / batch split may change)."""
+        n_pods = len(active_plan.resource_plans)
+        per_pod = max(active_plan.batch_split)  # stacked shape pads to max
+        streams = [TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                               batch_size=per_pod, seed=7, shard=i,
+                               n_shards=n_pods)
+                   for i in range(n_pods)]
 
-    def batches(step: int) -> Dict[str, jnp.ndarray]:
-        parts = [s.batch(step) for s in streams]
-        stacked = {k: jnp.asarray(np.stack([p[k] for p in parts]))
-                   for k in parts[0]}
-        # elastic batch split: mask out the padding rows of trimmed pods
-        mask = np.zeros((args.pods, per_pod, args.seq), np.float32)
-        for i, b in enumerate(plan.batch_split):
-            mask[i, :b] = 1.0
-        stacked["mask"] = jnp.asarray(mask)
-        return stacked
+        def batches(step: int) -> Dict[str, jnp.ndarray]:
+            parts = [s.batch(step) for s in streams]
+            stacked = {k: jnp.asarray(np.stack([p[k] for p in parts]))
+                       for k in parts[0]}
+            # elastic batch split: mask out padding rows of trimmed pods
+            mask = np.zeros((n_pods, per_pod, args.seq), np.float32)
+            for i, b in enumerate(active_plan.batch_split):
+                mask[i, :b] = 1.0
+            stacked["mask"] = jnp.asarray(mask)
+            return stacked
+
+        return batches
+
+    batches = make_batches(plan)
 
     # ---------------------------------------------------------- trainer
     tcfg = TrainerConfig(n_pods=args.pods, optimizer=args.optimizer,
@@ -140,6 +188,16 @@ def main(argv=None):
     print(f"[train] {name}: {n_params:,} params/pod ({model_mb:.1f} MB), "
           f"{args.pods} pods, sync={args.sync}@{args.interval}")
 
+    # -------------------------------------------------------- elasticity
+    events = parse_events(args.events)
+    controller = ElasticityController(plan) if events else None
+    # several events may fire between two barriers: the reconfig applied at
+    # the barrier is composed against the plan that is actually live on the
+    # trainer (pending_base), not against the latest event's predecessor
+    pending_base = None     # live plan when the first un-applied event fired
+    pending_event = None
+    n_reconfigs = 0
+
     # ------------------------------------------------------------- loop
     t0 = time.time()
     losses = []
@@ -147,6 +205,47 @@ def main(argv=None):
         state, metrics = trainer.train_step(state, batches(step))
         state = trainer.maybe_sync(state, step, model_mb)
         losses.append(float(metrics["loss"]))
+
+        # control-plane events fire now; the reconfiguration they produce is
+        # applied at the next sync barrier via checkpointed pod re-stacking
+        if controller is not None:
+            for ev in events.pop(step, ()):
+                rc = controller.handle(ev)
+                if pending_base is None:
+                    pending_base = rc.old
+                pending_event = ev
+                print(f"[elasticity] {ev.kind} at step {step}: "
+                      f"diff {rc.diff.summary()}, "
+                      f"batch split {rc.new.batch_split}, "
+                      f"interval {rc.new.request.sync.interval}")
+            at_barrier = (trainer.cfg.sync.strategy == "asgd"
+                          or is_sync_step(trainer.cfg.sync, step))
+            if pending_base is not None and at_barrier:
+                pending = ReconfigPlan(
+                    event=pending_event, old=pending_base,
+                    new=controller.plan,
+                    diff=diff_plans(pending_base.resource_plans,
+                                    controller.plan.resource_plans))
+                if args.ckpt_dir:
+                    ckpt.save(f"{args.ckpt_dir}/pre_reconfig_{step + 1}",
+                              state.params, step=step + 1,
+                              metadata={"model": name,
+                                        "pods": trainer.cfg.n_pods})
+                trainer, state, applied = apply_reconfig(
+                    trainer, state, pending)
+                if applied:
+                    n_reconfigs += 1
+                    plan = pending.new
+                    batches = make_batches(plan)
+                    print(f"[elasticity] reconfig applied at barrier "
+                          f"step {step + 1}: {trainer.cfg.n_pods} pods, "
+                          f"sync interval "
+                          f"{trainer.cfg.sync.interval}")
+                else:
+                    print(f"[elasticity] empty diff at step {step + 1}: "
+                          f"no-op, state untouched")
+                pending_base = pending_event = None
+
         if args.log_every and (step + 1) % args.log_every == 0:
             dt = time.time() - t0
             print(f"step {step + 1:5d}  loss {losses[-1]:.4f}  "
@@ -162,6 +261,9 @@ def main(argv=None):
         "interval": args.interval, "steps": args.steps,
         "loss_first": losses[0], "loss_last": float(np.mean(losses[-5:])),
         "wan_traffic_mb": trainer.traffic_mb,
+        "reconfigs": n_reconfigs,
+        "final_pods": trainer.cfg.n_pods,
+        "final_interval": trainer.cfg.sync.interval,
         "wall_s": round(time.time() - t0, 1),
     }
     print(json.dumps(summary, indent=1))

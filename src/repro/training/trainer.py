@@ -27,8 +27,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sync import (SyncConfig, SyncState, apply_sync, init_sync_state,
-                             is_sync_step, on_step_gradients,
+from repro.core.sync import (SyncConfig, SyncState, apply_sync, grow_pods,
+                             init_sync_state, is_sync_step, on_step_gradients,
+                             resize_sync_state, shrink_pods,
                              traffic_per_step_mb)
 from repro.optim.optimizers import (Optimizer, clip_by_global_norm,
                                     constant_schedule, get_optimizer,
@@ -131,6 +132,24 @@ class Trainer:
     def train_step(self, state, batch):
         return self._train_step(state, batch)
 
+    # ------------------------------------------------------ elasticity
+    def reconfigure(self, state: TrainState, n_pods: int,
+                    keep: Optional[Tuple[int, ...]] = None,
+                    sync: Optional[SyncConfig] = None
+                    ) -> Tuple["Trainer", TrainState]:
+        """Apply a reconfiguration at a sync barrier: re-stack the leading pod
+        dimension of the whole train state (grow: mean-seeded joiners; shrink:
+        departed pods re-averaged into survivors, gradient accumulators
+        replay-accumulated) and return a fresh ``Trainer`` bound to the new
+        pod count / sync config, with WAN-traffic accounting carried over."""
+        import dataclasses
+        new_cfg = dataclasses.replace(self.cfg, n_pods=n_pods,
+                                      sync=sync or self.cfg.sync)
+        new_state = resize_train_state(new_cfg.sync, state, n_pods, keep=keep)
+        trainer = Trainer(self.loss_fn, self.init_fn, new_cfg)
+        trainer.traffic_mb = self.traffic_mb
+        return trainer, new_state
+
     def maybe_sync(self, state: TrainState, host_step: int,
                    model_mb: float = 0.0) -> TrainState:
         if self.cfg.n_pods > 1:
@@ -161,6 +180,56 @@ class Trainer:
             if log_every and (step + 1) % log_every == 0:
                 print(f"step {step + 1}: loss={history['loss'][-1]:.4f}")
         return state, history
+
+
+# ---------------------------------------------------------------------------
+# elasticity: pod re-stacking of the train state
+# ---------------------------------------------------------------------------
+
+
+def resize_train_state(sync_cfg: SyncConfig, state: TrainState, n_new: int,
+                       keep: Optional[Tuple[int, ...]] = None) -> TrainState:
+    """Grow/shrink the leading pod dimension of a :class:`TrainState`.
+
+    ``keep`` names the surviving old pod indices in their new order (defaults
+    to the first ``min(old, new)`` pods).  Parameters use mean-preserving
+    transforms; optimizer moments are mean-seeded on grow but plainly kept on
+    shrink (no shift — Adam's second moment must stay non-negative); the sync
+    state follows its strategy's semantics
+    (see ``repro.core.sync.resize_sync_state``).
+    """
+    n_old = jax.tree.leaves(state.params)[0].shape[0]
+    if keep is None:
+        keep = tuple(range(min(n_old, n_new)))
+    if len(keep) > n_new:
+        raise ValueError(f"keep={keep} longer than n_new={n_new}")
+    shrunk = len(keep) < n_old
+    params, opt = state.params, state.opt_state
+    if shrunk:
+        params = shrink_pods(params, keep, how="mean")
+        # survivors keep their own optimizer moments untouched: a mean shift
+        # could push sign-constrained leaves (Adam's second moment) negative
+        opt = shrink_pods(opt, keep, how="drop")
+    if n_new > len(keep):
+        params = grow_pods(params, n_new, how="mean")
+        opt = grow_pods(opt, n_new, how="mean")
+    sync_state = resize_sync_state(sync_cfg, state.sync_state, params,
+                                   keep=keep if shrunk else None)
+    return TrainState(params=params, opt_state=opt, sync_state=sync_state,
+                      step=state.step)
+
+
+def apply_reconfig(trainer: Trainer, state: TrainState, reconfig
+                   ) -> Tuple[Trainer, TrainState, bool]:
+    """Bridge a control-plane :class:`~repro.core.control_plane.ReconfigPlan`
+    onto a live trainer.  Returns ``(trainer, state, applied)`` — an empty
+    plan diff is a structural no-op and leaves both untouched."""
+    if reconfig.is_noop:
+        return trainer, state, False
+    keep, n_new = reconfig.pod_transition()
+    new_trainer, new_state = trainer.reconfigure(
+        state, n_new, keep=keep, sync=reconfig.new.request.sync)
+    return new_trainer, new_state, True
 
 
 # ---------------------------------------------------------------------------

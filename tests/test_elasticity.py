@@ -1,0 +1,416 @@
+"""Elasticity engine tests: event bus, controller re-planning, pod-resize
+state transforms, reconfig-at-barrier semantics, WAN event injection, and
+resharding-aware checkpoint restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core.control_plane import (CloudEvent, ElasticityController,
+                                      EventBus, TrainingRequest,
+                                      adapt_interval, build_training_plan)
+from repro.core.scheduler import CloudResources, load_power
+from repro.core.sync import (SyncConfig, grow_pods, init_sync_state,
+                             resize_sync_state, shrink_pods)
+from repro.core.wan import SimCloud, SimEvent, WANConfig, simulate
+from repro.training.trainer import (Trainer, TrainerConfig, apply_reconfig,
+                                    resize_train_state)
+
+CLOUDS = (CloudResources("sh", (("cascade", 6),), data_size=2.0),
+          CloudResources("cq", (("sky", 6),), data_size=1.0),
+          CloudResources("bj", (("sky", 3),), data_size=1.0))
+
+
+def _plan(sync=SyncConfig("asgd_ga", 8), clouds=CLOUDS, batch=96):
+    return build_training_plan(TrainingRequest(
+        model="m", clouds=clouds, sync=sync, global_batch=batch))
+
+
+# ------------------------------------------------------- state transforms
+
+
+def test_grow_pods_preserves_parameter_mean():
+    rng = np.random.default_rng(0)
+    tree = {"w": jnp.asarray(rng.normal(size=(3, 4, 2)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(3, 5)), jnp.float32)}
+    grown = grow_pods(tree, 5, how="mean")
+    for k in tree:
+        assert grown[k].shape == (5,) + tree[k].shape[1:]
+        np.testing.assert_allclose(np.mean(np.asarray(grown[k]), 0),
+                                   np.mean(np.asarray(tree[k]), 0), atol=1e-6)
+
+
+def test_shrink_pods_preserves_parameter_mean():
+    rng = np.random.default_rng(1)
+    tree = {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32)}
+    shrunk = shrink_pods(tree, (0, 2), how="mean")
+    assert shrunk["w"].shape == (2, 3)
+    np.testing.assert_allclose(np.mean(np.asarray(shrunk["w"]), 0),
+                               np.mean(np.asarray(tree["w"]), 0), atol=1e-6)
+
+
+def test_shrink_pods_sum_mode_replay_accumulates():
+    rng = np.random.default_rng(2)
+    buf = {"g": jnp.asarray(rng.normal(size=(4, 6)), jnp.float32)}
+    shrunk = shrink_pods(buf, (1, 3), how="sum")
+    np.testing.assert_allclose(np.sum(np.asarray(shrunk["g"]), 0),
+                               np.sum(np.asarray(buf["g"]), 0), atol=1e-5)
+
+
+def test_pod_transform_validation():
+    tree = {"w": jnp.zeros((3, 2))}
+    with pytest.raises(ValueError):
+        grow_pods(tree, 2)
+    with pytest.raises(ValueError):
+        shrink_pods(tree, ())
+    with pytest.raises(ValueError):
+        shrink_pods(tree, (0, 0))
+    with pytest.raises(ValueError):
+        shrink_pods(tree, (5,))
+
+
+def test_resize_sync_state_ga_buffer_total_preserved():
+    cfg = SyncConfig("asgd_ga", 4)
+    rng = np.random.default_rng(3)
+    params3 = {"w": jnp.asarray(rng.normal(size=(3, 2)), jnp.float32)}
+    state = init_sync_state(cfg, params3)
+    state = state._replace(ga_buffer=jax.tree.map(
+        lambda b: b + 1.0, state.ga_buffer))
+    params2 = shrink_pods(params3, (0, 2))
+    out = resize_sync_state(cfg, state, params2, keep=(0, 2))
+    np.testing.assert_allclose(
+        np.sum(np.asarray(out.ga_buffer["w"]), 0),
+        np.sum(np.asarray(state.ga_buffer["w"]), 0), atol=1e-5)
+    # growing seeds joiners with zero accumulation
+    params5 = grow_pods(params3, 5)
+    grown = resize_sync_state(cfg, state, params5)
+    np.testing.assert_allclose(np.asarray(grown.ga_buffer["w"][3:]), 0.0)
+
+
+# --------------------------------------------------- controller re-planning
+
+
+def test_cloud_left_replans_to_match_straggler():
+    plan = _plan()
+    ctl = ElasticityController(plan)
+    rc = ctl.handle(CloudEvent("cloud_left", region="cq", time_s=10.0))
+    plans = rc.new.resource_plans
+    assert [p.region for p in plans] == ["sh", "bj"]
+    ref = min(load_power(c.devices, c.data_size)
+              for c in CLOUDS if c.region != "cq")
+    for p in plans:
+        # within tolerance of the straggler: at or above the reference, and
+        # trimming one more unit anywhere would fall below it
+        assert p.load_power >= ref - 1e-9
+        cloud = next(c for c in CLOUDS if c.region == p.region)
+        for i, (dev, n) in enumerate(p.allocation):
+            if n == 1 and len(p.allocation) == 1:
+                continue   # cannot trim the last unit
+            trimmed = tuple((d, m - 1 if j == i else m)
+                            for j, (d, m) in enumerate(p.allocation) if
+                            (m - 1 if j == i else m) > 0)
+            assert load_power(trimmed, cloud.data_size) < ref - 1e-12
+
+
+def test_cloud_joined_extends_ring_and_split():
+    plan = _plan(clouds=CLOUDS[:2])
+    ctl = ElasticityController(plan)
+    rc = ctl.handle(CloudEvent(
+        "cloud_joined", time_s=5.0,
+        resources=CloudResources("bj", (("sky", 3),), data_size=1.0)))
+    assert rc.diff.added == ("bj",)
+    assert len(rc.new.ps_identities) == 3
+    assert rc.new.topology == ((0, 1), (1, 2), (2, 0))
+    assert sum(rc.new.batch_split) == 96
+    keep, n_new = rc.pod_transition()
+    assert keep == (0, 1) and n_new == 3
+
+
+def test_bandwidth_change_adapts_interval_not_plan():
+    plan = _plan()
+    ctl = ElasticityController(plan, ref_bandwidth_mbps=100.0)
+    rc = ctl.handle(CloudEvent("bandwidth_changed", bandwidth_mbps=25.0))
+    assert rc.diff.is_empty            # resource plans untouched
+    assert rc.new.request.sync.interval == 32
+    assert not rc.is_noop              # but the sync schedule changed
+    # recovery restores the base interval
+    rc2 = ctl.handle(CloudEvent("bandwidth_changed", bandwidth_mbps=100.0))
+    assert rc2.new.request.sync.interval == 8
+
+
+def test_straggler_event_rebalances_split():
+    plan = _plan()
+    ctl = ElasticityController(plan)
+    rc = ctl.handle(CloudEvent("straggler_detected", region="sh",
+                               slowdown=2.0))
+    sh_i = [p.region for p in rc.new.resource_plans].index("sh")
+    assert rc.new.batch_split[sh_i] < rc.old.batch_split[sh_i]
+
+
+def test_identical_event_is_noop():
+    plan = _plan()
+    ctl = ElasticityController(plan)
+    rc = ctl.handle(CloudEvent("bandwidth_changed", bandwidth_mbps=100.0))
+    assert rc.is_noop and rc.diff.is_empty
+
+
+def test_event_bus_routes_to_controller():
+    plan = _plan()
+    bus = EventBus()
+    ctl = ElasticityController(plan, bus=bus)
+    out = bus.publish(CloudEvent("cloud_left", region="bj", time_s=1.0))
+    assert len(out) == 1 and out[0].diff.removed == ("bj",)
+    assert ctl.plan is out[0].new
+    assert bus.history[0].kind == "cloud_left"
+    with pytest.raises(ValueError):
+        bus.subscribe("nope", lambda e: e)
+    with pytest.raises(ValueError):
+        CloudEvent("not_a_kind")
+
+
+def test_controller_refuses_removing_last_cloud():
+    plan = _plan(clouds=CLOUDS[:1])
+    ctl = ElasticityController(plan)
+    with pytest.raises(ValueError):
+        ctl.handle(CloudEvent("cloud_left", region="sh"))
+
+
+def test_adapt_interval_clamps():
+    sync = SyncConfig("asgd_ga", 8)
+    assert adapt_interval(sync, 8, 100.0, 1.0, max_interval=64).interval == 64
+    assert adapt_interval(sync, 8, 100.0, 1e6).interval == 1
+    assert adapt_interval(SyncConfig("asgd", 1), 1, 100.0, 25.0).interval == 1
+
+
+# ------------------------------------------------ trainer re-stacking
+
+
+def _toy_trainer(n_pods, sync, optimizer="momentum"):
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        loss = jnp.mean((pred - batch["y"]) ** 2)
+        return loss, {}
+
+    def init_fn(key):
+        return {"w": jax.random.normal(key, (4, 1)) * 0.1}
+
+    cfg = TrainerConfig(n_pods=n_pods, optimizer=optimizer, lr=0.05,
+                        sync=sync)
+    return Trainer(loss_fn, init_fn, cfg)
+
+
+def _toy_batch(n_pods, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n_pods, 8, 4)).astype(np.float32)
+    w = rng.normal(size=(4, 1)).astype(np.float32)
+    y = x @ w + 0.01 * rng.normal(size=(n_pods, 8, 1)).astype(np.float32)
+    return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+
+def test_trainer_shrink_preserves_param_mean_and_trains():
+    sync = SyncConfig("asgd_ga", 4)
+    trainer = _toy_trainer(3, sync)
+    state = trainer.init_state(jax.random.key(0), same_init=False)
+    for step in range(4):
+        state, _ = trainer.train_step(state, _toy_batch(3, step))
+        state = trainer.maybe_sync(state, step)
+    mean_before = np.mean(np.asarray(state.params["w"]), 0)
+
+    trainer2, state2 = trainer.reconfigure(state, 2, keep=(0, 2))
+    assert trainer2.cfg.n_pods == 2
+    assert state2.params["w"].shape[0] == 2
+    np.testing.assert_allclose(np.mean(np.asarray(state2.params["w"]), 0),
+                               mean_before, atol=1e-6)
+    # momentum state resized consistently with params
+    assert all(x.shape[0] == 2 for x in jax.tree.leaves(state2.opt_state))
+    # training continues and the loss stays finite
+    for step in range(4, 8):
+        state2, m = trainer2.train_step(state2, _toy_batch(2, step))
+        state2 = trainer2.maybe_sync(state2, step)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_trainer_grow_preserves_param_mean():
+    sync = SyncConfig("ama", 2)
+    trainer = _toy_trainer(2, sync)
+    state = trainer.init_state(jax.random.key(1), same_init=False)
+    mean_before = np.mean(np.asarray(state.params["w"]), 0)
+    trainer2, state2 = trainer.reconfigure(state, 4)
+    assert state2.params["w"].shape[0] == 4
+    np.testing.assert_allclose(np.mean(np.asarray(state2.params["w"]), 0),
+                               mean_before, atol=1e-6)
+    state2, m = trainer2.train_step(state2, _toy_batch(4))
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_apply_reconfig_noop_on_empty_diff():
+    plan = _plan()
+    ctl = ElasticityController(plan)
+    rc = ctl.handle(CloudEvent("bandwidth_changed", bandwidth_mbps=100.0))
+    assert rc.is_noop
+    trainer = _toy_trainer(3, SyncConfig("asgd_ga", 8))
+    state = trainer.init_state(jax.random.key(2))
+    out_trainer, out_state, applied = apply_reconfig(trainer, state, rc)
+    assert not applied
+    assert out_trainer is trainer and out_state is state
+
+
+def test_apply_reconfig_cloud_left_restacks():
+    plan = _plan()
+    ctl = ElasticityController(plan)
+    rc = ctl.handle(CloudEvent("cloud_left", region="cq", time_s=3.0))
+    trainer = _toy_trainer(3, SyncConfig("asgd_ga", 8))
+    state = trainer.init_state(jax.random.key(3), same_init=False)
+    mean_before = np.mean(np.asarray(state.params["w"]), 0)
+    out_trainer, out_state, applied = apply_reconfig(trainer, state, rc)
+    assert applied and out_trainer.cfg.n_pods == 2
+    np.testing.assert_allclose(np.mean(np.asarray(out_state.params["w"]), 0),
+                               mean_before, atol=1e-6)
+
+
+def test_resize_train_state_rejects_bad_keep():
+    trainer = _toy_trainer(3, SyncConfig("sma", 4))
+    state = trainer.init_state(jax.random.key(4))
+    with pytest.raises(ValueError):
+        resize_train_state(trainer.cfg.sync, state, 1, keep=(0, 1))
+
+
+# -------------------------------------------------- WAN event injection
+
+
+def _sim(events=(), sync=SyncConfig("asgd_ga", 8)):
+    clouds = [SimCloud("sh", iter_time_s=0.12, units=12),
+              SimCloud("cq", iter_time_s=0.08, units=12)]
+    return simulate(clouds, sync, n_iters=200, model_mb=0.6,
+                    wan=WANConfig(seed=1), events=events)
+
+
+def test_simulate_no_events_unchanged():
+    assert _sim().makespan_s == _sim(events=()).makespan_s
+
+
+def test_bandwidth_collapse_slows_run():
+    slow = _sim([SimEvent(5.0, "bandwidth_changed", bandwidth_mbps=5.0)])
+    assert slow.makespan_s > _sim().makespan_s
+
+
+def test_cloud_left_releases_resources():
+    left = _sim([SimEvent(5.0, "cloud_left", region="cq")])
+    base = _sim()
+    assert left.total_cost < base.total_cost
+    cq = next(c for c in left.clouds if c.region == "cq")
+    sh = next(c for c in left.clouds if c.region == "sh")
+    assert cq.total_s < sh.total_s       # departed early, billing stopped
+
+def test_reconfig_event_pays_pause_and_swaps_schedule():
+    rec = _sim([SimEvent(5.0, "reconfig",
+                         clouds=[SimCloud("sh", 0.06, units=24)],
+                         sync=SyncConfig("asgd_ga", 16), pause_s=3.0)])
+    assert rec.n_reconfigs == 1
+    assert rec.sync_cfg.interval == 16
+    assert all(c.reconfig_s == 3.0 for c in rec.clouds
+               if c.region == "sh")
+
+
+def test_cloud_joined_mid_simulation():
+    joined = _sim([SimEvent(5.0, "cloud_joined",
+                            cloud=SimCloud("bj", 0.1, units=6))])
+    assert sorted(c.region for c in joined.clouds) == ["bj", "cq", "sh"]
+    bj = next(c for c in joined.clouds if c.region == "bj")
+    assert bj.total_s < joined.makespan_s  # born late: billed a shorter life
+
+
+# ------------------------------------------- resharding-aware checkpoints
+
+
+def test_checkpoint_restore_pod_grow_and_shrink(tmp_path):
+    rng = np.random.default_rng(5)
+    tree3 = {"w": jnp.asarray(rng.normal(size=(3, 4)), jnp.float32)}
+    ckpt.save(str(tmp_path), tree3, step=11)
+
+    like5 = {"w": jnp.zeros((5, 4), jnp.float32)}
+    out5, step = ckpt.restore(str(tmp_path), like5, pod_resize="mean")
+    assert step == 11 and out5["w"].shape == (5, 4)
+    np.testing.assert_allclose(np.mean(np.asarray(out5["w"]), 0),
+                               np.mean(np.asarray(tree3["w"]), 0), atol=1e-6)
+
+    like2 = {"w": jnp.zeros((2, 4), jnp.float32)}
+    out2, _ = ckpt.restore(str(tmp_path), like2, pod_resize="mean")
+    np.testing.assert_allclose(np.mean(np.asarray(out2["w"]), 0),
+                               np.mean(np.asarray(tree3["w"]), 0), atol=1e-6)
+
+    # without pod_resize the mismatch still raises (original contract)
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), like5)
+
+    # trailing-dim mismatches are never silently resized
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), {"w": jnp.zeros((3, 7), jnp.float32)},
+                     pod_resize="mean")
+
+
+def test_trainer_shrink_keeps_adam_second_moment_nonnegative():
+    """Survivors' optimizer moments are kept, not mean-shifted: a shift could
+    push Adam's second moment negative -> NaN via sqrt on the next update."""
+    trainer = _toy_trainer(3, SyncConfig("asgd_ga", 4), optimizer="adamw")
+    state = trainer.init_state(jax.random.key(5), same_init=False)
+    for step in range(3):
+        state, _ = trainer.train_step(state, _toy_batch(3, step))
+    trainer2, state2 = trainer.reconfigure(state, 2, keep=(0, 2))
+    nu_leaves = [np.asarray(x) for x in jax.tree.leaves(state2.opt_state)]
+    assert all(np.all(np.isfinite(x)) for x in nu_leaves)
+    # adamw state is (mu, nu, count); nu (second moment) must stay >= 0
+    mu, nu, _ = state2.opt_state
+    assert all(np.all(np.asarray(x) >= 0.0) for x in jax.tree.leaves(nu))
+    state2, m = trainer2.train_step(state2, _toy_batch(2, 9))
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_launcher_composes_events_between_barriers():
+    """Two events between two barriers apply as ONE reconfiguration diffed
+    against the plan live on the trainer, so the pod transition is computed
+    from the right base (a cloud_left followed by a straggler event must
+    still shrink the pod dimension)."""
+    from repro.launch.train import main
+    summary = main(["--preset", "tiny", "--pods", "3", "--steps", "20",
+                    "--batch", "6", "--seq", "16", "--sync", "asgd_ga",
+                    "--interval", "16", "--log-every", "0",
+                    "--events", "cloud_left:pod1@3,straggler:pod0x2.0@5"])
+    assert summary["final_pods"] == 2
+    assert summary["reconfigs"] == 1          # composed, applied once
+    assert np.isfinite(summary["loss_last"])
+
+
+def test_wan_leave_then_rejoin_bills_both_lives():
+    clouds = [SimCloud("sh", iter_time_s=0.1, units=10),
+              SimCloud("cq", iter_time_s=0.1, units=10)]
+    base = simulate(clouds, SyncConfig("ama", 4), n_iters=400, model_mb=0.5,
+                    wan=WANConfig(seed=2, fluctuation=0.0))
+    rejoin = simulate(
+        clouds, SyncConfig("ama", 4), n_iters=400, model_mb=0.5,
+        wan=WANConfig(seed=2, fluctuation=0.0),
+        events=[SimEvent(10.0, "cloud_left", region="cq"),
+                SimEvent(30.0, "cloud_joined",
+                         cloud=SimCloud("cq", iter_time_s=0.1, units=10))])
+    cq = next(c for c in rejoin.clouds if c.region == "cq")
+    cq_base = next(c for c in base.clouds if c.region == "cq")
+    # offline gap is not billed: cheaper and shorter-lived than the base run,
+    # but both lives count (first life's ~10s of compute is not erased)
+    assert cq.total_s < cq_base.total_s
+    assert cq.cost < cq_base.cost
+    assert cq.total_s > rejoin.makespan_s - 30.0 - 1e-6
+    assert cq.compute_s > 10.0
+
+
+# ------------------------------------------------------ benchmark scenario
+
+
+def test_elasticity_benchmark_elastic_beats_static(tmp_path, monkeypatch):
+    import benchmarks.elasticity as E
+    monkeypatch.setattr(E, "OUT_DIR", str(tmp_path))
+    monkeypatch.setattr(E, "OUT_PATH", str(tmp_path / "BENCH_elasticity.json"))
+    r = E.bench_elasticity(seed=0)
+    assert r["speedup"] > 1.0
+    assert r["cost_reduction"] > 0.0
+    assert (tmp_path / "BENCH_elasticity.json").exists()

@@ -1,9 +1,19 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+The whole module is skipped cleanly when hypothesis is not installed (it is
+an optional extra — ``pip install -e '.[property]'``), so the tier-1 command
+collects without it.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro.core.scheduler import (CloudResources, load_power,
+                                  optimal_matching, plan_batch_split)
 from repro.core.sync import SyncConfig, apply_sync, init_sync_state
 from repro.kernels import ref
 from repro.models.layers import rmsnorm, rmsnorm_init, _softcap
@@ -120,6 +130,89 @@ def test_ssd_linear_in_x(seed):
     y12, _ = ssd_chunked(2.0 * x1 + x2, a, Bm, Cm, chunk=8)
     np.testing.assert_allclose(np.asarray(y12), np.asarray(2 * y1 + y2),
                                atol=1e-3)
+
+
+# --------------------------------------------------- scheduler (Algorithm 1)
+# (moved from test_scheduler.py so the tier-1 run collects hypothesis-free)
+
+_dev = st.sampled_from(["icelake", "cascade", "skylake", "t4", "v100"])
+
+
+@st.composite
+def _sched_clouds(draw):
+    n = draw(st.integers(2, 4))
+    out = []
+    for i in range(n):
+        dev = draw(_dev)
+        units = draw(st.integers(1, 6))
+        data = draw(st.floats(0.5, 4.0))
+        out.append(CloudResources(f"c{i}", ((dev, units),), data_size=data))
+    return out
+
+
+@settings(max_examples=40, deadline=None)
+@given(_sched_clouds())
+def test_plan_never_exceeds_available(clouds):
+    plans = optimal_matching(clouds)
+    for c, p in zip(clouds, plans):
+        avail = dict(c.devices)
+        for dev, n in p.allocation:
+            assert 1 <= n <= avail[dev]
+
+
+@settings(max_examples=40, deadline=None)
+@given(_sched_clouds())
+def test_plan_lp_at_least_straggler(clouds):
+    """No planned cloud becomes a worse straggler than the reference."""
+    full = [load_power(c.devices, c.data_size) for c in clouds]
+    ref_lp = min(full)
+    plans = optimal_matching(clouds)
+    for p in plans:
+        assert p.load_power >= ref_lp - 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(_sched_clouds())
+def test_plan_weakly_reduces_units(clouds):
+    plans = optimal_matching(clouds)
+    for c, p in zip(clouds, plans):
+        assert p.units <= sum(n for _, n in c.devices)
+
+
+@settings(max_examples=40, deadline=None)
+@given(_sched_clouds())
+def test_straggler_keeps_full_allocation(clouds):
+    full = [load_power(c.devices, c.data_size) for c in clouds]
+    i = full.index(min(full))
+    plans = optimal_matching(clouds)
+    assert plans[i].allocation == clouds[i].devices
+
+
+@settings(max_examples=40, deadline=None)
+@given(_sched_clouds())
+def test_incremental_matching_equals_full(clouds):
+    """The elasticity engine's incremental path is output-identical to a
+    fresh Algorithm 1 run, whatever previous plan it is given."""
+    from repro.core.scheduler import incremental_matching
+    fresh = optimal_matching(clouds)
+    # warm-start from a plan for a perturbed picture (first cloud removed)
+    prev = optimal_matching(clouds[1:]) if len(clouds) > 1 else None
+    inc = incremental_matching(clouds, prev=prev)
+    assert [p.allocation for p in inc] == [p.allocation for p in fresh]
+    # warm-start from the exact same picture reuses everything
+    inc2 = incremental_matching(clouds, prev=fresh)
+    assert [p.allocation for p in inc2] == [p.allocation for p in fresh]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 512), st.lists(st.floats(0.1, 10.0), min_size=2,
+                                     max_size=8))
+def test_batch_split_sums_and_positive(batch, powers):
+    if batch < len(powers):
+        batch = len(powers)
+    split = plan_batch_split(batch, powers)
+    assert sum(split) == batch
+    assert all(s >= 1 for s in split)
 
 
 @settings(max_examples=20, deadline=None)

@@ -1,11 +1,14 @@
-"""Elastic scheduler tests (paper §III.B, Table I/II/IV) + hypothesis
-property tests on Algorithm 1's invariants."""
+"""Elastic scheduler tests (paper §III.B, Table I/II/IV).
+
+The hypothesis property tests on Algorithm 1's invariants live in
+test_property.py (optional dependency, guarded with importorskip).
+"""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.scheduler import (CATALOG, CloudResources, load_power,
+from repro.core.scheduler import (CATALOG, CloudResources, diff_plans,
+                                  incremental_matching, load_power,
                                   optimal_matching, plan_batch_split,
                                   predict_times, waiting_fraction)
 
@@ -66,72 +69,37 @@ def test_even_setup_keeps_everything():
     assert all(p.allocation == (("cascade", 4),) for p in plans)
 
 
-# --------------------------------------------------- hypothesis properties
-
-_dev = st.sampled_from(["icelake", "cascade", "skylake", "t4", "v100"])
-
-
-@st.composite
-def _clouds(draw):
-    n = draw(st.integers(2, 4))
-    out = []
-    for i in range(n):
-        dev = draw(_dev)
-        units = draw(st.integers(1, 6))
-        data = draw(st.floats(0.5, 4.0))
-        out.append(CloudResources(f"c{i}", ((dev, units),), data_size=data))
-    return out
-
-
-@settings(max_examples=40, deadline=None)
-@given(_clouds())
-def test_plan_never_exceeds_available(clouds):
-    plans = optimal_matching(clouds)
-    for c, p in zip(clouds, plans):
-        avail = dict(c.devices)
-        for dev, n in p.allocation:
-            assert 1 <= n <= avail[dev]
-
-
-@settings(max_examples=40, deadline=None)
-@given(_clouds())
-def test_plan_lp_at_least_straggler(clouds):
-    """No planned cloud becomes a worse straggler than the reference."""
-    full = [load_power(c.devices, c.data_size) for c in clouds]
-    ref = min(full)
-    plans = optimal_matching(clouds)
-    for p in plans:
-        assert p.load_power >= ref - 1e-9
-
-
-@settings(max_examples=40, deadline=None)
-@given(_clouds())
-def test_plan_weakly_reduces_units(clouds):
-    plans = optimal_matching(clouds)
-    for c, p in zip(clouds, plans):
-        assert p.units <= sum(n for _, n in c.devices)
-
-
-@settings(max_examples=40, deadline=None)
-@given(_clouds())
-def test_straggler_keeps_full_allocation(clouds):
-    full = [load_power(c.devices, c.data_size) for c in clouds]
-    i = full.index(min(full))
-    plans = optimal_matching(clouds)
-    assert plans[i].allocation == clouds[i].devices
-
-
-@settings(max_examples=40, deadline=None)
-@given(st.integers(2, 512), st.lists(st.floats(0.1, 10.0), min_size=2,
-                                     max_size=8))
-def test_batch_split_sums_and_positive(batch, powers):
-    if batch < len(powers):
-        batch = len(powers)
-    split = plan_batch_split(batch, powers)
-    assert sum(split) == batch
-    assert all(s >= 1 for s in split)
-
-
 def test_batch_split_proportional():
     split = plan_batch_split(90, [2.0, 1.0])
     assert split == [60, 30]
+
+
+# ------------------------------------------- incremental re-matching + diff
+
+
+def test_incremental_matching_reuses_unchanged_clouds():
+    clouds = _paper_case3()
+    fresh = optimal_matching(clouds)
+    inc = incremental_matching(clouds, prev=fresh)
+    assert [p.allocation for p in inc] == [p.allocation for p in fresh]
+    assert diff_plans(fresh, inc).is_empty
+
+
+def test_incremental_matching_after_departure():
+    sh, cq = _paper_case3()
+    bj = CloudResources("bj", (("sky", 3),), data_size=1.0)
+    before = optimal_matching([sh, cq, bj])
+    after = incremental_matching([sh, cq], prev=before)
+    assert [p.allocation for p in after] == \
+        [p.allocation for p in optimal_matching([sh, cq])]
+    d = diff_plans(before, after)
+    assert d.removed == ("bj",) and not d.added
+
+
+def test_diff_plans_reports_resizes():
+    a = optimal_matching(_paper_case3())
+    sh2 = CloudResources("sh", (("cascade", 3),), data_size=2.0)
+    b = incremental_matching([sh2, _paper_case3()[1]], prev=a)
+    d = diff_plans(a, b)
+    assert any(r[0] == "sh" for r in d.resized)
+    assert "no-op" not in d.summary()
