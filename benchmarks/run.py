@@ -52,6 +52,13 @@ def main() -> None:
          lambda r: f"speedup={r['speedup']} "
                    f"cost_red={r['cost_reduction']}")
 
+    from benchmarks import wan_codec as W
+    _run("wan_codec", W.run_bench,          # also writes BENCH_wan_codec.json
+         lambda r: f"enc_speedup={r['encode_kernel']['encode_speedup']}x "
+                   f"wire_red={r['bytes_on_wire']['reduction_vs_dense']}x "
+                   f"ef_frac="
+                   f"{r['ef_convergence']['ef_loss_reduction_frac_of_dense']}")
+
     # roofline from the dry-run artifacts (skips silently if none exist yet)
     def _roofline():
         from benchmarks import roofline as R

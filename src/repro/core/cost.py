@@ -20,6 +20,9 @@ class CostReport:
     waiting_cost: float            # cost attributable to straggler waiting
     cost_by_region: Dict[str, float]
     wait_fraction_by_region: Dict[str, float]
+    traffic_mb: float = 0.0        # bytes-on-wire across all regions (WAN
+    #   egress is already billed into per-region cost by the simulator when
+    #   WANConfig.traffic_cost_per_gb is set; this is the volume itself)
 
     def reduction_vs(self, baseline: "CostReport") -> float:
         return 1.0 - self.total_cost / baseline.total_cost
@@ -28,6 +31,13 @@ class CostReport:
         if baseline.waiting_cost == 0:
             return 0.0
         return 1.0 - self.waiting_cost / baseline.waiting_cost
+
+    def traffic_reduction_vs(self, baseline: "CostReport") -> float:
+        """Bytes-on-wire reduction — how the fused WAN codec shows up in the
+        elasticity cost model (``SyncConfig.payload_mb`` drives both)."""
+        if baseline.traffic_mb == 0:
+            return 0.0
+        return 1.0 - self.traffic_mb / baseline.traffic_mb
 
 
 def cost_report(result: SimResult, units: Dict[str, int],
@@ -42,4 +52,5 @@ def cost_report(result: SimResult, units: Dict[str, int],
         waiting_cost=waiting,
         cost_by_region=by_region,
         wait_fraction_by_region=wait_frac,
+        traffic_mb=result.total_traffic_mb,
     )

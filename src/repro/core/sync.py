@@ -34,6 +34,31 @@ WAN-optimization family but does not implement it); see
 ``repro.kernels.topk_compress``.  It compounds with ASGD-GA's frequency
 reduction to cut inter-pod bytes further.
 
+With ``quantize_int8`` the top-k path upgrades to the **fused WAN codec**
+(``repro.kernels.wan_codec``), the full payload pipeline:
+
+  bucket -> top-k -> int8 -> ring -> decode -> error feedback
+
+- **bucket**: the accumulated-gradient pytree is packed once into a single
+  contiguous ``(n_pods, N)`` buffer, so compression is a handful of fused
+  dispatches instead of one per leaf.
+- **top-k + int8**: a single-pass Pallas kernel selects the block-local
+  top-k and quantizes the winners to int8 with per-block scales — payload
+  bytes drop to ``~0.75 * compress_topk`` of dense fp32 (int8 value + u16
+  local index per kept element, vs the fp32+int32 pairs of the unquantized
+  path); see ``SyncConfig.payload_mb``.
+- **ring**: the *compact* (q, idx, scales) triple is what rolls over the
+  pod axis (collective-permute) — never the dense buffer.  With
+  ``overlap_chunks > 1`` the bucket is split on codec-block boundaries and
+  the permute of chunk i is data-independent of the encode of chunk i+1,
+  so the WAN transfer hides behind the remaining compression work (TAAR's
+  overlap, arXiv:2404.11352); chunking is bit-exact vs the unchunked path.
+- **error feedback** (``error_feedback=True``): each pod keeps the residual
+  ``message - decode(encode(message))`` — everything top-k dropped plus the
+  quantization rounding — and re-injects it into the next interval's
+  message (EF-SGD semantics), so aggressive compression stops costing
+  convergence instead of silently discarding gradient mass.
+
 Because the representation is pure ``jnp`` on a stacked dimension, the same
 code runs (a) multi-pod on TPU via sharding, and (b) as a faithful multi-cloud
 *emulation* on a single CPU device — which is how the convergence-parity
@@ -63,29 +88,72 @@ class SyncConfig:
     compress_topk: float = 0.0     # 0/1 = dense; else fraction of entries shipped
     ga_lr_scale: float = 1.0       # LR scale for the receiver-side SGD update
     asp_threshold: float = 0.01    # ASP: relative-significance threshold
+    quantize_int8: bool = False    # fused WAN codec: int8 payload quantization
+    error_feedback: bool = False   # EF-SGD: re-inject compression residual
+    codec_block: int = 4096        # block-local top-k block size (codec path)
+    overlap_chunks: int = 1        # >1: pipeline ring permute with encode
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
             raise ValueError(f"unknown strategy {self.strategy!r}")
         if self.interval < 1:
             raise ValueError("interval must be >= 1")
+        if self.overlap_chunks < 1:
+            raise ValueError("overlap_chunks must be >= 1")
+        if self.codec_block < 128 or self.codec_block > (1 << 16):
+            raise ValueError("codec_block must be in [128, 65536] (local "
+                             "indices ship as u16)")
+        if self.error_feedback and not self.quantize_int8:
+            raise ValueError("error_feedback requires the fused codec "
+                             "(quantize_int8=True)")
+        if self.quantize_int8 and not (
+                self.strategy == "asgd_ga"
+                and 0.0 < self.compress_topk < 1.0):
+            # refuse silently-inert flags: a run configured with the codec
+            # but without a top-k fraction (or on a non-gradient strategy)
+            # would train dense while its summary claims int8/EF
+            raise ValueError(
+                "quantize_int8 requires strategy='asgd_ga' with "
+                "0 < compress_topk < 1 (the codec compresses shipped "
+                "accumulated gradients)")
+        if self.overlap_chunks > 1 and not self.uses_codec:
+            # same rule: chunk pipelining only exists on the codec path
+            raise ValueError(
+                "overlap_chunks > 1 requires the fused codec "
+                "(strategy='asgd_ga', 0 < compress_topk < 1, "
+                "quantize_int8=True)")
 
     @property
     def sends_gradients(self) -> bool:
         return self.strategy in ("asgd", "asgd_ga")
 
+    @property
+    def uses_codec(self) -> bool:
+        """True when sync rounds run the fused bucket->top-k->int8 codec."""
+        return (self.strategy == "asgd_ga" and self.quantize_int8
+                and 0.0 < self.compress_topk < 1.0)
+
     def payload_mb(self, model_mb: float,
                    measured_frac: Optional[float] = None) -> float:
         """Per-sync WAN payload per pod (drives the simulator & roofline).
-        For ASP pass the measured significant fraction (runtime-dependent);
-        a nominal 30% is assumed otherwise (Gaia reports 10-50%)."""
-        frac = 1.0
-        if 0.0 < self.compress_topk < 1.0 and self.strategy == "asgd_ga":
-            frac = self.compress_topk
+
+        Sparse fp32 ships (fp32 value, int32 index) pairs: ``2 * frac`` of
+        dense.  The fused codec ships (int8 value, u16 block-local index)
+        pairs plus one fp32 scale per ``codec_block`` elements:
+        ``0.75 * frac + 1/codec_block`` of dense — >=8x below dense fp32
+        whenever ``frac < (1/8 - 1/codec_block) / 0.75`` (frac <= 0.166 at
+        the default block).  For ASP pass the measured significant fraction
+        (runtime-dependent); a nominal 30% is assumed otherwise (Gaia
+        reports 10-50%)."""
         if self.strategy == "asp":
             frac = measured_frac if measured_frac is not None else 0.3
-        factor = 2 * frac if frac < 1.0 else 1.0   # sparse ships (value, index)
-        return model_mb * factor
+            return model_mb * (2 * frac if frac < 1.0 else 1.0)
+        if 0.0 < self.compress_topk < 1.0 and self.strategy == "asgd_ga":
+            frac = self.compress_topk
+            if self.quantize_int8:
+                return model_mb * (frac * 3.0 / 4.0 + 1.0 / self.codec_block)
+            return model_mb * 2 * frac
+        return model_mb
 
 
 class SyncState(NamedTuple):
@@ -93,10 +161,18 @@ class SyncState(NamedTuple):
     #   reference params at the last sync (ASP), leading pod dim
     steps_since_sync: jnp.ndarray  # scalar int32
     significant_frac: jnp.ndarray  # ASP: fraction shipped at the last sync
+    ef_residual: jnp.ndarray
+    #   error-feedback residual, flat (n_pods, N) in bucket order (what the
+    #   codec dropped + quantization error, re-injected next sync); (n_pods,
+    #   0) when the codec/EF path is off.  Deliberately no default: a
+    #   defaulted jnp array would be built at import time AND let stale
+    #   3-field constructor calls silently produce a wrong pod dim —
+    #   ``init_sync_state`` is the way to build one
 
 
 def init_sync_state(cfg: SyncConfig, stacked_params: Pytree) -> SyncState:
     """``stacked_params`` leaves have the leading pod dimension."""
+    n_pods = jax.tree.leaves(stacked_params)[0].shape[0]
     if cfg.strategy == "asgd_ga":
         buf = jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), stacked_params)
@@ -106,9 +182,12 @@ def init_sync_state(cfg: SyncConfig, stacked_params: Pytree) -> SyncState:
     else:
         buf = jax.tree.map(lambda p: jnp.zeros((0,), jnp.float32),
                            stacked_params)
+    n_ef = (sum(x.size for x in jax.tree.leaves(stacked_params)) // n_pods
+            if (cfg.uses_codec and cfg.error_feedback) else 0)
     return SyncState(ga_buffer=buf,
                      steps_since_sync=jnp.zeros((), jnp.int32),
-                     significant_frac=jnp.ones((), jnp.float32))
+                     significant_frac=jnp.ones((), jnp.float32),
+                     ef_residual=jnp.zeros((n_pods, n_ef), jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -143,6 +222,84 @@ def on_step_gradients(cfg: SyncConfig, grads: Pytree, state: SyncState
 # ---------------------------------------------------------------------------
 # sync point (a separate jitted function, invoked every K host steps)
 # ---------------------------------------------------------------------------
+
+
+# --------------------------------------------------- bucketed WAN codec path
+
+
+def _pack_stacked(tree: Pytree) -> jnp.ndarray:
+    """Pack a stacked pytree into one contiguous (n_pods, N) bucket buffer.
+
+    One concatenate amortizes the per-leaf compression dispatch the legacy
+    path pays; leaf order (jax.tree.leaves) defines the bucket layout and is
+    the order ``ef_residual`` is stored in."""
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate(
+        [x.reshape(x.shape[0], -1).astype(jnp.float32) for x in leaves],
+        axis=1)
+
+
+def _unpack_stacked(flat: jnp.ndarray, like: Pytree) -> Pytree:
+    """Inverse of :func:`_pack_stacked` against a reference pytree."""
+    leaves, treedef = jax.tree.flatten(like)
+    out, off = [], 0
+    for x in leaves:
+        size = int(np_prod(x.shape[1:]))
+        out.append(flat[:, off:off + size].reshape(x.shape))
+        off += size
+    return jax.tree.unflatten(treedef, out)
+
+
+def _codec_ship_flat(cfg: SyncConfig, flat: jnp.ndarray,
+                     want_local: bool) -> Tuple[jnp.ndarray,
+                                                Optional[jnp.ndarray]]:
+    """Encode -> ring-permute the compact payload -> decode, chunk-pipelined.
+
+    ``flat``: (n_pods, N).  Returns (peer dense, local dense or None); the
+    local decode is what this pod's peer will reconstruct — needed for the
+    error-feedback residual.
+
+    Chunks split on codec-block boundaries, so the chunked selection is
+    bit-identical to the unchunked one.  Within the trace, the permute of
+    chunk i has no data dependence on the encode of chunk i+1 — on a real
+    multi-pod mesh the XLA latency-hiding scheduler overlaps the WAN
+    transfer of one chunk with the compression of the next (and with the
+    tail of local compute), which is what ``SyncConfig.overlap_chunks``
+    models in the WAN simulator.
+    """
+    from repro.kernels import ops as kops
+    from repro.kernels.wan_codec import k_per_block
+
+    n_pods, n_total = flat.shape
+    block = min(cfg.codec_block, max(1, n_total))
+    k_block = k_per_block(block, cfg.compress_topk)
+    nb = -(-n_total // block)
+    n_chunks = max(1, min(cfg.overlap_chunks, nb))
+    blocks_per_chunk = -(-nb // n_chunks)
+    step = blocks_per_chunk * block
+
+    peer_parts, local_parts = [], []
+    for lo in range(0, n_total, step):
+        seg = flat[:, lo:lo + step]
+        m = seg.shape[1]
+        q, idx, scales = jax.vmap(
+            lambda f: kops.wan_encode(f, k_block, block=block))(seg)
+        if want_local:
+            local_parts.append(jax.vmap(
+                lambda a, i, s: kops.wan_decode(a, i, s, m, block=block)
+            )(q, idx, scales))
+        # only the compact triple crosses the pod axis (collective-permute);
+        # indices travel as u16 — they are block-local (< codec_block <=
+        # 65536), and this is the wire format payload_mb bills for
+        q = jnp.roll(q, cfg.peer_shift, axis=0)
+        idx16 = jnp.roll(idx.astype(jnp.uint16), cfg.peer_shift, axis=0)
+        scales = jnp.roll(scales, cfg.peer_shift, axis=0)
+        peer_parts.append(jax.vmap(
+            lambda a, i, s: kops.wan_decode(a, i, s, m, block=block)
+        )(q, idx16.astype(jnp.int32), scales))
+    peer = jnp.concatenate(peer_parts, axis=1)
+    local = jnp.concatenate(local_parts, axis=1) if want_local else None
+    return peer, local
 
 
 def _ship_ring(cfg: SyncConfig, tree: Pytree) -> Pytree:
@@ -196,13 +353,27 @@ def apply_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
     if cfg.strategy == "asgd_ga":
         denom = jnp.maximum(state.steps_since_sync, 1).astype(jnp.float32)
         avg = jax.tree.map(lambda b: b / denom, state.ga_buffer)
-        peer = _ship_ring(cfg, avg)
+        new_resid = state.ef_residual
+        if cfg.uses_codec:
+            # fused codec: bucket -> (+ EF residual) -> top-k -> int8 ->
+            # ring -> decode; the residual keeps everything the codec
+            # dropped for re-injection at the next sync (EF-SGD)
+            flat = _pack_stacked(avg)
+            if cfg.error_feedback:
+                flat = flat + state.ef_residual
+            peer_flat, local_flat = _codec_ship_flat(
+                cfg, flat, want_local=cfg.error_feedback)
+            peer = _unpack_stacked(peer_flat, avg)
+            if cfg.error_feedback:
+                new_resid = flat - local_flat
+        else:
+            peer = _ship_ring(cfg, avg)
         scale = jnp.asarray(lr, jnp.float32) * cfg.ga_lr_scale
         params = jax.tree.map(
             lambda p, g: (p.astype(jnp.float32) - scale * g).astype(p.dtype),
             params, peer)
         buf = jax.tree.map(jnp.zeros_like, state.ga_buffer)
-        return params, zero._replace(ga_buffer=buf)
+        return params, zero._replace(ga_buffer=buf, ef_residual=new_resid)
 
     if cfg.strategy == "asp":
         # Gaia-style Approximate Synchronous Parallel: ship only parameter
@@ -229,7 +400,8 @@ def apply_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
         new_ref = jax.tree.map(lambda p: p.astype(jnp.float32), params)
         return params, SyncState(ga_buffer=new_ref,
                                  steps_since_sync=jnp.zeros((), jnp.int32),
-                                 significant_frac=frac)
+                                 significant_frac=frac,
+                                 ef_residual=state.ef_residual)
 
     if cfg.strategy == "ama":
         peer = _ship_ring(cfg, params)
@@ -358,12 +530,18 @@ def resize_sync_state(cfg: SyncConfig, state: SyncState, new_params: Pytree,
     if cfg.strategy == "asgd_ga":
         buf = state.ga_buffer
         n_old = jax.tree.leaves(buf)[0].shape[0] if jax.tree.leaves(buf) else 0
+        # the EF residual is accumulator-like (sum semantics): departed
+        # pods' un-retransmitted error is replay-distributed, joiners start
+        # with none
+        resid = state.ef_residual
         if keep is not None and len(keep) < n_old:
             buf = shrink_pods(buf, keep, how="sum")
+            resid = shrink_pods([resid], keep, how="sum")[0]
             n_old = len(keep)
         if n_new > n_old:
             buf = grow_pods(buf, n_new, how="zeros")
-        return state._replace(ga_buffer=buf)
+            resid = grow_pods([resid], n_new, how="zeros")[0]
+        return state._replace(ga_buffer=buf, ef_residual=resid)
     fresh = init_sync_state(cfg, new_params)
     return fresh._replace(steps_since_sync=state.steps_since_sync,
                           significant_frac=state.significant_frac)

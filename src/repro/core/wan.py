@@ -134,7 +134,14 @@ def _schedule(sync: SyncConfig, model_mb: float, wan: WANConfig):
     if sync.strategy == "asgd":
         payload *= wan.baseline_roundtrip   # PS push + pull every iteration
     sync_every = 1 if sync.strategy == "asgd" else sync.interval
-    return payload, sync_every, sync.strategy == "sma"
+    # codec chunk-pipelining factor, capped at the number of codec blocks
+    # exactly like the real path (sync._codec_ship_flat): a model smaller
+    # than overlap_chunks blocks cannot pipeline more than nb ways
+    chunks = 1
+    if sync.uses_codec:
+        nb = max(1, -(-int(model_mb * 1e6 / 4) // sync.codec_block))
+        chunks = max(1, min(sync.overlap_chunks, nb))
+    return payload, sync_every, sync.strategy == "sma", chunks
 
 
 def simulate(
@@ -169,7 +176,7 @@ def simulate(
         tl[c.region].compute_s += c.load_time_s  # model load counts as local work
 
     bandwidth = wan.bandwidth_mbps
-    payload, sync_every, barrier = _schedule(sync, model_mb, wan)
+    payload, sync_every, barrier, chunks = _schedule(sync, model_mb, wan)
     pending = sorted(events, key=lambda e: e.time_s)
     ev_i = 0
     n_reconfigs = 0
@@ -233,7 +240,8 @@ def simulate(
                 t_bar += e.pause_s
                 if e.sync is not None:
                     sync = e.sync
-                    payload, sync_every, barrier = _schedule(sync, model_mb, wan)
+                    payload, sync_every, barrier, chunks = \
+                        _schedule(sync, model_mb, wan)
                 if e.clouds is not None:
                     new = list(e.clouds)
                     keep = {c.region for c in new}
@@ -279,8 +287,15 @@ def simulate(
             t = _transfer_time(payload, bandwidth, wan, rng)
             tl[c.region].comm_s += t
             tl[c.region].traffic_mb += payload
+            # asynchronous strategies hide ``overlap`` of the transfer
+            # behind subsequent compute; chunk-pipelining the codec
+            # (SyncConfig.overlap_chunks, active only on the codec path,
+            # capped at the block count in _schedule) additionally hides
+            # the *unhidden* tail behind the next chunk's encode — only
+            # ~1/C of it stays on the critical path (TAAR-style
+            # transfer/compute overlap)
             blocking = t if (barrier or sync.strategy == "asgd") else \
-                t * max(0.0, 1.0 - wan.overlap)
+                t * max(0.0, 1.0 - wan.overlap) / chunks
             tl[c.region].comm_blocking_s += blocking
             clock[c.region] += blocking
 

@@ -17,6 +17,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.ssd_scan import ssd_scan as _ssd_pallas
 from repro.kernels.topk_compress import topk_compress_pallas
+from repro.kernels.wan_codec import wan_decode_pallas, wan_encode_pallas
 
 
 def _on_tpu() -> bool:
@@ -53,3 +54,25 @@ def topk_compress(x: jnp.ndarray, k: int, *, block: int = 1024,
 
 def topk_decompress(vals: jnp.ndarray, idx: jnp.ndarray, n: int) -> jnp.ndarray:
     return _ref.topk_decompress(vals, idx, n)
+
+
+def wan_encode(x: jnp.ndarray, k_block: int, *, block: int = 4096,
+               use_kernel: bool = True, interpret: bool = False
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused WAN codec encode: block-local top-k + int8 (kernel or oracle).
+
+    The kernel and oracle are bit-identical, so the choice is pure dispatch
+    policy: compiled Pallas on TPU, oracle on CPU unless ``interpret``."""
+    if use_kernel and (_on_tpu() or interpret):
+        return wan_encode_pallas(x, k_block, block=block,
+                                 interpret=not _on_tpu())
+    return _ref.wan_encode(x, k_block, block=block)
+
+
+def wan_decode(q: jnp.ndarray, idx: jnp.ndarray, scales: jnp.ndarray,
+               n: int, *, block: int = 4096, use_kernel: bool = True,
+               interpret: bool = False) -> jnp.ndarray:
+    if use_kernel and (_on_tpu() or interpret):
+        return wan_decode_pallas(q, idx, scales, n, block=block,
+                                 interpret=not _on_tpu())
+    return _ref.wan_decode(q, idx, scales, n, block=block)

@@ -7,6 +7,9 @@
 - ``ssd_naive`` — the literal per-step recurrence (slowest, most obviously
   correct; anchors the whole SSD stack).
 - ``topk_block`` / ``topk_exact`` — block-balanced and exact global top-k.
+- ``wan_encode`` / ``wan_decode`` — the fused WAN payload codec (block-local
+  top-k by 16-bit-truncated magnitude key + per-block int8 quantization),
+  bit-identical to the Pallas kernels in ``wan_codec.py``.
 """
 from __future__ import annotations
 
@@ -79,3 +82,47 @@ def topk_exact(x: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 def topk_decompress(vals: jnp.ndarray, idx: jnp.ndarray, n: int) -> jnp.ndarray:
     return jnp.zeros((n,), vals.dtype).at[idx].set(vals)
+
+
+# ------------------------------------------------------- fused WAN codec
+
+
+def wan_encode(x: jnp.ndarray, k_block: int, block: int = 4096
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle for ``wan_codec.wan_encode_pallas`` — identical semantics.
+
+    Per contiguous block: select the ``k_block`` largest elements by
+    magnitude *truncated to the top 16 bits* (``wan_codec.KEY_MASK``; ties by
+    lowest index — ``lax.top_k`` is stable), order winners by ascending
+    index, and quantize them to int8 against the block's ``max|x| / 127``
+    scale.  Returns (q int8, block-local idx int32, per-block scales f32).
+    """
+    from repro.kernels.wan_codec import INV_127, KEY_MASK
+
+    n = x.shape[0]
+    block = min(block, n)
+    k_block = min(k_block, block)
+    pad = (-n) % block
+    xb = jnp.pad(x, (0, pad)).reshape(-1, block).astype(jnp.float32)
+    mag = jnp.abs(xb)
+    keys = jax.lax.bitcast_convert_type(mag, jnp.int32) & KEY_MASK
+    _, loc = jax.lax.top_k(keys, k_block)               # ties -> lowest index
+    loc = jnp.sort(loc, axis=1)                         # ascending-index order
+    vals = jnp.take_along_axis(xb, loc, axis=1)
+    maxabs = jnp.max(mag, axis=1)
+    scales = jnp.where(maxabs > 0, maxabs * jnp.float32(INV_127), 1.0)
+    q = jnp.clip(jnp.round(vals / scales[:, None]), -127.0, 127.0)
+    return (q.astype(jnp.int8).reshape(-1),
+            loc.astype(jnp.int32).reshape(-1), scales)
+
+
+def wan_decode(q: jnp.ndarray, idx: jnp.ndarray, scales: jnp.ndarray,
+               n: int, block: int = 4096) -> jnp.ndarray:
+    """Oracle for ``wan_codec.wan_decode_pallas`` -> dense (n,) fp32."""
+    block = min(block, n)
+    nb = scales.shape[0]
+    v = (q.reshape(nb, -1).astype(jnp.float32) * scales[:, None])
+    il = idx.reshape(nb, -1)
+    rows = jnp.arange(nb)[:, None]
+    dense = jnp.zeros((nb, block), jnp.float32).at[rows, il].set(v)
+    return dense.reshape(-1)[:n]

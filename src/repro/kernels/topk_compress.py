@@ -1,4 +1,10 @@
-"""Block-balanced top-k gradient compression Pallas TPU kernel.
+"""Block-balanced top-k gradient compression Pallas TPU kernel (LEGACY).
+
+Superseded on the production sync path by the fused single-pass codec in
+``wan_codec.py`` (threshold-refinement selection + int8 quantization — no
+O(k) serialization).  Kept as (a) the uncompressed-payload fallback of
+``SyncConfig.compress_topk`` without ``quantize_int8`` and (b) the baseline
+the ``benchmarks/wan_codec.py`` microbenchmark measures the speedup against.
 
 Beyond-paper WAN optimization: the paper cites DGC / top-K sparsification as
 the complementary family of synchronization optimizations (it only implements

@@ -1,0 +1,219 @@
+"""Fused WAN payload codec: single-pass block-local top-k + int8 quantization.
+
+This is the production encode/decode pair for compressed inter-pod gradient
+shipping (``repro.core.sync``).  It supersedes the iterative-argmax kernel in
+``topk_compress.py`` (kept there as the benchmark baseline), whose inner
+``fori_loop`` serializes O(k_block) argmax+scatter rounds per block — the
+exact anti-pattern for the 8x128 VPU once k grows with the block.
+
+Selection algorithm (threshold refinement, no O(k) serialization):
+
+1. Bitcast ``|x|`` to int32.  Non-negative IEEE-754 floats order identically
+   to their bit patterns, so magnitude rank == integer rank.
+2. Truncate to the top 16 of the 31 magnitude bits (8 exponent + 8 mantissa).
+   Under int8 payload quantization a finer sort key is pure waste: the
+   truncation perturbs selection only among elements whose magnitudes agree
+   to ~2^-8 relative — far below the quantizer's own resolution of 1/127 —
+   and error feedback re-injects whatever the coarser boundary drops.
+3. Build the k-th-largest key threshold bit-by-bit: 16 branch-free rounds of
+   ``count(keys >= candidate)``, each a fully vectorized compare+reduce over
+   the whole tile.  Work is O(16 * block) independent of k.
+4. Select ``keys > T`` plus the first (by index) ties at ``T``; exact ranks
+   come from a cumulative sum — again vectorized, never serialized.
+5. Compact the winners with a one-hot dot product (the TPU-native scatter:
+   MXU contraction instead of unsupported vector scatters).  Each one-hot
+   column has exactly one nonzero, so fp32 accumulation is exact; local
+   indices stay < block <= 2^16, exactly representable in fp32.
+6. Quantize the selected values to int8 against a per-block scale
+   ``max|x| / 127`` — fused into the same kernel, so the fp32 payload never
+   round-trips through HBM.
+
+Tile geometry: each grid step processes ``rows_per_step`` independent blocks
+as a 2D (rows, block) tile — the VPU-natural sublane x lane layout.  All of
+the selection math above batches trivially over the row dimension, so one
+kernel dispatch selects/quantizes several blocks (amortizing grid overhead
+the same way the sync layer's bucketing amortizes per-leaf dispatch).
+
+Wire format per block of ``block`` elements: ``k_block`` int8 values +
+``k_block`` block-local indices (< 2^16, i.e. u16 on the wire; int32 in
+device memory) + one fp32 scale.  At k/n = 1% and block 4096 that is
+~0.77% of the dense fp32 bytes — the ``SyncConfig.payload_mb`` math.
+
+``ref.wan_encode`` / ``ref.wan_decode`` are the pure-jnp oracles with
+bit-identical semantics (same truncated sort key, same tie-breaking, same
+quantizer), so round-trip tests assert exact equality, not allclose.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# keep the top 16 of the 31 magnitude bits (sign bit of |x| is always 0):
+# bits 30..23 exponent, 22..15 top mantissa byte
+KEY_MASK = ~((1 << 15) - 1)
+_N_KEY_BITS = 16                       # threshold-refinement rounds (bits 30..15)
+
+# scale = maxabs * fl32(1/127), NOT maxabs / 127: XLA rewrites constant
+# divides to reciprocal multiplies in some fusion contexts but not others,
+# which costs 1 ulp of kernel-vs-oracle exactness; an explicit multiply is
+# never transformed, so both sides round identically
+INV_127 = 1.0 / 127.0
+
+DEFAULT_BLOCK = 4096
+DEFAULT_ROWS = 8                       # blocks per grid step (VMEM-bounded)
+
+# the (rows, block, k_block) fp32 one-hot tile is the kernels' VMEM
+# high-water mark; cap it so the compiled TPU path fits comfortably under
+# the ~16 MB/core budget at ANY compress fraction (rows degrades toward 1
+# as k_block grows — the selection math is per-row, so tiling is free)
+_ONEHOT_BUDGET_BYTES = 8 << 20
+
+
+def k_per_block(block: int, frac: float) -> int:
+    """Per-block winner count for a target compression fraction."""
+    return max(1, min(block, int(round(block * frac))))
+
+
+def _cap_rows(rows: int, block: int, k_block: int) -> int:
+    return max(1, min(rows, _ONEHOT_BUDGET_BYTES // (4 * block * k_block)))
+
+
+def _select_mask(x: jnp.ndarray, k_block: int):
+    """Exact block-local top-k selection over a (rows, block) tile.
+
+    Returns (mask bool, pos int32) both (rows, block), and maxabs (rows,).
+    Selection key: |x| truncated to KEY_MASK bits; ties broken by lowest
+    index (matching ``jax.lax.top_k``'s stable ordering in the oracle).
+    """
+    mag = jnp.abs(x)
+    bits = jax.lax.bitcast_convert_type(mag, jnp.int32) & KEY_MASK
+
+    # threshold refinement: per row, largest T with count(bits >= T) >=
+    # k_block, built bit-by-bit over the 16 key bits — branch-free
+    # compare+reduce on the full tile each round
+    def refine(i, t):
+        cand = t | (jnp.int32(1) << (30 - i))
+        cnt = jnp.sum((bits >= cand[:, None]).astype(jnp.int32), axis=1)
+        return jnp.where(cnt >= k_block, cand, t)
+
+    thresh = jax.lax.fori_loop(
+        0, _N_KEY_BITS, refine, jnp.zeros((x.shape[0],), jnp.int32))
+
+    above = bits > thresh[:, None]
+    n_above = jnp.sum(above.astype(jnp.int32), axis=1)
+    at = bits == thresh[:, None]
+    # first (k_block - n_above) ties by index, exactly filling k_block
+    tie_rank = jnp.cumsum(at.astype(jnp.int32), axis=1) - 1
+    mask = above | (at & (tie_rank < (k_block - n_above)[:, None]))
+    pos = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1   # slot, by index
+    return mask, pos, jnp.max(mag, axis=1)
+
+
+def _encode_kernel(x_ref, q_ref, idx_ref, scale_ref, *, k_block: int,
+                   block: int, rows: int):
+    x = x_ref[...].astype(jnp.float32)                  # (rows, block)
+    mask, pos, maxabs = _select_mask(x, k_block)
+
+    # one-hot compaction: (rows, block, k_block) with exactly one 1 per
+    # output column -> the batched dot is an exact gather on the MXU
+    slots = jax.lax.broadcasted_iota(jnp.int32, (rows, block, k_block), 2)
+    onehot = (mask[..., None] & (pos[..., None] == slots)).astype(jnp.float32)
+    dims = (((1,), (1,)), ((0,), (0,)))                 # contract block, batch rows
+    vals = jax.lax.dot_general(onehot, x, dims,
+                               preferred_element_type=jnp.float32)
+    iota = jax.lax.broadcasted_iota(jnp.float32, (rows, block), 1)
+    idxf = jax.lax.dot_general(onehot, iota, dims,      # exact: < 2^16 < 2^24
+                               preferred_element_type=jnp.float32)
+
+    scale = jnp.where(maxabs > 0, maxabs * jnp.float32(INV_127), 1.0)
+    q = jnp.clip(jnp.round(vals / scale[:, None]), -127.0, 127.0)
+
+    q_ref[...] = q.astype(jnp.int8)
+    idx_ref[...] = idxf.astype(jnp.int32)
+    scale_ref[...] = scale
+
+
+def _decode_kernel(q_ref, idx_ref, scale_ref, out_ref, *, block: int,
+                   rows: int):
+    v = q_ref[...].astype(jnp.float32) * scale_ref[...][:, None]
+    idx = idx_ref[...]                                  # (rows, k_block)
+    # transpose of the encode compaction: one nonzero per column -> exact
+    cols = jax.lax.broadcasted_iota(jnp.int32, (rows, block, idx.shape[1]), 1)
+    onehot = (cols == idx[:, None, :]).astype(jnp.float32)
+    out_ref[...] = jax.lax.dot_general(
+        onehot, v, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+
+def _geometry(n: int, block: int, rows: int, k_block: int
+              ) -> Tuple[int, int, int, int]:
+    """(block, rows, nb_real, nb_padded): pad n up to whole (rows x block)
+    tiles; padded blocks are all-zero and sliced off the outputs.  ``rows``
+    is capped by the one-hot VMEM budget (tiling never changes results)."""
+    block = min(block, n)
+    nb = -(-n // block)
+    rows = min(_cap_rows(rows, block, min(k_block, block)), nb)
+    nb_pad = -(-nb // rows) * rows
+    return block, rows, nb, nb_pad
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k_block", "block", "rows", "interpret"))
+def wan_encode_pallas(
+    x: jnp.ndarray, k_block: int, *, block: int = DEFAULT_BLOCK,
+    rows: int = DEFAULT_ROWS, interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: flat (n,) -> (q int8 (nb*k_block,), local idx int32 (nb*k_block,),
+    scales f32 (nb,)); nb = ceil(n / block)."""
+    n = x.shape[0]
+    block, rows, nb, nb_pad = _geometry(n, block, rows, k_block)
+    k_block = min(k_block, block)
+    xp = jnp.pad(x, (0, nb_pad * block - n)).reshape(nb_pad, block)
+
+    q, idx, scales = pl.pallas_call(
+        functools.partial(_encode_kernel, k_block=k_block, block=block,
+                          rows=rows),
+        grid=(nb_pad // rows,),
+        in_specs=[pl.BlockSpec((rows, block), lambda b: (b, 0))],
+        out_specs=[pl.BlockSpec((rows, k_block), lambda b: (b, 0)),
+                   pl.BlockSpec((rows, k_block), lambda b: (b, 0)),
+                   pl.BlockSpec((rows,), lambda b: (b,))],
+        out_shape=[jax.ShapeDtypeStruct((nb_pad, k_block), jnp.int8),
+                   jax.ShapeDtypeStruct((nb_pad, k_block), jnp.int32),
+                   jax.ShapeDtypeStruct((nb_pad,), jnp.float32)],
+        interpret=interpret,
+    )(xp)
+    return (q.reshape(-1)[:nb * k_block], idx.reshape(-1)[:nb * k_block],
+            scales[:nb])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "block", "rows", "interpret"))
+def wan_decode_pallas(
+    q: jnp.ndarray, idx: jnp.ndarray, scales: jnp.ndarray, n: int, *,
+    block: int = DEFAULT_BLOCK, rows: int = DEFAULT_ROWS,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Inverse of :func:`wan_encode_pallas` -> dense (n,) fp32."""
+    k_block = q.shape[0] // (-(-n // min(block, n)))
+    block, rows, nb, nb_pad = _geometry(n, block, rows, k_block)
+
+    def pad_rows(a, fill=0):
+        a = a.reshape(nb, -1)
+        return jnp.pad(a, ((0, nb_pad - nb), (0, 0)), constant_values=fill)
+
+    dense = pl.pallas_call(
+        functools.partial(_decode_kernel, block=block, rows=rows),
+        grid=(nb_pad // rows,),
+        in_specs=[pl.BlockSpec((rows, k_block), lambda b: (b, 0)),
+                  pl.BlockSpec((rows, k_block), lambda b: (b, 0)),
+                  pl.BlockSpec((rows,), lambda b: (b,))],
+        out_specs=pl.BlockSpec((rows, block), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb_pad, block), jnp.float32),
+        interpret=interpret,
+    )(pad_rows(q), pad_rows(idx), jnp.pad(scales, (0, nb_pad - nb)))
+    return dense.reshape(-1)[:n]

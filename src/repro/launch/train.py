@@ -109,6 +109,19 @@ def main(argv=None):
     ap.add_argument("--sync", default="asgd_ga",
                     choices=["asgd", "asgd_ga", "ama", "sma", "asp"])
     ap.add_argument("--interval", type=int, default=8)
+    ap.add_argument("--compress-topk", type=float, default=0.0,
+                    help="ship only this fraction of accumulated-gradient "
+                         "entries (asgd_ga; 0 = dense)")
+    ap.add_argument("--int8", action="store_true",
+                    help="fused WAN codec: block-local top-k + int8 payload "
+                         "quantization (with --compress-topk)")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="EF-SGD: re-inject what the codec dropped at the "
+                         "next sync (with --int8)")
+    ap.add_argument("--overlap-chunks", type=int, default=1,
+                    help=">1: pipeline the ring permute of one chunk with "
+                         "the encode of the next")
+    ap.add_argument("--codec-block", type=int, default=4096)
     ap.add_argument("--optimizer", default="sgd")
     ap.add_argument("--lr", type=float, default=0.02)
     ap.add_argument("--data-ratio", default="1:1",
@@ -142,8 +155,13 @@ def main(argv=None):
         CloudResources(region=f"pod{i}", devices=(("v5e", 4),),
                        data_size=ratio[i])
         for i in range(args.pods))
-    request = TrainingRequest(model=name, clouds=clouds,
-                              sync=SyncConfig(args.sync, args.interval),
+    sync_cfg = SyncConfig(args.sync, args.interval,
+                          compress_topk=args.compress_topk,
+                          quantize_int8=args.int8,
+                          error_feedback=args.error_feedback,
+                          codec_block=args.codec_block,
+                          overlap_chunks=args.overlap_chunks)
+    request = TrainingRequest(model=name, clouds=clouds, sync=sync_cfg,
                               n_iters=args.steps, global_batch=args.batch)
     plan = build_training_plan(request)
     print(f"[control-plane] ring topology: {plan.topology}")
@@ -178,7 +196,7 @@ def main(argv=None):
 
     # ---------------------------------------------------------- trainer
     tcfg = TrainerConfig(n_pods=args.pods, optimizer=args.optimizer,
-                         lr=args.lr, sync=SyncConfig(args.sync, args.interval))
+                         lr=args.lr, sync=sync_cfg)
     trainer = Trainer(lambda p, b: fns.loss_fn(p, cfg, b),
                       lambda k: fns.init_params(k, cfg), tcfg)
     state = trainer.init_state(jax.random.key(0))
@@ -187,6 +205,14 @@ def main(argv=None):
                    for x in jax.tree.leaves(state.params)) / args.pods / 1e6
     print(f"[train] {name}: {n_params:,} params/pod ({model_mb:.1f} MB), "
           f"{args.pods} pods, sync={args.sync}@{args.interval}")
+    if sync_cfg.uses_codec:
+        print(f"[train] wan codec: top-k {sync_cfg.compress_topk} + int8, "
+              f"block {sync_cfg.codec_block}, "
+              f"ef={'on' if sync_cfg.error_feedback else 'off'}, "
+              f"chunks {sync_cfg.overlap_chunks}, payload "
+              f"{sync_cfg.payload_mb(model_mb):.2f} MB/sync "
+              f"({model_mb / max(sync_cfg.payload_mb(model_mb), 1e-9):.0f}x "
+              f"below dense)")
 
     # -------------------------------------------------------- elasticity
     events = parse_events(args.events)
@@ -259,6 +285,10 @@ def main(argv=None):
     summary = {
         "model": name, "pods": args.pods, "sync": args.sync,
         "interval": args.interval, "steps": args.steps,
+        "compress_topk": args.compress_topk, "int8": args.int8,
+        "error_feedback": args.error_feedback,
+        "overlap_chunks": args.overlap_chunks,
+        "codec_block": args.codec_block,
         "loss_first": losses[0], "loss_last": float(np.mean(losses[-5:])),
         "wan_traffic_mb": trainer.traffic_mb,
         "reconfigs": n_reconfigs,

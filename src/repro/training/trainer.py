@@ -4,8 +4,9 @@ The trainer is generic over a ``loss_fn(params, batch) -> (loss, metrics)``:
 the LLM path wraps ``repro.models.transformer.loss_fn`` with its ModelConfig,
 and the paper-reproduction path passes the reference models' losses directly.
 
-State layout: every leaf of ``params`` / ``opt_state`` / ``ga_buffer`` has a
-leading **pod** dimension (size ``n_pods`` — the number of cloud partitions).
+State layout: every leaf of ``params`` / ``opt_state`` / ``ga_buffer`` (and
+the WAN codec's flat ``ef_residual`` error-feedback buffer) has a leading
+**pod** dimension (size ``n_pods`` — the number of cloud partitions).
 On a multi-pod mesh that dimension is sharded over the ``"pod"`` axis; on a
 single CPU device it emulates the clouds faithfully (same numerics).  The
 per-pod step is ``vmap``-ed over it; the sync strategies act on it with
@@ -195,7 +196,9 @@ def resize_train_state(sync_cfg: SyncConfig, state: TrainState, n_new: int,
     to the first ``min(old, new)`` pods).  Parameters use mean-preserving
     transforms; optimizer moments are mean-seeded on grow but plainly kept on
     shrink (no shift — Adam's second moment must stay non-negative); the sync
-    state follows its strategy's semantics
+    state follows its strategy's semantics — the ASGD-GA gradient buffer and
+    the codec's error-feedback residual both replay-accumulate on shrink
+    (sum-preserving) and zero-seed joiners
     (see ``repro.core.sync.resize_sync_state``).
     """
     n_old = jax.tree.leaves(state.params)[0].shape[0]

@@ -170,6 +170,26 @@ def test_moe_grad_flows_to_router():
 # ------------------------------------------- decode vs forward consistency
 
 
+def _dropless(cfg: ModelConfig) -> ModelConfig:
+    """Remove MoE capacity dropping: capacity covers worst-case routing.
+
+    Capacity-based token-choice MoE makes forward logits depend on the
+    *other* tokens in the batch: when an expert overflows its capacity
+    ``C = ceil(T*K*cf/E)``, the overflow tokens are dropped (their expert
+    output is zero).  Single-token decode (T=1) never overflows, so
+    teacher-forced decode cannot reproduce dropped positions — with the
+    stock qwen3 smoke config, layer 0 drops 2/48 slots at S=24, which was
+    the root cause of the historical ``test_decode_matches_forward`` parity
+    failure.  ``cf = E/K`` makes C >= T for any routing, isolating what the
+    test is about: cache/decode correctness, not capacity semantics."""
+    if not cfg.has_moe:
+        return cfg
+    import dataclasses
+    m = cfg.moe
+    return cfg.replace(moe=dataclasses.replace(
+        m, capacity_factor=float(m.num_experts) / m.top_k))
+
+
 @pytest.mark.parametrize("name", ["granite-8b", "gemma2-27b", "mamba2-1.3b",
                                   "qwen3-moe-30b-a3b"])
 def test_decode_matches_forward(name):
@@ -177,7 +197,7 @@ def test_decode_matches_forward(name):
     reproduce the full-sequence forward logits (exercises ring buffers for
     gemma2, SSM state for mamba2, MoE routing under batch=decode)."""
     arch = get_arch(name)
-    cfg = arch.smoke
+    cfg = _dropless(arch.smoke)
     S = 24
     params = T.init_params(jax.random.key(0), cfg)
     tokens = jax.random.randint(jax.random.key(1), (1, S), 0, cfg.vocab_size)

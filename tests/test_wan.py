@@ -62,6 +62,10 @@ def test_cost_report_reduction():
     rb = cost_report(base, units, rates)
     rf = cost_report(fast, units, rates)
     assert rf.reduction_vs(rb) > 0
+    # bytes-on-wire flow into the report: freq-8 ships 1/16 of per-step
+    # push+pull, and the reduction helper reflects it
+    assert rf.traffic_mb == pytest.approx(rb.traffic_mb / 16)
+    assert rf.traffic_reduction_vs(rb) == pytest.approx(1 - 1 / 16)
 
 
 def test_compare_strategies_keys():
