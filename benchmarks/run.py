@@ -59,6 +59,12 @@ def main() -> None:
                    f"ef_frac="
                    f"{r['ef_convergence']['ef_loss_reduction_frac_of_dense']}")
 
+    from benchmarks import autotune as A
+    _run("autotune", A.bench_autotune,      # also writes BENCH_autotune.json
+         lambda r: f"adaptive_speedup={r['speedup_vs_best_static']}x "
+                   f"guard_ok="
+                   f"{r['acceptance']['ef_guard_never_violated']}")
+
     # roofline from the dry-run artifacts (skips silently if none exist yet)
     def _roofline():
         from benchmarks import roofline as R

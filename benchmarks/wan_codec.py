@@ -80,6 +80,7 @@ def bench_encode_kernel() -> Dict:
 
 
 def bench_bytes_on_wire() -> Dict:
+    from repro.core.cost import tier_payload_table
     from repro.core.sync import SyncConfig
 
     interval = 8
@@ -87,10 +88,16 @@ def bench_bytes_on_wire() -> Dict:
     sparse = SyncConfig("asgd_ga", interval, compress_topk=FRAC)
     codec = SyncConfig("asgd_ga", interval, compress_topk=FRAC,
                        quantize_int8=True)
+    fp8 = SyncConfig("asgd_ga", interval, compress_topk=FRAC,
+                     quantize_int8=True, value_dtype="fp8")
+    int4 = SyncConfig("asgd_ga", interval, compress_topk=FRAC,
+                      quantize_int8=True, value_dtype="int4")
     rows = {
         "dense_fp32_mb": dense.payload_mb(MODEL_MB),
         "sparse_fp32_mb": sparse.payload_mb(MODEL_MB),
         "codec_int8_mb": codec.payload_mb(MODEL_MB),
+        "codec_fp8_mb": fp8.payload_mb(MODEL_MB),
+        "codec_int4_mb": int4.payload_mb(MODEL_MB),
     }
     rows = {k: round(v, 4) for k, v in rows.items()}
     rows["model_mb"] = MODEL_MB
@@ -99,7 +106,36 @@ def bench_bytes_on_wire() -> Dict:
         rows["dense_fp32_mb"] / rows["codec_int8_mb"], 1)
     rows["reduction_vs_sparse_fp32"] = round(
         rows["sparse_fp32_mb"] / rows["codec_int8_mb"], 1)
+    rows["int4_reduction_vs_dense"] = round(
+        rows["dense_fp32_mb"] / rows["codec_int4_mb"], 1)
+    # the controller's full price list (per-tier, per-step at this interval)
+    rows["tier_table"] = tier_payload_table(MODEL_MB, FRAC,
+                                            interval=interval)
     return rows
+
+
+def bench_tier_encode() -> Dict:
+    """Per-tier encode/decode wall time on the 1M buffer — the precision
+    ladder costs (almost) nothing on the compute side: all tiers share the
+    selection kernel and differ only in the fused value encoding."""
+    from repro.kernels.wan_codec import (k_per_block, wan_decode_pallas,
+                                         wan_encode_pallas)
+
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(N,)), jnp.float32)
+    kb = k_per_block(4096, FRAC)
+    out = {}
+    for dt in ("int8", "fp8", "int4"):
+        t_enc = _timeit(lambda: wan_encode_pallas(
+            x, kb, block=4096, value_dtype=dt, interpret=True), reps=3)
+        q, idx, scales = wan_encode_pallas(x, kb, block=4096, value_dtype=dt,
+                                           interpret=True)
+        t_dec = _timeit(lambda: wan_decode_pallas(
+            q, idx, scales, N, block=4096, value_dtype=dt, interpret=True),
+            reps=3)
+        out[dt] = {"encode_ms": round(t_enc * 1e3, 2),
+                   "decode_ms": round(t_dec * 1e3, 2),
+                   "payload_bytes_per_elem": 1.0 if dt != "int4" else 0.5}
+    return out
 
 
 def _lenet_run(sync, steps: int = 120):
@@ -191,6 +227,7 @@ def bench_step_time() -> Dict:
 def run_bench() -> Dict:
     report = {
         "encode_kernel": bench_encode_kernel(),
+        "tier_encode": bench_tier_encode(),
         "bytes_on_wire": bench_bytes_on_wire(),
         "ef_convergence": bench_ef_convergence(),
         "end_to_end": bench_step_time(),
@@ -200,6 +237,9 @@ def run_bench() -> Dict:
             report["encode_kernel"]["encode_speedup"] >= 5.0,
         "bytes_reduction_ge_8x":
             report["bytes_on_wire"]["reduction_vs_dense"] >= 8.0,
+        "int4_below_int8_bytes":
+            report["bytes_on_wire"]["codec_int4_mb"]
+            < report["bytes_on_wire"]["codec_int8_mb"],
         "ef_within_5pct_of_dense_loss_reduction":
             report["ef_convergence"]["ef_loss_reduction_frac_of_dense"]
             >= 0.95,
@@ -218,8 +258,13 @@ def _print_report(r: Dict) -> None:
           f"{enc['fused_encode_ms']} ms (fused)  "
           f"[{enc['encode_speedup']}x]")
     print(f"bytes on wire  : {wire['dense_fp32_mb']} MB dense -> "
-          f"{wire['codec_int8_mb']} MB codec  "
-          f"[{wire['reduction_vs_dense']}x]")
+          f"{wire['codec_int8_mb']} MB int8 / {wire['codec_fp8_mb']} MB fp8 "
+          f"/ {wire['codec_int4_mb']} MB int4  "
+          f"[{wire['reduction_vs_dense']}x / "
+          f"{wire['int4_reduction_vs_dense']}x]")
+    tiers = r["tier_encode"]
+    print("tier encode ms : " + "  ".join(
+        f"{d}={tiers[d]['encode_ms']}" for d in tiers))
     print(f"EF convergence : {conv['ef_loss_reduction_frac_of_dense'] * 100:.1f}% "
           f"of dense loss reduction "
           f"(no-EF: {conv['no_ef_loss_reduction_frac_of_dense'] * 100:.1f}%)")

@@ -1,14 +1,18 @@
 """Core: the paper's contributions — sync strategies, elastic scheduler,
 control plane, WAN simulator, cost model."""
-from repro.core.sync import SyncConfig, SyncState, init_sync_state, \
-    on_step_gradients, apply_sync, is_sync_step, traffic_per_step_mb, \
-    grow_pods, shrink_pods, resize_sync_state  # noqa: F401
+from repro.core.sync import SyncConfig, SyncState, CODEC_TIERS, \
+    init_sync_state, on_step_gradients, apply_sync, is_sync_step, \
+    traffic_per_step_mb, grow_pods, shrink_pods, resize_sync_state, \
+    retune_sync_state  # noqa: F401
 from repro.core.scheduler import CloudResources, ResourcePlan, DeviceType, \
     CATALOG, load_power, optimal_matching, predict_times, waiting_fraction, \
     plan_batch_split, PlanDiff, diff_plans, incremental_matching  # noqa: F401
 from repro.core.wan import SimCloud, SimEvent, WANConfig, SimResult, \
-    simulate, compare_strategies  # noqa: F401
-from repro.core.cost import CostReport, cost_report  # noqa: F401
+    BandwidthTrace, simulate, compare_strategies  # noqa: F401
+from repro.core.cost import CostReport, cost_report, tier_payload_table, \
+    adaptive_traffic_mb  # noqa: F401
+from repro.core.autotune import AdaptiveSyncController, BucketStats, \
+    SyncPlanUpdate, WanProbe, build_ladder  # noqa: F401
 from repro.core.control_plane import FunctionRegistry, AddressTable, Workflow, \
     WorkflowEngine, TrainingRequest, TrainingPlan, SchedulerFunction, \
     CommunicatorFunction, build_training_plan, training_workflow, reschedule, \

@@ -1,0 +1,371 @@
+"""Adaptive WAN sync autotuner: per-bucket precision/sparsity controller.
+
+The paper's headline speedup comes from *matching* the sync strategy to WAN
+conditions — but its WAN exhibits "low bandwidth and high fluctuations", so a
+launch-time choice of ``compress_topk`` / payload tier / ``interval`` is
+wrong whenever the network moves.  This module closes the loop the ROADMAP
+calls for ("per-bucket adaptive compress_topk from gradient statistics"):
+
+  signals                        decision                      reconfig
+  ───────                        ────────                      ────────
+  BucketStats (EF-residual       AdaptiveSyncController        SyncPlanUpdate
+  ratio + top-k energy capture,  walks a payload-aggression    -> Trainer.retune
+  from SyncState.msg_norm /      ladder (compress_topk x       at the next sync
+  resid_norm)                    value_dtype rungs, sorted     barrier (EF
+  WanProbe (achieved bandwidth   by wire bytes) under a        residual carries
+  EMA + fluctuation, from the    user-set convergence guard,   over — dense
+  simulator / --wan-trace /      and sizes ``interval`` so     bucket coords
+  EventBus bandwidth_changed)    per-step blocking comm        are tier-free)
+                                 stays on target
+
+Control law (deterministic, hysteresis-damped):
+
+- **Convergence guard** (the hard rule): the EF-residual ratio
+  ``||resid|| / ||message||`` is ``sqrt(1 - energy_capture)`` of the last
+  sync — structurally in [0, 1), rising toward 1 as the tier drops more
+  than error feedback can re-ship per interval.  If it reaches ``ef_guard``
+  the controller *immediately* de-escalates one rung, and it never
+  escalates unless the ratio is below ``escalate_margin * ef_guard``.
+  This is the invariant the property tests pin: under NO input sequence
+  does the controller escalate while the guard is tripped.  (Scale note:
+  with error feedback a ratio of ~0.85 is *healthy* — the codec benches
+  hit 99.9% of dense loss reduction there, because everything dropped is
+  re-shipped next interval — so guards live near 1 and the escalation
+  margin is deliberately thin.)
+- **WAN pressure**: from the bandwidth EMA the controller estimates the
+  blocking sync time ``payload * 8 / bw`` and fits the smallest interval
+  keeping its per-step share at ``target_comm_frac`` of compute.  The fit
+  is bounded by a **staleness budget** (``interval_budget``, default the
+  base config's interval x2): when the fitted interval busts the budget for
+  ``hysteresis`` consecutive updates — i.e. only *more staleness* could
+  absorb the bandwidth drop — the controller escalates, jumping straight
+  to the least aggressive rung whose fit respects the budget (transit
+  rungs would each pay a transfer on the slow link); when the fit falls
+  far below budget for a 4x longer streak it de-escalates one rung to
+  buy back fidelity.  Fluctuation (EMA coefficient of variation) inflates
+  the pressure estimate the same way the paper observes fluctuations eat
+  half the ideal reduction.  Only at the *last* rung may the interval
+  exceed the budget (escape valve, capped at ``max_interval``).
+- **Interval sizing** is the §III.C frequency knob driven by the same
+  probe, so elasticity reconfigs (which also touch the interval via
+  ``adapt_interval``) and codec retuning share one control plane: the
+  controller subscribes to the PR-1 ``EventBus`` and consumes the exact
+  ``bandwidth_changed`` events the :class:`ElasticityController` sees.
+
+HeterPS (arXiv:2111.10635) frames this knob-tuning as feedback scheduling;
+TAAR (arXiv:2404.11352) shows network-aware adaptation is where the
+remaining WAN wins live.  ``benchmarks/autotune.py`` measures the payoff:
+time-to-target-loss on a fluctuating-bandwidth trace vs the best *static*
+codec config, guard never violated.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.sync import CODEC_TIERS, SyncConfig
+
+_EPS = 1e-12
+
+
+@dataclass(frozen=True)
+class BucketStats:
+    """Per-bucket gradient statistics from the last codec sync round.
+
+    Built from ``SyncState.msg_norm`` / ``resid_norm`` (the sync layer
+    computes both inside the jitted sync step; the host just reads them).
+    A ``msg_norm`` of 0 means "no reading yet" (first interval, or right
+    after a pod resize re-armed the telemetry) — the controller then holds
+    its rung and only retunes the interval.
+    """
+
+    msg_norm: float
+    resid_norm: float
+
+    @property
+    def ef_ratio(self) -> float:
+        """||residual|| / ||message|| — sqrt(1 - energy captured), in [0, 1)."""
+        return self.resid_norm / (self.msg_norm + _EPS)
+
+    @property
+    def energy_capture(self) -> float:
+        """Fraction of message energy the codec shipped last sync."""
+        return max(0.0, 1.0 - self.ef_ratio ** 2)
+
+    @classmethod
+    def from_sync_state(cls, sync_state) -> "BucketStats":
+        """Worst-pod reading: the pod whose residual ratio is highest
+        governs (its model replica is the one compression hurts most)."""
+        import numpy as np
+
+        msg = np.asarray(sync_state.msg_norm, dtype=np.float64)
+        res = np.asarray(sync_state.resid_norm, dtype=np.float64)
+        if msg.size == 0 or float(msg.max()) <= 0.0:
+            return cls(msg_norm=0.0, resid_norm=0.0)
+        worst = int(np.argmax(res / (msg + _EPS)))
+        return cls(msg_norm=float(msg[worst]), resid_norm=float(res[worst]))
+
+
+@dataclass(frozen=True)
+class WanProbe:
+    """Smoothed WAN picture: bandwidth EMA + fluctuation (EMA coefficient
+    of variation), fed by the simulator, a ``--wan-trace``, or
+    ``bandwidth_changed`` events off the control-plane ``EventBus``."""
+
+    bandwidth_mbps: float
+    fluctuation: float = 0.0
+
+
+@dataclass(frozen=True)
+class SyncPlanUpdate:
+    """Controller output: the retuned config plus why — applied through
+    ``Trainer.retune`` at the next sync barrier, mirroring how the
+    elasticity engine applies its ``ReconfigPlan``."""
+
+    sync: SyncConfig
+    step: int
+    rung: int                      # index into the controller's ladder
+    tier: int                      # index into sync.CODEC_TIERS
+    reason: str
+    probe: Optional[WanProbe] = None
+    stats: Optional[BucketStats] = None
+
+    def summary(self) -> str:
+        s = self.sync
+        return (f"rung {self.rung} ({CODEC_TIERS[self.tier]}"
+                f"@topk={s.compress_topk}), interval {s.interval} "
+                f"[{self.reason}]")
+
+
+def build_ladder(base: SyncConfig,
+                 topk_ladder: Sequence[float],
+                 dtype_ladder: Sequence[str]) -> Tuple[SyncConfig, ...]:
+    """The aggression ladder: every (compress_topk, value_dtype) combination
+    of the candidate lists, sorted by wire bytes descending (rung 0 ships
+    the most, the last rung the least).  Payload breaks ties toward the
+    higher-precision dtype so equal-byte rungs (int8 vs fp8) still order
+    deterministically, int8 first — one rung is always a strict (or
+    precision-equivalent) de-escalation from the next."""
+    rungs = [replace(base, compress_topk=f, value_dtype=d)
+             for f in topk_ladder for d in dtype_ladder]
+    return tuple(sorted(
+        rungs, key=lambda c: (-c.payload_mb(1.0),
+                              CODEC_TIERS.index(c.value_dtype))))
+
+
+class AdaptiveSyncController:
+    """Closed-loop per-bucket codec tuner (see module docstring).
+
+    The controller is host-side and pure-Python: it never touches traced
+    values, so a retune is an ordinary re-jit of the sync step (the same
+    cost the elasticity engine already pays per reconfig).
+    """
+
+    def __init__(self, base_sync: SyncConfig, model_mb: float,
+                 compute_step_s: float, *,
+                 ef_guard: float = 0.9,
+                 escalate_margin: float = 0.95,
+                 target_comm_frac: float = 0.25,
+                 topk_ladder: Sequence[float] = (0.05, 0.02, 0.01),
+                 dtype_ladder: Sequence[str] = ("int8", "fp8", "int4"),
+                 min_interval: int = 1, interval_budget: Optional[int] = None,
+                 max_interval: int = 64,
+                 hysteresis: int = 2, probe_alpha: float = 0.5,
+                 bus=None):
+        if not base_sync.uses_codec:
+            raise ValueError(
+                "AdaptiveSyncController tunes the fused codec: base_sync "
+                "must have strategy='asgd_ga', 0 < compress_topk < 1 and "
+                "quantize_int8=True")
+        if not base_sync.error_feedback:
+            raise ValueError(
+                "AdaptiveSyncController's convergence guard is defined on "
+                "the EF residual: base_sync must set error_feedback=True")
+        if not 0.0 < ef_guard < 1.0:
+            raise ValueError("ef_guard is a bound on ||resid||/||msg|| — "
+                             "structurally in (0, 1)")
+        if not 0.0 < escalate_margin <= 1.0:
+            raise ValueError("escalate_margin must be in (0, 1]")
+        self.model_mb = model_mb
+        self.compute_step_s = compute_step_s
+        self.ef_guard = ef_guard
+        self.escalate_margin = escalate_margin
+        self.target_comm_frac = target_comm_frac
+        self.min_interval = min_interval
+        self.interval_budget = (interval_budget if interval_budget is not None
+                                else max(1, 2 * base_sync.interval))
+        self.max_interval = max(max_interval, self.interval_budget)
+        self.hysteresis = hysteresis
+        self.probe_alpha = probe_alpha
+
+        self.ladder = build_ladder(base_sync, topk_ladder, dtype_ladder)
+        # start at the rung matching the base config (exact knob match if
+        # present, else the closest payload), with the base interval
+        self.rung = min(
+            range(len(self.ladder)),
+            key=lambda i: abs(self.ladder[i].payload_mb(1.0)
+                              - base_sync.payload_mb(1.0)))
+        self.interval = base_sync.interval
+        self.current = replace(self.ladder[self.rung],
+                               interval=self.interval)
+
+        self._bw_ema: Optional[float] = None
+        self._bw_var: float = 0.0      # EMA of squared relative deviation
+        self._pressure_streak = 0
+        self._calm_streak = 0
+        self._last_stats: Optional[Tuple[float, float]] = None
+        self.decisions: List[SyncPlanUpdate] = []
+        self.max_ef_ratio = 0.0        # worst guard reading ever observed
+        if bus is not None:
+            bus.subscribe("bandwidth_changed", self.handle)
+
+    # ------------------------------------------------------------- probes
+    def observe_wan(self, bandwidth_mbps: float) -> WanProbe:
+        """Fold an achieved-bandwidth sample into the EMA + fluctuation."""
+        b = float(bandwidth_mbps)
+        if self._bw_ema is None:
+            self._bw_ema = b
+        else:
+            rel = (b - self._bw_ema) / (self._bw_ema + _EPS)
+            self._bw_var += self.probe_alpha * (rel * rel - self._bw_var)
+            self._bw_ema += self.probe_alpha * (b - self._bw_ema)
+        return self.probe
+
+    def handle(self, event) -> None:
+        """EventBus subscriber — same ``bandwidth_changed`` CloudEvents the
+        ElasticityController consumes (one control plane, two actuators:
+        it re-plans resources, this retunes the codec)."""
+        if getattr(event, "bandwidth_mbps", None) is not None:
+            self.observe_wan(event.bandwidth_mbps)
+
+    @property
+    def probe(self) -> WanProbe:
+        return WanProbe(
+            bandwidth_mbps=self._bw_ema if self._bw_ema is not None else 0.0,
+            fluctuation=self._bw_var ** 0.5)
+
+    def resync(self, cfg: SyncConfig) -> None:
+        """Re-anchor the belief state to an externally applied config.
+
+        The elasticity engine shares the control plane and may rewrite the
+        live sync settings (``adapt_interval`` in a reconfig); without
+        re-anchoring, the controller would keep reasoning about knobs that
+        are no longer the ones running — and emit no update because *its*
+        state never changed."""
+        self.rung = min(
+            range(len(self.ladder)),
+            key=lambda i: abs(self.ladder[i].payload_mb(1.0)
+                              - cfg.payload_mb(1.0)))
+        self.interval = cfg.interval
+        self.current = replace(self.ladder[self.rung], interval=cfg.interval)
+        self._pressure_streak = self._calm_streak = 0
+
+    # ----------------------------------------------------------- decision
+    def _comm_frac(self, cfg: SyncConfig) -> float:
+        """Blocking share of one interval's wall clock under the current
+        probe; fluctuation inflates it (a fluctuating link needs headroom —
+        the paper: half the ideal reduction survives fluctuations)."""
+        if self._bw_ema is None or self._bw_ema <= 0:
+            return 0.0
+        t_sync = cfg.payload_mb(self.model_mb) * 8.0 / self._bw_ema
+        t_sync *= 1.0 + self.probe.fluctuation
+        t_compute = max(cfg.interval, 1) * self.compute_step_s
+        return t_sync / (t_sync + t_compute + _EPS)
+
+    def _fit_interval(self, cfg: SyncConfig) -> int:
+        """Smallest interval keeping the blocking share at/below target."""
+        if self._bw_ema is None or self._bw_ema <= 0:
+            return cfg.interval
+        t_sync = (cfg.payload_mb(self.model_mb) * 8.0 / self._bw_ema
+                  * (1.0 + self.probe.fluctuation))
+        f = self.target_comm_frac
+        want = t_sync * (1.0 - f) / (f * self.compute_step_s + _EPS)
+        return max(self.min_interval,
+                   min(self.max_interval, math.ceil(want)))
+
+    def update(self, step: int, stats: BucketStats
+               ) -> Optional[SyncPlanUpdate]:
+        """One control step, called at a sync barrier with that round's
+        bucket statistics.  Returns a plan update when any knob moved."""
+        have_reading = stats.msg_norm > 0.0
+        # consume-once: stats only change at sync rounds, but update() runs
+        # every step — a reading may only *trigger* the guard the step it
+        # arrives, or one bad sync would de-escalate a rung per step until
+        # the next sync, punishing rungs that were never measured.  (It
+        # still *gates* escalation while stale: absence of fresh evidence
+        # is not evidence of calm.)
+        fresh = (have_reading
+                 and (stats.msg_norm, stats.resid_norm) != self._last_stats)
+        if fresh:
+            self._last_stats = (stats.msg_norm, stats.resid_norm)
+        ratio = stats.ef_ratio if have_reading else 0.0
+        if fresh:
+            self.max_ef_ratio = max(self.max_ef_ratio, ratio)
+
+        rung, reason = self.rung, ""
+        if fresh and ratio >= self.ef_guard:
+            # convergence guard tripped: de-escalate NOW, no hysteresis —
+            # never trade fidelity away while EF is drowning
+            rung, reason = max(0, self.rung - 1), "ef-guard"
+            self._pressure_streak = self._calm_streak = 0
+        else:
+            fit = self._fit_interval(self.ladder[self.rung])
+            if fit > self.interval_budget:
+                # only more staleness could absorb the link: rung pressure
+                self._pressure_streak += 1
+                self._calm_streak = 0
+            elif fit <= max(self.min_interval, self.interval_budget // 2):
+                self._calm_streak += 1
+                self._pressure_streak = 0
+            else:
+                self._pressure_streak = self._calm_streak = 0
+            guard_calm = (have_reading
+                          and ratio < self.escalate_margin * self.ef_guard)
+            if (self._pressure_streak >= self.hysteresis and guard_calm
+                    and self.rung + 1 < len(self.ladder)):
+                # escalation is urgent (every sync at the stale rung pays
+                # the slow link): jump straight to the least aggressive
+                # rung whose fitted interval respects the staleness
+                # budget, instead of paying a transfer per transit rung
+                rung = next(
+                    (i for i in range(self.rung + 1, len(self.ladder))
+                     if self._fit_interval(self.ladder[i])
+                     <= self.interval_budget),
+                    len(self.ladder) - 1)
+                reason = "wan-pressure"
+                self._pressure_streak = 0
+            elif (self._calm_streak >= 4 * self.hysteresis and self.rung > 0
+                  and self._fit_interval(self.ladder[self.rung - 1])
+                  <= self.interval_budget):
+                # de-escalation is a luxury (fidelity, not survival): one
+                # rung at a time, on a 4x longer streak — cheap insurance
+                # against ping-ponging on a link that is merely twitchy
+                rung, reason = self.rung - 1, "wan-headroom"
+                self._calm_streak = 0
+
+        cfg = self.ladder[rung]
+        # the staleness budget caps the interval at every rung but the
+        # last, where it is the escape valve for a link no tier can absorb
+        cap = (self.max_interval if rung == len(self.ladder) - 1
+               else self.interval_budget)
+        interval = min(self._fit_interval(cfg), cap)
+        if rung == self.rung:
+            # deadband: don't churn re-jits on small EMA wiggle — retune
+            # the interval alone only when it moves by >= 25%
+            if interval == self.interval or (
+                    not reason
+                    and abs(interval - self.interval)
+                    < max(1.0, 0.25 * self.interval)):
+                return None
+        if not reason:
+            reason = "interval-fit"
+        self.rung = rung
+        self.interval = interval
+        self.current = replace(cfg, interval=interval)
+        update = SyncPlanUpdate(
+            sync=self.current, step=step, rung=rung,
+            tier=self.current.tier, reason=reason,
+            probe=self.probe, stats=stats if have_reading else None)
+        self.decisions.append(update)
+        return update

@@ -8,9 +8,10 @@ the straggler either way).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, Sequence
 
+from repro.core.sync import CODEC_TIERS, SyncConfig
 from repro.core.wan import SimResult
 
 
@@ -38,6 +39,45 @@ class CostReport:
         if baseline.traffic_mb == 0:
             return 0.0
         return 1.0 - self.traffic_mb / baseline.traffic_mb
+
+
+def tier_payload_table(model_mb: float, frac: float,
+                       codec_block: int = 4096, interval: int = 8
+                       ) -> Dict[str, Dict[str, float]]:
+    """Per-sync payload for every codec tier at one (frac, block) point —
+    the precision-ladder price list the adaptive controller walks and the
+    ``BENCH_wan_codec.json`` bytes-on-wire rows report.
+
+    ``fp32`` here is the sparse fp32 path (value+int32-index pairs, codec
+    off); ``dense`` is the uncompressed reference.  Egress per tier is the
+    per-step average at the given sync ``interval``."""
+    rows: Dict[str, Dict[str, float]] = {
+        "dense": {"payload_mb": model_mb,
+                  "per_step_mb": model_mb / interval}}
+    base = SyncConfig("asgd_ga", interval, compress_topk=frac,
+                      codec_block=codec_block)
+    rows["fp32"] = {"payload_mb": base.payload_mb(model_mb)}
+    for dtype in CODEC_TIERS[1:]:
+        cfg = replace(base, quantize_int8=True, value_dtype=dtype)
+        rows[dtype] = {"payload_mb": cfg.payload_mb(model_mb)}
+    for name, row in rows.items():
+        row["per_step_mb"] = row["payload_mb"] / interval
+        row["reduction_vs_dense"] = model_mb / row["payload_mb"]
+        for k in row:
+            row[k] = round(row[k], 4)
+    return rows
+
+
+def adaptive_traffic_mb(decisions: Sequence, n_syncs_per_decision: Sequence[int],
+                        model_mb: float, n_pods: int = 1) -> float:
+    """Bytes-on-wire of an adaptive run: each controller decision's config
+    billed for the sync rounds it was live (``SyncPlanUpdate.sync`` carries
+    the payload math; the launcher's traffic accounting uses the same
+    ``payload_mb`` per active config, so simulator and emulation agree)."""
+    total = 0.0
+    for update, n in zip(decisions, n_syncs_per_decision):
+        total += update.sync.payload_mb(model_mb) * n * n_pods
+    return total
 
 
 def cost_report(result: SimResult, units: Dict[str, int],

@@ -77,6 +77,14 @@ Pytree = Any
 
 STRATEGIES = ("asgd", "asgd_ga", "ama", "sma", "asp")
 
+# the codec's precision ladder, least -> most aggressive.  Tier 0 (fp32) is
+# "codec off": sparse fp32 (value+index pairs) or fully dense.  Wire bytes
+# per kept element: fp32 4+4 (int32 index), int8/fp8 1+2 (u16 block-local
+# index), int4 0.5+2 — plus one fp32 scale per codec block on tiers >= 1.
+CODEC_TIERS = ("fp32", "int8", "fp8", "int4")
+VALUE_DTYPES = CODEC_TIERS[1:]
+_VALUE_BYTES = {"int8": 1.0, "fp8": 1.0, "int4": 0.5}
+
 
 @dataclass(frozen=True)
 class SyncConfig:
@@ -88,12 +96,20 @@ class SyncConfig:
     compress_topk: float = 0.0     # 0/1 = dense; else fraction of entries shipped
     ga_lr_scale: float = 1.0       # LR scale for the receiver-side SGD update
     asp_threshold: float = 0.01    # ASP: relative-significance threshold
-    quantize_int8: bool = False    # fused WAN codec: int8 payload quantization
+    quantize_int8: bool = False    # fused WAN codec on (value_dtype picks the
+    #   payload tier; the flag name is historical — the first tier was int8)
+    value_dtype: str = "int8"      # codec payload tier: int8 | fp8 | int4
     error_feedback: bool = False   # EF-SGD: re-inject compression residual
     codec_block: int = 4096        # block-local top-k block size (codec path)
     overlap_chunks: int = 1        # >1: pipeline ring permute with encode
 
     def __post_init__(self):
+        self._validate()
+
+    def _validate(self) -> None:
+        """Each knob gets its own precise error: a run configured with a
+        silently-inert flag would train one way while its summary claims
+        another, so every coupling is refused with the exact reason."""
         if self.strategy not in STRATEGIES:
             raise ValueError(f"unknown strategy {self.strategy!r}")
         if self.interval < 1:
@@ -103,25 +119,39 @@ class SyncConfig:
         if self.codec_block < 128 or self.codec_block > (1 << 16):
             raise ValueError("codec_block must be in [128, 65536] (local "
                              "indices ship as u16)")
+        if self.value_dtype not in VALUE_DTYPES:
+            raise ValueError(
+                f"unknown value_dtype {self.value_dtype!r}: the codec's "
+                f"payload tiers are {VALUE_DTYPES} (fp32 is codec-off)")
+        if self.value_dtype != "int8" and not self.quantize_int8:
+            raise ValueError(
+                f"value_dtype={self.value_dtype!r} is inert without the "
+                f"fused codec (quantize_int8=True): the run would ship "
+                f"sparse/dense fp32 while its summary claims "
+                f"{self.value_dtype}")
+        if self.quantize_int8:
+            if self.strategy != "asgd_ga":
+                raise ValueError(
+                    f"the fused codec (quantize_int8=True) compresses "
+                    f"shipped accumulated gradients and therefore requires "
+                    f"strategy='asgd_ga', not {self.strategy!r}")
+            if not 0.0 < self.compress_topk < 1.0:
+                raise ValueError(
+                    f"the fused codec (quantize_int8=True) needs a top-k "
+                    f"fraction 0 < compress_topk < 1, got "
+                    f"{self.compress_topk} — without one the run would "
+                    f"train dense while its summary claims "
+                    f"{self.value_dtype}/EF")
         if self.error_feedback and not self.quantize_int8:
             raise ValueError("error_feedback requires the fused codec "
-                             "(quantize_int8=True)")
-        if self.quantize_int8 and not (
-                self.strategy == "asgd_ga"
-                and 0.0 < self.compress_topk < 1.0):
-            # refuse silently-inert flags: a run configured with the codec
-            # but without a top-k fraction (or on a non-gradient strategy)
-            # would train dense while its summary claims int8/EF
-            raise ValueError(
-                "quantize_int8 requires strategy='asgd_ga' with "
-                "0 < compress_topk < 1 (the codec compresses shipped "
-                "accumulated gradients)")
+                             "(quantize_int8=True): the EF residual is "
+                             "defined as what encode->decode lost")
         if self.overlap_chunks > 1 and not self.uses_codec:
-            # same rule: chunk pipelining only exists on the codec path
             raise ValueError(
                 "overlap_chunks > 1 requires the fused codec "
                 "(strategy='asgd_ga', 0 < compress_topk < 1, "
-                "quantize_int8=True)")
+                "quantize_int8=True): chunk pipelining only exists on the "
+                "codec path")
 
     @property
     def sends_gradients(self) -> bool:
@@ -129,29 +159,36 @@ class SyncConfig:
 
     @property
     def uses_codec(self) -> bool:
-        """True when sync rounds run the fused bucket->top-k->int8 codec."""
+        """True when sync rounds run the fused bucket->top-k->quantize codec."""
         return (self.strategy == "asgd_ga" and self.quantize_int8
                 and 0.0 < self.compress_topk < 1.0)
+
+    @property
+    def tier(self) -> int:
+        """Index into :data:`CODEC_TIERS` (0 = fp32 / codec off)."""
+        return CODEC_TIERS.index(self.value_dtype) if self.uses_codec else 0
 
     def payload_mb(self, model_mb: float,
                    measured_frac: Optional[float] = None) -> float:
         """Per-sync WAN payload per pod (drives the simulator & roofline).
 
         Sparse fp32 ships (fp32 value, int32 index) pairs: ``2 * frac`` of
-        dense.  The fused codec ships (int8 value, u16 block-local index)
-        pairs plus one fp32 scale per ``codec_block`` elements:
-        ``0.75 * frac + 1/codec_block`` of dense — >=8x below dense fp32
-        whenever ``frac < (1/8 - 1/codec_block) / 0.75`` (frac <= 0.166 at
-        the default block).  For ASP pass the measured significant fraction
-        (runtime-dependent); a nominal 30% is assumed otherwise (Gaia
-        reports 10-50%)."""
+        dense.  The fused codec ships (value, u16 block-local index) pairs
+        plus one fp32 scale per ``codec_block`` elements; value bytes per
+        tier: int8/fp8 1, int4 0.5 (two nibble-packed codes per byte).  So
+        int8/fp8 cost ``0.75 * frac + 1/codec_block`` of dense and int4
+        ``0.625 * frac + 1/codec_block`` — >=8x below dense fp32 whenever
+        ``frac <= 0.166`` (int8, default block) / ``frac <= 0.2`` (int4).
+        For ASP pass the measured significant fraction (runtime-dependent);
+        a nominal 30% is assumed otherwise (Gaia reports 10-50%)."""
         if self.strategy == "asp":
             frac = measured_frac if measured_frac is not None else 0.3
             return model_mb * (2 * frac if frac < 1.0 else 1.0)
         if 0.0 < self.compress_topk < 1.0 and self.strategy == "asgd_ga":
             frac = self.compress_topk
             if self.quantize_int8:
-                return model_mb * (frac * 3.0 / 4.0 + 1.0 / self.codec_block)
+                per_elem = (_VALUE_BYTES[self.value_dtype] + 2.0) / 4.0
+                return model_mb * (frac * per_elem + 1.0 / self.codec_block)
             return model_mb * 2 * frac
         return model_mb
 
@@ -168,6 +205,14 @@ class SyncState(NamedTuple):
     #   defaulted jnp array would be built at import time AND let stale
     #   3-field constructor calls silently produce a wrong pod dim —
     #   ``init_sync_state`` is the way to build one
+    tier: jnp.ndarray              # scalar int32 index into CODEC_TIERS —
+    #   the payload tier active at the last sync (survives retunes/resizes,
+    #   so logs and checkpoints can tell what the adaptive controller chose)
+    msg_norm: jnp.ndarray          # (n_pods,) L2 of the last codec sync's
+    #   pre-compression message (accumulated grad avg + EF residual)
+    resid_norm: jnp.ndarray        # (n_pods,) L2 of the post-sync EF
+    #   residual.  msg/resid norms are the AdaptiveSyncController's
+    #   gradient-statistics inputs; zeros off the codec path
 
 
 def init_sync_state(cfg: SyncConfig, stacked_params: Pytree) -> SyncState:
@@ -187,7 +232,10 @@ def init_sync_state(cfg: SyncConfig, stacked_params: Pytree) -> SyncState:
     return SyncState(ga_buffer=buf,
                      steps_since_sync=jnp.zeros((), jnp.int32),
                      significant_frac=jnp.ones((), jnp.float32),
-                     ef_residual=jnp.zeros((n_pods, n_ef), jnp.float32))
+                     ef_residual=jnp.zeros((n_pods, n_ef), jnp.float32),
+                     tier=jnp.asarray(cfg.tier, jnp.int32),
+                     msg_norm=jnp.zeros((n_pods,), jnp.float32),
+                     resid_norm=jnp.zeros((n_pods,), jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -283,19 +331,23 @@ def _codec_ship_flat(cfg: SyncConfig, flat: jnp.ndarray,
         seg = flat[:, lo:lo + step]
         m = seg.shape[1]
         q, idx, scales = jax.vmap(
-            lambda f: kops.wan_encode(f, k_block, block=block))(seg)
+            lambda f: kops.wan_encode(f, k_block, block=block,
+                                      value_dtype=cfg.value_dtype))(seg)
         if want_local:
             local_parts.append(jax.vmap(
-                lambda a, i, s: kops.wan_decode(a, i, s, m, block=block)
+                lambda a, i, s: kops.wan_decode(a, i, s, m, block=block,
+                                                value_dtype=cfg.value_dtype)
             )(q, idx, scales))
         # only the compact triple crosses the pod axis (collective-permute);
         # indices travel as u16 — they are block-local (< codec_block <=
-        # 65536), and this is the wire format payload_mb bills for
+        # 65536), and this is the wire format payload_mb bills for (the
+        # int4 tier's values are already nibble-packed bytes here)
         q = jnp.roll(q, cfg.peer_shift, axis=0)
         idx16 = jnp.roll(idx.astype(jnp.uint16), cfg.peer_shift, axis=0)
         scales = jnp.roll(scales, cfg.peer_shift, axis=0)
         peer_parts.append(jax.vmap(
-            lambda a, i, s: kops.wan_decode(a, i, s, m, block=block)
+            lambda a, i, s: kops.wan_decode(a, i, s, m, block=block,
+                                            value_dtype=cfg.value_dtype)
         )(q, idx16.astype(jnp.int32), scales))
     peer = jnp.concatenate(peer_parts, axis=1)
     local = jnp.concatenate(local_parts, axis=1) if want_local else None
@@ -354,8 +406,9 @@ def apply_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
         denom = jnp.maximum(state.steps_since_sync, 1).astype(jnp.float32)
         avg = jax.tree.map(lambda b: b / denom, state.ga_buffer)
         new_resid = state.ef_residual
+        msg_norm, resid_norm = state.msg_norm, state.resid_norm
         if cfg.uses_codec:
-            # fused codec: bucket -> (+ EF residual) -> top-k -> int8 ->
+            # fused codec: bucket -> (+ EF residual) -> top-k -> quantize ->
             # ring -> decode; the residual keeps everything the codec
             # dropped for re-injection at the next sync (EF-SGD)
             flat = _pack_stacked(avg)
@@ -364,8 +417,14 @@ def apply_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
             peer_flat, local_flat = _codec_ship_flat(
                 cfg, flat, want_local=cfg.error_feedback)
             peer = _unpack_stacked(peer_flat, avg)
+            # per-pod message norm — with EF also the residual norm; their
+            # ratio is the convergence signal the adaptive controller
+            # guards on (residual growing toward the message norm means
+            # the tier is dropping more than EF can recover per interval)
+            msg_norm = jnp.linalg.norm(flat, axis=1)
             if cfg.error_feedback:
                 new_resid = flat - local_flat
+                resid_norm = jnp.linalg.norm(new_resid, axis=1)
         else:
             peer = _ship_ring(cfg, avg)
         scale = jnp.asarray(lr, jnp.float32) * cfg.ga_lr_scale
@@ -373,7 +432,10 @@ def apply_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
             lambda p, g: (p.astype(jnp.float32) - scale * g).astype(p.dtype),
             params, peer)
         buf = jax.tree.map(jnp.zeros_like, state.ga_buffer)
-        return params, zero._replace(ga_buffer=buf, ef_residual=new_resid)
+        return params, zero._replace(ga_buffer=buf, ef_residual=new_resid,
+                                     tier=jnp.asarray(cfg.tier, jnp.int32),
+                                     msg_norm=msg_norm,
+                                     resid_norm=resid_norm)
 
     if cfg.strategy == "asp":
         # Gaia-style Approximate Synchronous Parallel: ship only parameter
@@ -398,10 +460,8 @@ def apply_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
             lambda p, q: (p.astype(jnp.float32) + 0.5 * q).astype(p.dtype),
             params, peer)
         new_ref = jax.tree.map(lambda p: p.astype(jnp.float32), params)
-        return params, SyncState(ga_buffer=new_ref,
-                                 steps_since_sync=jnp.zeros((), jnp.int32),
-                                 significant_frac=frac,
-                                 ef_residual=state.ef_residual)
+        return params, zero._replace(ga_buffer=new_ref,
+                                     significant_frac=frac)
 
     if cfg.strategy == "ama":
         peer = _ship_ring(cfg, params)
@@ -541,10 +601,50 @@ def resize_sync_state(cfg: SyncConfig, state: SyncState, new_params: Pytree,
         if n_new > n_old:
             buf = grow_pods(buf, n_new, how="zeros")
             resid = grow_pods([resid], n_new, how="zeros")[0]
-        return state._replace(ga_buffer=buf, ef_residual=resid)
+        # msg/resid norms are transient telemetry of the *last* sync round:
+        # a pod-count change invalidates them, so they re-arm at zero (the
+        # adaptive controller treats zeros as "no reading yet"); the active
+        # tier survives the resize untouched
+        return state._replace(
+            ga_buffer=buf, ef_residual=resid,
+            msg_norm=jnp.zeros((n_new,), jnp.float32),
+            resid_norm=jnp.zeros((n_new,), jnp.float32))
     fresh = init_sync_state(cfg, new_params)
     return fresh._replace(steps_since_sync=state.steps_since_sync,
-                          significant_frac=state.significant_frac)
+                          significant_frac=state.significant_frac,
+                          tier=state.tier)
+
+
+def retune_sync_state(new_cfg: SyncConfig, old_cfg: SyncConfig,
+                      state: SyncState, stacked_params: Pytree) -> SyncState:
+    """Carry ``SyncState`` across a *codec retune* (same strategy and pod
+    count, different tier / top-k / interval — the adaptive controller's
+    reconfiguration path).
+
+    The EF residual is the one buffer whose meaning survives a tier change:
+    it is defined in dense bucket coordinates (message minus what the peer
+    reconstructed), independent of how the next message will be encoded —
+    re-injecting it under the new tier is exactly EF-SGD semantics.  It is
+    dropped only when the new config stops tracking it (EF off) and
+    zero-seeded when EF turns on.
+    """
+    if new_cfg.strategy != old_cfg.strategy:
+        raise ValueError(
+            f"retune cannot change strategy ({old_cfg.strategy!r} -> "
+            f"{new_cfg.strategy!r}); that is a reconfiguration "
+            f"(resize_sync_state / Trainer.reconfigure)")
+    n_pods = jax.tree.leaves(stacked_params)[0].shape[0]
+    want_ef = new_cfg.uses_codec and new_cfg.error_feedback
+    had_ef = state.ef_residual.shape[1] > 0
+    if want_ef and not had_ef:
+        n = sum(x.size for x in jax.tree.leaves(stacked_params)) // n_pods
+        resid = jnp.zeros((n_pods, n), jnp.float32)
+    elif not want_ef:
+        resid = jnp.zeros((n_pods, 0), jnp.float32)
+    else:
+        resid = state.ef_residual
+    return state._replace(ef_residual=resid,
+                          tier=jnp.asarray(new_cfg.tier, jnp.int32))
 
 
 # ---------------------------------------------------------------------------

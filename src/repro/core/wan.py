@@ -19,8 +19,8 @@ realized at frequency 4 due to fluctuations, which calibrates the default.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -47,6 +47,70 @@ class WANConfig:
     baseline_roundtrip: float = 2.0   # PS push+pull per baseline sync round
     traffic_cost_per_gb: float = 0.0  # optional WAN egress pricing
     seed: int = 0
+
+
+@dataclass(frozen=True)
+class BandwidthTrace:
+    """Piecewise-constant WAN bandwidth over time — the fluctuating link the
+    adaptive sync controller reacts to (paper: "low bandwidth and high
+    fluctuations").
+
+    ``times_s`` must be ascending and start at 0; ``mbps[i]`` holds on
+    ``[times_s[i], times_s[i+1])``.  Usable three ways: direct lookup
+    (:meth:`at`), injection into the discrete-event simulator
+    (:meth:`to_events`), and step-indexed lookup for emulated training
+    loops (:meth:`at_step`)."""
+
+    times_s: Tuple[float, ...]
+    mbps: Tuple[float, ...]
+
+    def __post_init__(self):
+        if len(self.times_s) != len(self.mbps) or not self.times_s:
+            raise ValueError("times_s and mbps must be equal-length, non-empty")
+        if self.times_s[0] != 0.0:
+            raise ValueError("trace must start at t=0")
+        if any(b <= 0 for b in self.mbps):
+            raise ValueError("bandwidth must be positive")
+        if any(a >= b for a, b in zip(self.times_s, self.times_s[1:])):
+            raise ValueError("times_s must be strictly ascending")
+
+    def at(self, t_s: float) -> float:
+        """Bandwidth in effect at absolute time ``t_s``."""
+        i = int(np.searchsorted(np.asarray(self.times_s), t_s, side="right"))
+        return self.mbps[max(0, i - 1)]
+
+    def at_step(self, step: int, step_time_s: float) -> float:
+        """Bandwidth at the wall-clock of training step ``step``."""
+        return self.at(step * step_time_s)
+
+    def to_events(self) -> List[SimEvent]:
+        """One ``bandwidth_changed`` SimEvent per segment after the first
+        (the first segment is the simulator's starting bandwidth)."""
+        return [SimEvent(time_s=t, kind="bandwidth_changed",
+                         bandwidth_mbps=b)
+                for t, b in zip(self.times_s[1:], self.mbps[1:])]
+
+    @classmethod
+    def fluctuating(cls, *, base_mbps: float = 100.0, duration_s: float = 600.0,
+                    period_s: float = 30.0, sigma: float = 0.6,
+                    floor_mbps: float = 2.0, seed: int = 0
+                    ) -> "BandwidthTrace":
+        """Lognormal random-walk trace: every ``period_s`` the bandwidth is
+        re-drawn as ``base * lognormal(0, sigma)`` mean-reverted halfway to
+        the base — fluctuation statistics matching the simulator's per-
+        transfer lognormal model, but persistent enough (30 s segments)
+        that a controller can react."""
+        rng = np.random.default_rng(seed)
+        times, vals = [0.0], [base_mbps]
+        t = period_s
+        while t < duration_s:
+            drawn = base_mbps * float(rng.lognormal(0.0, sigma))
+            # mean-revert halfway: geometric midpoint of last and drawn
+            level = max(floor_mbps, float(np.sqrt(vals[-1] * drawn)))
+            times.append(t)
+            vals.append(round(level, 2))
+            t += period_s
+        return cls(times_s=tuple(times), mbps=tuple(vals))
 
 
 @dataclass(frozen=True)
@@ -152,6 +216,7 @@ def simulate(
     model_mb: float,
     wan: WANConfig = WANConfig(),
     events: Sequence[SimEvent] = (),
+    trace: Optional[BandwidthTrace] = None,
 ) -> SimResult:
     """Run the discrete-event timeline and return per-cloud accounting.
 
@@ -159,9 +224,14 @@ def simulate(
     iteration boundaries once the lagging active cloud's clock passes their
     ``time_s`` — this is how the elasticity engine's reconfigurations get a
     simulated wall-clock and cost.  With no events the timeline is identical
-    to the static simulator.
+    to the static simulator.  ``trace`` is sugar for a fluctuating link: its
+    segments merge into ``events`` as ``bandwidth_changed`` (its t=0 segment
+    overrides ``wan.bandwidth_mbps`` as the starting bandwidth).
     """
     rng = np.random.default_rng(wan.seed)
+    if trace is not None:
+        events = list(events) + trace.to_events()
+        wan = replace(wan, bandwidth_mbps=trace.mbps[0])
     active = list(clouds)
     iter_time = {c.region: c.iter_time_s for c in active}
     units = {c.region: c.units for c in active}

@@ -57,22 +57,28 @@ def topk_decompress(vals: jnp.ndarray, idx: jnp.ndarray, n: int) -> jnp.ndarray:
 
 
 def wan_encode(x: jnp.ndarray, k_block: int, *, block: int = 4096,
-               use_kernel: bool = True, interpret: bool = False
+               value_dtype: str = "int8", use_kernel: bool = True,
+               interpret: bool = False
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Fused WAN codec encode: block-local top-k + int8 (kernel or oracle).
+    """Fused WAN codec encode: block-local top-k + value quantization on the
+    int8/fp8/int4 tier ladder (kernel or oracle).
 
     The kernel and oracle are bit-identical, so the choice is pure dispatch
     policy: compiled Pallas on TPU, oracle on CPU unless ``interpret``."""
     if use_kernel and (_on_tpu() or interpret):
         return wan_encode_pallas(x, k_block, block=block,
+                                 value_dtype=value_dtype,
                                  interpret=not _on_tpu())
-    return _ref.wan_encode(x, k_block, block=block)
+    return _ref.wan_encode(x, k_block, block=block, value_dtype=value_dtype)
 
 
 def wan_decode(q: jnp.ndarray, idx: jnp.ndarray, scales: jnp.ndarray,
-               n: int, *, block: int = 4096, use_kernel: bool = True,
-               interpret: bool = False) -> jnp.ndarray:
+               n: int, *, block: int = 4096, value_dtype: str = "int8",
+               use_kernel: bool = True, interpret: bool = False
+               ) -> jnp.ndarray:
     if use_kernel and (_on_tpu() or interpret):
         return wan_decode_pallas(q, idx, scales, n, block=block,
+                                 value_dtype=value_dtype,
                                  interpret=not _on_tpu())
-    return _ref.wan_decode(q, idx, scales, n, block=block)
+    return _ref.wan_decode(q, idx, scales, n, block=block,
+                           value_dtype=value_dtype)

@@ -8,8 +8,9 @@
   correct; anchors the whole SSD stack).
 - ``topk_block`` / ``topk_exact`` — block-balanced and exact global top-k.
 - ``wan_encode`` / ``wan_decode`` — the fused WAN payload codec (block-local
-  top-k by 16-bit-truncated magnitude key + per-block int8 quantization),
-  bit-identical to the Pallas kernels in ``wan_codec.py``.
+  top-k by 16-bit-truncated magnitude key + per-block value quantization on
+  the int8 / fp8-e4m3 / nibble-packed-int4 precision ladder), bit-identical
+  to the Pallas kernels in ``wan_codec.py``.
 """
 from __future__ import annotations
 
@@ -87,18 +88,28 @@ def topk_decompress(vals: jnp.ndarray, idx: jnp.ndarray, n: int) -> jnp.ndarray:
 # ------------------------------------------------------- fused WAN codec
 
 
-def wan_encode(x: jnp.ndarray, k_block: int, block: int = 4096
+def wan_encode(x: jnp.ndarray, k_block: int, block: int = 4096,
+               value_dtype: str = "int8"
                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Oracle for ``wan_codec.wan_encode_pallas`` — identical semantics.
 
     Per contiguous block: select the ``k_block`` largest elements by
     magnitude *truncated to the top 16 bits* (``wan_codec.KEY_MASK``; ties by
     lowest index — ``lax.top_k`` is stable), order winners by ascending
-    index, and quantize them to int8 against the block's ``max|x| / 127``
-    scale.  Returns (q int8, block-local idx int32, per-block scales f32).
+    index, and encode them against the block's ``max|x|`` scale on the
+    requested tier: int8 (``max|x|/127`` step), fp8-e4m3 (block max mapped
+    to 448, bit pattern shipped), or int4 (``max|x|/7`` step, nibble-packed
+    two codes per byte).  Returns (payload, block-local idx int32, per-block
+    scales f32); the payload dtype/shape per tier matches the kernel
+    wrapper's wire format exactly.
     """
-    from repro.kernels.wan_codec import INV_127, KEY_MASK
+    from repro.kernels.wan_codec import (FP8_MAX, INV_7, INV_127,
+                                         INV_FP8_MAX, KEY_MASK, VALUE_DTYPES,
+                                         pack_nibbles)
 
+    if value_dtype not in VALUE_DTYPES:
+        raise ValueError(f"unknown value_dtype {value_dtype!r} "
+                         f"(expected one of {VALUE_DTYPES})")
     n = x.shape[0]
     block = min(block, n)
     k_block = min(k_block, block)
@@ -110,18 +121,40 @@ def wan_encode(x: jnp.ndarray, k_block: int, block: int = 4096
     loc = jnp.sort(loc, axis=1)                         # ascending-index order
     vals = jnp.take_along_axis(xb, loc, axis=1)
     maxabs = jnp.max(mag, axis=1)
-    scales = jnp.where(maxabs > 0, maxabs * jnp.float32(INV_127), 1.0)
-    q = jnp.clip(jnp.round(vals / scales[:, None]), -127.0, 127.0)
-    return (q.astype(jnp.int8).reshape(-1),
-            loc.astype(jnp.int32).reshape(-1), scales)
+    if value_dtype == "int8":
+        scales = jnp.where(maxabs > 0, maxabs * jnp.float32(INV_127), 1.0)
+        q = jnp.clip(jnp.round(vals / scales[:, None]), -127.0, 127.0
+                     ).astype(jnp.int8)
+    elif value_dtype == "int4":
+        scales = jnp.where(maxabs > 0, maxabs * jnp.float32(INV_7), 1.0)
+        q = pack_nibbles(jnp.clip(jnp.round(vals / scales[:, None]),
+                                  -7.0, 7.0).astype(jnp.int8))
+    else:                                               # fp8-e4m3
+        scales = jnp.where(maxabs > 0, maxabs * jnp.float32(INV_FP8_MAX), 1.0)
+        f8 = jnp.clip(vals / scales[:, None], -FP8_MAX, FP8_MAX
+                      ).astype(jnp.float8_e4m3fn)
+        q = jax.lax.bitcast_convert_type(f8, jnp.int8)
+    return (q.reshape(-1), loc.astype(jnp.int32).reshape(-1), scales)
 
 
 def wan_decode(q: jnp.ndarray, idx: jnp.ndarray, scales: jnp.ndarray,
-               n: int, block: int = 4096) -> jnp.ndarray:
+               n: int, block: int = 4096,
+               value_dtype: str = "int8") -> jnp.ndarray:
     """Oracle for ``wan_codec.wan_decode_pallas`` -> dense (n,) fp32."""
+    from repro.kernels.wan_codec import unpack_nibbles
+
     block = min(block, n)
     nb = scales.shape[0]
-    v = (q.reshape(nb, -1).astype(jnp.float32) * scales[:, None])
+    k_block = idx.shape[0] // nb
+    if value_dtype == "int4":
+        codes = unpack_nibbles(q.reshape(nb, -1), k_block
+                               ).astype(jnp.float32)
+    elif value_dtype == "fp8":
+        codes = jax.lax.bitcast_convert_type(
+            q.reshape(nb, -1), jnp.float8_e4m3fn).astype(jnp.float32)
+    else:
+        codes = q.reshape(nb, -1).astype(jnp.float32)
+    v = codes * scales[:, None]
     il = idx.reshape(nb, -1)
     rows = jnp.arange(nb)[:, None]
     dense = jnp.zeros((nb, block), jnp.float32).at[rows, il].set(v)

@@ -34,14 +34,27 @@ the selection math above batches trivially over the row dimension, so one
 kernel dispatch selects/quantizes several blocks (amortizing grid overhead
 the same way the sync layer's bucketing amortizes per-leaf dispatch).
 
-Wire format per block of ``block`` elements: ``k_block`` int8 values +
+Wire format per block of ``block`` elements: ``k_block`` encoded values +
 ``k_block`` block-local indices (< 2^16, i.e. u16 on the wire; int32 in
-device memory) + one fp32 scale.  At k/n = 1% and block 4096 that is
-~0.77% of the dense fp32 bytes — the ``SyncConfig.payload_mb`` math.
+device memory) + one fp32 scale.  The **value encoding** is a precision
+ladder (``value_dtype``):
+
+- ``"int8"``  — 1 byte/value, ``q = clip(round(x / (max|x|/127)))``.
+- ``"fp8"``   — 1 byte/value, IEEE fp8-e4m3 (4 exponent + 3 mantissa bits,
+  finite-only, max 448): the block is scaled so ``max|x|`` lands on 448,
+  then cast to ``float8_e4m3fn`` and shipped as the raw bit pattern.  Same
+  bytes as int8 but relative (not absolute) rounding error — robust to
+  heavy-tailed blocks where one outlier crushes int8's uniform step.
+- ``"int4"``  — 0.5 byte/value, ``q = clip(round(x / (max|x|/7)))`` packed
+  two to a byte (low nibble first, two's complement).  Odd ``k_block``
+  pads one zero nibble per block.
+
+At k/n = 1% and block 4096 int8 is ~0.77% of the dense fp32 bytes and int4
+~0.65% — the ``SyncConfig.payload_mb`` math.
 
 ``ref.wan_encode`` / ``ref.wan_decode`` are the pure-jnp oracles with
 bit-identical semantics (same truncated sort key, same tie-breaking, same
-quantizer), so round-trip tests assert exact equality, not allclose.
+quantizers), so round-trip tests assert exact equality, not allclose.
 """
 from __future__ import annotations
 
@@ -57,11 +70,16 @@ from jax.experimental import pallas as pl
 KEY_MASK = ~((1 << 15) - 1)
 _N_KEY_BITS = 16                       # threshold-refinement rounds (bits 30..15)
 
-# scale = maxabs * fl32(1/127), NOT maxabs / 127: XLA rewrites constant
+# scale = maxabs * fl32(1/Q), NOT maxabs / Q: XLA rewrites constant
 # divides to reciprocal multiplies in some fusion contexts but not others,
 # which costs 1 ulp of kernel-vs-oracle exactness; an explicit multiply is
 # never transformed, so both sides round identically
-INV_127 = 1.0 / 127.0
+INV_127 = 1.0 / 127.0                  # int8 tier: q in [-127, 127]
+INV_7 = 1.0 / 7.0                      # int4 tier: q in [-7, 7]
+FP8_MAX = 448.0                        # fp8-e4m3 largest finite value
+INV_FP8_MAX = 1.0 / 448.0
+
+VALUE_DTYPES = ("int8", "fp8", "int4")  # the codec's precision ladder
 
 DEFAULT_BLOCK = 4096
 DEFAULT_ROWS = 8                       # blocks per grid step (VMEM-bounded)
@@ -113,8 +131,70 @@ def _select_mask(x: jnp.ndarray, k_block: int):
     return mask, pos, jnp.max(mag, axis=1)
 
 
+def _quantize(vals: jnp.ndarray, maxabs: jnp.ndarray, value_dtype: str
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tier value encoding of a (rows, k_block) tile of selected values.
+
+    Returns (q int8, scale f32 (rows,)).  ``q`` is always an int8 *container*:
+    the int4 tier's [-7, 7] codes are nibble-packed by the wrapper (packing is
+    a pure bit shuffle, not kernel work), the fp8 tier ships the e4m3 bit
+    pattern bitcast to int8.  All three run identically in the oracle — the
+    expressions below are the bit-level spec.
+    """
+    if value_dtype == "int8":
+        scale = jnp.where(maxabs > 0, maxabs * jnp.float32(INV_127), 1.0)
+        q = jnp.clip(jnp.round(vals / scale[:, None]), -127.0, 127.0)
+        return q.astype(jnp.int8), scale
+    if value_dtype == "int4":
+        scale = jnp.where(maxabs > 0, maxabs * jnp.float32(INV_7), 1.0)
+        q = jnp.clip(jnp.round(vals / scale[:, None]), -7.0, 7.0)
+        return q.astype(jnp.int8), scale
+    if value_dtype == "fp8":
+        # map the block max onto e4m3's largest finite value, clip the 1-ulp
+        # overshoot the fp32 reciprocal can introduce, ship the bit pattern
+        scale = jnp.where(maxabs > 0, maxabs * jnp.float32(INV_FP8_MAX), 1.0)
+        f8 = jnp.clip(vals / scale[:, None], -FP8_MAX, FP8_MAX
+                      ).astype(jnp.float8_e4m3fn)
+        return jax.lax.bitcast_convert_type(f8, jnp.int8), scale
+    raise ValueError(f"unknown value_dtype {value_dtype!r} "
+                     f"(expected one of {VALUE_DTYPES})")
+
+
+def _dequantize(q: jnp.ndarray, scales: jnp.ndarray, value_dtype: str
+                ) -> jnp.ndarray:
+    """Inverse of :func:`_quantize` ((rows, k) int8 container -> f32)."""
+    if value_dtype == "fp8":
+        v = jax.lax.bitcast_convert_type(q, jnp.float8_e4m3fn
+                                         ).astype(jnp.float32)
+    else:                                   # int8 / (unpacked) int4 codes
+        v = q.astype(jnp.float32)
+    return v * scales[..., None]
+
+
+def pack_nibbles(q: jnp.ndarray) -> jnp.ndarray:
+    """Pack int4 codes (.., k) int8 in [-7, 7] -> (.., ceil(k/2)) uint8.
+
+    Low nibble first, two's complement; odd ``k`` pads one zero nibble."""
+    k = q.shape[-1]
+    if k % 2:
+        q = jnp.concatenate(
+            [q, jnp.zeros(q.shape[:-1] + (1,), q.dtype)], axis=-1)
+    lo = q[..., 0::2].astype(jnp.uint8) & 0xF
+    hi = q[..., 1::2].astype(jnp.uint8) & 0xF
+    return lo | (hi << 4)
+
+
+def unpack_nibbles(p: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_nibbles`: (.., ceil(k/2)) uint8 -> (.., k) int8."""
+    lo = (p & 0xF).astype(jnp.int32)
+    hi = ((p >> 4) & 0xF).astype(jnp.int32)
+    pairs = jnp.stack([lo, hi], axis=-1).reshape(p.shape[:-1] + (-1,))
+    signed = jnp.where(pairs < 8, pairs, pairs - 16)
+    return signed[..., :k].astype(jnp.int8)
+
+
 def _encode_kernel(x_ref, q_ref, idx_ref, scale_ref, *, k_block: int,
-                   block: int, rows: int):
+                   block: int, rows: int, value_dtype: str):
     x = x_ref[...].astype(jnp.float32)                  # (rows, block)
     mask, pos, maxabs = _select_mask(x, k_block)
 
@@ -129,17 +209,16 @@ def _encode_kernel(x_ref, q_ref, idx_ref, scale_ref, *, k_block: int,
     idxf = jax.lax.dot_general(onehot, iota, dims,      # exact: < 2^16 < 2^24
                                preferred_element_type=jnp.float32)
 
-    scale = jnp.where(maxabs > 0, maxabs * jnp.float32(INV_127), 1.0)
-    q = jnp.clip(jnp.round(vals / scale[:, None]), -127.0, 127.0)
+    q, scale = _quantize(vals, maxabs, value_dtype)
 
-    q_ref[...] = q.astype(jnp.int8)
+    q_ref[...] = q
     idx_ref[...] = idxf.astype(jnp.int32)
     scale_ref[...] = scale
 
 
 def _decode_kernel(q_ref, idx_ref, scale_ref, out_ref, *, block: int,
-                   rows: int):
-    v = q_ref[...].astype(jnp.float32) * scale_ref[...][:, None]
+                   rows: int, value_dtype: str):
+    v = _dequantize(q_ref[...], scale_ref[...], value_dtype)
     idx = idx_ref[...]                                  # (rows, k_block)
     # transpose of the encode compaction: one nonzero per column -> exact
     cols = jax.lax.broadcasted_iota(jnp.int32, (rows, block, idx.shape[1]), 1)
@@ -162,13 +241,17 @@ def _geometry(n: int, block: int, rows: int, k_block: int
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k_block", "block", "rows", "interpret"))
+                   static_argnames=("k_block", "block", "rows", "value_dtype",
+                                    "interpret"))
 def wan_encode_pallas(
     x: jnp.ndarray, k_block: int, *, block: int = DEFAULT_BLOCK,
-    rows: int = DEFAULT_ROWS, interpret: bool = False,
+    rows: int = DEFAULT_ROWS, value_dtype: str = "int8",
+    interpret: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """x: flat (n,) -> (q int8 (nb*k_block,), local idx int32 (nb*k_block,),
-    scales f32 (nb,)); nb = ceil(n / block)."""
+    """x: flat (n,) -> (payload, local idx int32 (nb*k_block,), scales f32
+    (nb,)); nb = ceil(n / block).  Payload: int8 (nb*k_block,) for
+    int8/fp8 (fp8 ships its bit pattern), uint8 (nb*ceil(k_block/2),)
+    nibble-packed for int4."""
     n = x.shape[0]
     block, rows, nb, nb_pad = _geometry(n, block, rows, k_block)
     k_block = min(k_block, block)
@@ -176,7 +259,7 @@ def wan_encode_pallas(
 
     q, idx, scales = pl.pallas_call(
         functools.partial(_encode_kernel, k_block=k_block, block=block,
-                          rows=rows),
+                          rows=rows, value_dtype=value_dtype),
         grid=(nb_pad // rows,),
         in_specs=[pl.BlockSpec((rows, block), lambda b: (b, 0))],
         out_specs=[pl.BlockSpec((rows, k_block), lambda b: (b, 0)),
@@ -187,27 +270,35 @@ def wan_encode_pallas(
                    jax.ShapeDtypeStruct((nb_pad,), jnp.float32)],
         interpret=interpret,
     )(xp)
-    return (q.reshape(-1)[:nb * k_block], idx.reshape(-1)[:nb * k_block],
-            scales[:nb])
+    q, idx, scales = q[:nb], idx.reshape(-1)[:nb * k_block], scales[:nb]
+    if value_dtype == "int4":
+        q = pack_nibbles(q)          # per-block rows -> wire bytes
+    return q.reshape(-1), idx, scales
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n", "block", "rows", "interpret"))
+                   static_argnames=("n", "block", "rows", "value_dtype",
+                                    "interpret"))
 def wan_decode_pallas(
     q: jnp.ndarray, idx: jnp.ndarray, scales: jnp.ndarray, n: int, *,
     block: int = DEFAULT_BLOCK, rows: int = DEFAULT_ROWS,
-    interpret: bool = False,
+    value_dtype: str = "int8", interpret: bool = False,
 ) -> jnp.ndarray:
     """Inverse of :func:`wan_encode_pallas` -> dense (n,) fp32."""
-    k_block = q.shape[0] // (-(-n // min(block, n)))
+    # k_block from the index array — the int4 payload is nibble-packed, so
+    # q's length is not k_block-shaped for every tier
+    k_block = idx.shape[0] // (-(-n // min(block, n)))
     block, rows, nb, nb_pad = _geometry(n, block, rows, k_block)
+    if value_dtype == "int4":
+        q = unpack_nibbles(q.reshape(nb, -1), k_block)
 
     def pad_rows(a, fill=0):
         a = a.reshape(nb, -1)
         return jnp.pad(a, ((0, nb_pad - nb), (0, 0)), constant_values=fill)
 
     dense = pl.pallas_call(
-        functools.partial(_decode_kernel, block=block, rows=rows),
+        functools.partial(_decode_kernel, block=block, rows=rows,
+                          value_dtype=value_dtype),
         grid=(nb_pad // rows,),
         in_specs=[pl.BlockSpec((rows, k_block), lambda b: (b, 0)),
                   pl.BlockSpec((rows, k_block), lambda b: (b, 0)),

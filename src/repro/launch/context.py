@@ -101,7 +101,10 @@ def sync_state_axes(sync: SyncConfig, param_axes: Pytree) -> SyncState:
         buf = jax.tree.map(lambda la: LA((None,)), param_axes, is_leaf=is_la)
     return SyncState(ga_buffer=buf, steps_since_sync=LA(()),
                      significant_frac=LA(()),
-                     ef_residual=LA(("pod_stack", None)))
+                     ef_residual=LA(("pod_stack", None)),
+                     tier=LA(()),
+                     msg_norm=LA(("pod_stack",)),
+                     resid_norm=LA(("pod_stack",)))
 
 
 def train_state_axes(fns: ModelFns, cfg, tcfg: TrainerConfig) -> TrainState:

@@ -35,11 +35,14 @@ import numpy as np
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import ARCH_IDS, get_arch
 from repro.configs.base import dense
+from repro.core.autotune import AdaptiveSyncController, BucketStats
 from repro.core.control_plane import (CloudEvent, ElasticityController,
-                                      ReconfigPlan, TrainingRequest,
-                                      build_training_plan)
+                                      EventBus, ReconfigPlan,
+                                      TrainingRequest, build_training_plan)
 from repro.core.scheduler import CloudResources, diff_plans
-from repro.core.sync import SyncConfig, is_sync_step, traffic_per_step_mb
+from repro.core.sync import (VALUE_DTYPES, SyncConfig, is_sync_step,
+                             traffic_per_step_mb)
+from repro.core.wan import BandwidthTrace
 from repro.data.pipeline import TokenStream
 from repro.models.registry import get_model_fns
 from repro.training.trainer import Trainer, TrainerConfig, apply_reconfig
@@ -79,6 +82,38 @@ def parse_events(spec: str) -> Dict[int, list]:
     return out
 
 
+def parse_wan_trace(spec: str, steps: int, step_time_s: float
+                    ) -> Optional[BandwidthTrace]:
+    """Parse ``--wan-trace`` into a :class:`BandwidthTrace`.
+
+    Two forms:
+      ``100@0,25@60,80@120``            — explicit mbps@step segments
+      ``random:seed=3,base=100,sigma=0.6,period=20``
+                                        — lognormal random walk (step units)
+    Steps convert to seconds at ``step_time_s`` (the emulated per-step
+    wall-clock the WAN timeline is measured in)."""
+    if not spec:
+        return None
+    if spec.startswith("random:") or spec == "random":
+        kw = {}
+        for part in spec.partition(":")[2].split(","):
+            if part:
+                k, _, v = part.partition("=")
+                kw[k.strip()] = float(v)
+        return BandwidthTrace.fluctuating(
+            base_mbps=kw.get("base", 100.0),
+            duration_s=steps * step_time_s,
+            period_s=kw.get("period", 20.0) * step_time_s,
+            sigma=kw.get("sigma", 0.6),
+            seed=int(kw.get("seed", 0)))
+    times, mbps = [], []
+    for entry in spec.split(","):
+        b, _, at = entry.strip().partition("@")
+        times.append(float(at) * step_time_s)
+        mbps.append(float(b))
+    return BandwidthTrace(times_s=tuple(times), mbps=tuple(mbps))
+
+
 def preset_100m():
     """~100M-parameter dense decoder for the end-to-end driver."""
     return dense("dense-100m", n_layers=8, d_model=768, n_heads=12,
@@ -113,8 +148,12 @@ def main(argv=None):
                     help="ship only this fraction of accumulated-gradient "
                          "entries (asgd_ga; 0 = dense)")
     ap.add_argument("--int8", action="store_true",
-                    help="fused WAN codec: block-local top-k + int8 payload "
-                         "quantization (with --compress-topk)")
+                    help="fused WAN codec: block-local top-k + quantized "
+                         "payload (with --compress-topk; --value-dtype "
+                         "picks the tier)")
+    ap.add_argument("--value-dtype", default="int8", choices=VALUE_DTYPES,
+                    help="codec payload tier: int8 (1 B), fp8 e4m3 (1 B, "
+                         "relative rounding), int4 (0.5 B nibble-packed)")
     ap.add_argument("--error-feedback", action="store_true",
                     help="EF-SGD: re-inject what the codec dropped at the "
                          "next sync (with --int8)")
@@ -133,6 +172,22 @@ def main(argv=None):
                     help="mid-run cloud events, e.g. "
                          "'cloud_left:pod1@40,bandwidth:25@60' "
                          "(see parse_events)")
+    ap.add_argument("--adaptive-sync", action="store_true",
+                    help="close the loop: AdaptiveSyncController retunes "
+                         "compress_topk / value dtype / interval from EF "
+                         "stats + WAN probes (needs --int8 "
+                         "--error-feedback --compress-topk)")
+    ap.add_argument("--wan-trace", default="",
+                    help="emulated bandwidth trace, 'MBPS@step,...' or "
+                         "'random:seed=3,base=100,sigma=0.6,period=20' "
+                         "(see parse_wan_trace); drives the adaptive "
+                         "controller's WAN probe")
+    ap.add_argument("--step-time", type=float, default=0.5,
+                    help="emulated seconds per training step for the WAN "
+                         "trace timeline + controller comm-fraction math")
+    ap.add_argument("--ef-guard", type=float, default=0.9,
+                    help="adaptive sync: EF-residual ratio bound the "
+                         "controller must never trade away")
     args = ap.parse_args(argv)
 
     # ----------------------------------------------------------- model
@@ -158,6 +213,7 @@ def main(argv=None):
     sync_cfg = SyncConfig(args.sync, args.interval,
                           compress_topk=args.compress_topk,
                           quantize_int8=args.int8,
+                          value_dtype=args.value_dtype,
                           error_feedback=args.error_feedback,
                           codec_block=args.codec_block,
                           overlap_chunks=args.overlap_chunks)
@@ -206,8 +262,8 @@ def main(argv=None):
     print(f"[train] {name}: {n_params:,} params/pod ({model_mb:.1f} MB), "
           f"{args.pods} pods, sync={args.sync}@{args.interval}")
     if sync_cfg.uses_codec:
-        print(f"[train] wan codec: top-k {sync_cfg.compress_topk} + int8, "
-              f"block {sync_cfg.codec_block}, "
+        print(f"[train] wan codec: top-k {sync_cfg.compress_topk} + "
+              f"{sync_cfg.value_dtype}, block {sync_cfg.codec_block}, "
               f"ef={'on' if sync_cfg.error_feedback else 'off'}, "
               f"chunks {sync_cfg.overlap_chunks}, payload "
               f"{sync_cfg.payload_mb(model_mb):.2f} MB/sync "
@@ -215,19 +271,83 @@ def main(argv=None):
               f"below dense)")
 
     # -------------------------------------------------------- elasticity
+    # one control plane: the EventBus carries bandwidth/cloud churn to BOTH
+    # actuators — the ElasticityController (re-plan resources) and the
+    # AdaptiveSyncController (retune the codec)
+    bus = EventBus()
     events = parse_events(args.events)
-    controller = ElasticityController(plan) if events else None
+    controller = ElasticityController(plan, bus=bus) if events else None
+    trace = parse_wan_trace(args.wan_trace, args.steps, args.step_time)
+    tuner = None
+    if args.adaptive_sync:
+        if not (sync_cfg.uses_codec and sync_cfg.error_feedback):
+            raise SystemExit(
+                "--adaptive-sync requires the fused codec with error "
+                "feedback: add --compress-topk F --int8 --error-feedback")
+        tuner = AdaptiveSyncController(
+            sync_cfg, model_mb, args.step_time, ef_guard=args.ef_guard,
+            bus=bus)
+        if trace is not None:
+            tuner.observe_wan(trace.at(0.0))
+        print(f"[autotune] ladder: "
+              f"{[f'{c.value_dtype}@{c.compress_topk}' for c in tuner.ladder]}"
+              f", ef_guard {args.ef_guard}, budget {tuner.interval_budget}")
+    last_bw = trace.at(0.0) if trace is not None else None
     # several events may fire between two barriers: the reconfig applied at
     # the barrier is composed against the plan that is actually live on the
     # trainer (pending_base), not against the latest event's predecessor
     pending_base = None     # live plan when the first un-applied event fired
     pending_event = None
     n_reconfigs = 0
+    n_retunes = 0
 
     # ------------------------------------------------------------- loop
     t0 = time.time()
     losses = []
+
+    def fire_event(ev):
+        """Publish a control-plane event on the shared bus and book any
+        resulting reconfig for application at the next sync barrier."""
+        nonlocal pending_base, pending_event
+        rc = next((r for r in bus.publish(ev)
+                   if isinstance(r, ReconfigPlan)), None)
+        if rc is not None:
+            if pending_base is None:
+                pending_base = rc.old
+            pending_event = ev
+            print(f"[elasticity] {ev.kind} at step {step}: "
+                  f"diff {rc.diff.summary()}, "
+                  f"batch split {rc.new.batch_split}, "
+                  f"interval {rc.new.request.sync.interval}")
+
     for step in range(args.steps):
+        # WAN trace: segment changes surface as bandwidth_changed events on
+        # the shared bus (the monitor side of the paper's communicator) —
+        # the elasticity controller AND the codec autotuner both hear them
+        # at the TOP of the step, before this step's transfer is paid
+        if trace is not None:
+            bw = trace.at_step(step, args.step_time)
+            if bw != last_bw:
+                fire_event(CloudEvent("bandwidth_changed", bandwidth_mbps=bw,
+                                      time_s=step * args.step_time))
+                last_bw = bw
+
+        # adaptive sync: the controller decides at the TOP of the step —
+        # freshest WAN probe + the last sync's bucket stats (they persist
+        # in SyncState) — so a link crash is acted on BEFORE this step's
+        # transfer is paid at the stale config
+        if tuner is not None and trainer.cfg.n_pods > 1:
+            upd = tuner.update(step, BucketStats.from_sync_state(
+                state.sync_state))
+            if upd is not None:
+                trainer, state = trainer.retune(state, upd.sync)
+                n_retunes += 1
+                detail = (f", ef_ratio {upd.stats.ef_ratio:.3f}"
+                          if upd.stats else "")
+                print(f"[autotune] step {step + 1}: {upd.summary()} "
+                      f"(payload {upd.sync.payload_mb(model_mb):.3f} MB"
+                      f"{detail})")
+
         state, metrics = trainer.train_step(state, batches(step))
         state = trainer.maybe_sync(state, step, model_mb)
         losses.append(float(metrics["loss"]))
@@ -236,14 +356,7 @@ def main(argv=None):
         # applied at the next sync barrier via checkpointed pod re-stacking
         if controller is not None:
             for ev in events.pop(step, ()):
-                rc = controller.handle(ev)
-                if pending_base is None:
-                    pending_base = rc.old
-                pending_event = ev
-                print(f"[elasticity] {ev.kind} at step {step}: "
-                      f"diff {rc.diff.summary()}, "
-                      f"batch split {rc.new.batch_split}, "
-                      f"interval {rc.new.request.sync.interval}")
+                fire_event(ev)
             at_barrier = (trainer.cfg.sync.strategy == "asgd"
                           or is_sync_step(trainer.cfg.sync, step))
             if pending_base is not None and at_barrier:
@@ -263,6 +376,11 @@ def main(argv=None):
                     n_reconfigs += 1
                     plan = pending.new
                     batches = make_batches(plan)
+                    if tuner is not None:
+                        # the reconfig rewrote the live sync settings:
+                        # re-anchor the autotuner's belief so its next
+                        # update reasons about the knobs actually running
+                        tuner.resync(trainer.cfg.sync)
                     print(f"[elasticity] reconfig applied at barrier "
                           f"step {step + 1}: {trainer.cfg.n_pods} pods, "
                           f"sync interval "
@@ -286,14 +404,20 @@ def main(argv=None):
         "model": name, "pods": args.pods, "sync": args.sync,
         "interval": args.interval, "steps": args.steps,
         "compress_topk": args.compress_topk, "int8": args.int8,
+        "value_dtype": args.value_dtype,
         "error_feedback": args.error_feedback,
         "overlap_chunks": args.overlap_chunks,
         "codec_block": args.codec_block,
         "loss_first": losses[0], "loss_last": float(np.mean(losses[-5:])),
         "wan_traffic_mb": trainer.traffic_mb,
         "reconfigs": n_reconfigs,
+        "retunes": n_retunes,
         "final_pods": trainer.cfg.n_pods,
         "final_interval": trainer.cfg.sync.interval,
+        "final_tier": trainer.cfg.sync.tier,
+        "final_compress_topk": trainer.cfg.sync.compress_topk,
+        "final_value_dtype": trainer.cfg.sync.value_dtype,
+        "max_ef_ratio": round(tuner.max_ef_ratio, 4) if tuner else None,
         "wall_s": round(time.time() - t0, 1),
     }
     print(json.dumps(summary, indent=1))

@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.core.sync import (SyncConfig, SyncState, apply_sync, grow_pods,
                              init_sync_state, is_sync_step, on_step_gradients,
-                             resize_sync_state, shrink_pods,
+                             resize_sync_state, retune_sync_state, shrink_pods,
                              traffic_per_step_mb)
 from repro.optim.optimizers import (Optimizer, clip_by_global_norm,
                                     constant_schedule, get_optimizer,
@@ -150,6 +150,26 @@ class Trainer:
         trainer = Trainer(self.loss_fn, self.init_fn, new_cfg)
         trainer.traffic_mb = self.traffic_mb
         return trainer, new_state
+
+    def retune(self, state: TrainState, sync: SyncConfig
+               ) -> Tuple["Trainer", TrainState]:
+        """Apply an adaptive-sync retune (``SyncPlanUpdate.sync``) at a sync
+        barrier: same strategy and pod count, different codec tier / top-k /
+        interval.  Unlike :meth:`reconfigure` nothing is re-stacked — params
+        and optimizer state pass through untouched, and the EF residual
+        carries over (it lives in dense bucket coordinates, so its meaning
+        is tier-independent); only the jitted sync step re-compiles."""
+        import dataclasses
+        new_cfg = dataclasses.replace(self.cfg, sync=sync)
+        sync_state = retune_sync_state(sync, self.cfg.sync, state.sync_state,
+                                       state.params)
+        trainer = Trainer(self.loss_fn, self.init_fn, new_cfg)
+        # the per-step path depends on the sync *strategy* (which a retune
+        # cannot change), not the codec knobs — reuse the compiled train
+        # step so a retune recompiles only the sync step
+        trainer._train_step = self._train_step
+        trainer.traffic_mb = self.traffic_mb
+        return trainer, state._replace(sync_state=sync_state)
 
     def maybe_sync(self, state: TrainState, host_step: int,
                    model_mb: float = 0.0) -> TrainState:

@@ -1,0 +1,364 @@
+"""Adaptive WAN sync autotuner: ladder construction, control law (guard /
+pressure / headroom / interval budget), retune state carry-over, bandwidth
+traces, and the EF-guard safety property (hypothesis, optional extra).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autotune import (AdaptiveSyncController, BucketStats,
+                                 WanProbe, build_ladder)
+from repro.core.control_plane import CloudEvent, EventBus
+from repro.core.sync import (CODEC_TIERS, SyncConfig, apply_sync,
+                             init_sync_state, on_step_gradients,
+                             retune_sync_state)
+from repro.core.wan import BandwidthTrace, SimCloud, WANConfig, simulate
+
+BASE = SyncConfig("asgd_ga", 4, compress_topk=0.05, quantize_int8=True,
+                  error_feedback=True)
+
+
+def _ctrl(**kw):
+    kw.setdefault("model_mb", 44.6)
+    kw.setdefault("compute_step_s", 0.5)
+    return AdaptiveSyncController(BASE, kw.pop("model_mb"),
+                                  kw.pop("compute_step_s"), **kw)
+
+
+# ------------------------------------------------------------------ ladder
+
+
+def test_ladder_sorted_by_payload_descending():
+    ladder = build_ladder(BASE, (0.05, 0.02, 0.01), ("int8", "fp8", "int4"))
+    payloads = [c.payload_mb(1.0) for c in ladder]
+    assert payloads == sorted(payloads, reverse=True)
+    assert len(ladder) == 9
+    # byte-equal rungs (int8 vs fp8 at the same frac) order int8 first
+    for a, b in zip(ladder, ladder[1:]):
+        if a.payload_mb(1.0) == b.payload_mb(1.0):
+            assert (CODEC_TIERS.index(a.value_dtype)
+                    < CODEC_TIERS.index(b.value_dtype))
+    # every rung is a valid, codec-enabled config
+    assert all(c.uses_codec and c.error_feedback for c in ladder)
+
+
+def test_controller_requires_codec_with_ef():
+    with pytest.raises(ValueError, match="asgd_ga"):
+        AdaptiveSyncController(SyncConfig("asgd_ga", 4), 44.6, 0.5)
+    with pytest.raises(ValueError, match="error_feedback"):
+        AdaptiveSyncController(
+            SyncConfig("asgd_ga", 4, compress_topk=0.05,
+                       quantize_int8=True), 44.6, 0.5)
+    with pytest.raises(ValueError, match="ef_guard"):
+        _ctrl(ef_guard=1.5)
+
+
+# ------------------------------------------------------------- control law
+
+
+def test_guard_trip_deescalates_immediately():
+    c = _ctrl()
+    c.rung = 3
+    c.current = c.ladder[3]
+    u = c.update(0, BucketStats(msg_norm=1.0, resid_norm=0.95))
+    assert u is not None and u.reason == "ef-guard"
+    assert c.rung == 2
+    # at rung 0 the guard clamps (nowhere safer to go) but never escalates
+    c.rung = 0
+    for step in range(8):
+        c.update(step, BucketStats(1.0, 0.95))
+        assert c.rung == 0
+
+
+def test_wan_pressure_escalates_with_hysteresis():
+    c = _ctrl(hysteresis=2)
+    for _ in range(6):
+        c.observe_wan(5.0)                 # 44.6 MB model on a 5 Mbps link
+    calm = BucketStats(1.0, 0.3)
+    r0 = c.rung
+    c.update(0, calm)                      # pressure streak 1: interval only
+    assert c.interval == c.interval_budget and c.rung == r0
+    u = c.update(1, calm)                  # streak 2 -> escalate
+    assert u is not None and u.reason == "wan-pressure"
+    # direct jump: straight to the least aggressive rung whose fitted
+    # interval respects the staleness budget (no transit rungs, each of
+    # which would pay a transfer on the slow link)
+    assert c.rung > r0
+    assert (c._fit_interval(c.ladder[c.rung]) <= c.interval_budget
+            or c.rung == len(c.ladder) - 1)
+    for r in range(r0 + 1, c.rung):
+        assert c._fit_interval(c.ladder[r]) > c.interval_budget
+
+
+def test_no_escalation_without_guard_calm():
+    """WAN pressure never overrides a stressed guard: ratio above
+    escalate_margin * ef_guard blocks the rung increase."""
+    c = _ctrl(hysteresis=1, ef_guard=0.9, escalate_margin=0.8)
+    for _ in range(6):
+        c.observe_wan(2.0)
+    stressed = BucketStats(1.0, 0.8)       # 0.8 >= 0.72 margin, < 0.9 guard
+    r0 = c.rung
+    for step in range(6):
+        c.update(step, stressed)
+    assert c.rung == r0
+
+
+def test_headroom_deescalates():
+    c = _ctrl(hysteresis=2)
+    c.rung = 4
+    c.current = c.ladder[4]
+    for _ in range(6):
+        c.observe_wan(10_000.0)            # fat pipe: fidelity is free
+    calm = BucketStats(1.0, 0.2)
+    rungs = [c.rung]
+    for step in range(10):
+        c.update(step, calm)
+        rungs.append(c.rung)
+    assert c.rung < 4 and min(rungs) == c.rung
+
+
+def test_interval_budget_caps_all_but_last_rung():
+    c = _ctrl()
+    for _ in range(6):
+        c.observe_wan(0.5)                 # absurdly slow link
+    c.update(0, BucketStats(1.0, 0.2))
+    assert c.interval <= c.interval_budget
+    # at the last rung the interval may exceed the budget (escape valve)
+    c.rung = len(c.ladder) - 1
+    c.current = c.ladder[-1]
+    c._calm_streak = c._pressure_streak = 0
+    c.update(1, BucketStats(1.0, 0.2))
+    assert c.interval_budget < c.interval <= c.max_interval
+
+
+def test_no_reading_holds_rung():
+    """msg_norm == 0 means no telemetry yet (first interval / post-resize):
+    the controller must not move the rung on it."""
+    c = _ctrl()
+    r0 = c.rung
+    for _ in range(4):
+        c.observe_wan(1.0)
+    for step in range(5):
+        c.update(step, BucketStats(0.0, 0.0))
+    assert c.rung == r0                    # no escalation without a reading
+
+
+# ----------------------------------------------------------- probes / bus
+
+
+def test_probe_ema_and_fluctuation():
+    c = _ctrl(probe_alpha=0.5)
+    c.observe_wan(100.0)
+    assert c.probe == WanProbe(100.0, 0.0)
+    c.observe_wan(100.0)
+    assert c.probe.fluctuation == 0.0
+    c.observe_wan(25.0)
+    assert 25.0 < c.probe.bandwidth_mbps < 100.0
+    assert c.probe.fluctuation > 0.2
+
+
+def test_resync_reanchors_belief():
+    """An elasticity reconfig that rewrites the live sync settings must
+    re-anchor the controller, or it reasons about knobs no longer running
+    (and emits no update because *its* state never changed)."""
+    from dataclasses import replace
+
+    c = _ctrl()
+    ext = replace(BASE, compress_topk=0.01, value_dtype="int4", interval=64)
+    c.resync(ext)
+    assert c.interval == 64
+    assert c.ladder[c.rung].compress_topk == 0.01
+    assert c.ladder[c.rung].value_dtype == "int4"
+    # with a fat pipe, the next update pulls the interval back down
+    for _ in range(6):
+        c.observe_wan(10_000.0)
+    u = c.update(0, BucketStats(1.0, 0.3))
+    assert u is not None and u.sync.interval < 64
+
+
+def test_eventbus_feeds_probe():
+    bus = EventBus()
+    c = _ctrl(bus=bus)
+    bus.publish(CloudEvent("bandwidth_changed", bandwidth_mbps=42.0))
+    assert c.probe.bandwidth_mbps == 42.0
+
+
+# ------------------------------------------------- stats from sync state
+
+
+def _grads(n_pods=2, seed=1):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(n_pods, 300, 40)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(n_pods, 77)), jnp.float32)}
+
+
+def test_bucket_stats_from_sync_state():
+    g = _grads()
+    cfg = SyncConfig("asgd_ga", 1, compress_topk=0.1, quantize_int8=True,
+                     error_feedback=True, codec_block=512)
+    p = jax.tree.map(jnp.zeros_like, g)
+    st = init_sync_state(cfg, p)
+    # before any sync: no reading
+    assert BucketStats.from_sync_state(st).msg_norm == 0.0
+    _, st = on_step_gradients(cfg, g, st)
+    _, st = apply_sync(cfg, p, st, lr=1.0)
+    stats = BucketStats.from_sync_state(st)
+    assert stats.msg_norm > 0 and 0 < stats.ef_ratio < 1
+    assert 0 < stats.energy_capture < 1
+    # worst pod governs: the reported ratio is the max across pods
+    ratios = np.asarray(st.resid_norm) / np.asarray(st.msg_norm)
+    assert stats.ef_ratio == pytest.approx(float(ratios.max()), rel=1e-6)
+
+
+def test_retune_preserves_ef_residual_across_tiers():
+    g = _grads()
+    cfg8 = SyncConfig("asgd_ga", 1, compress_topk=0.1, quantize_int8=True,
+                      error_feedback=True, codec_block=512)
+    p = jax.tree.map(jnp.zeros_like, g)
+    st = init_sync_state(cfg8, p)
+    _, st = on_step_gradients(cfg8, g, st)
+    _, st = apply_sync(cfg8, p, st, lr=1.0)
+    cfg4 = SyncConfig("asgd_ga", 2, compress_topk=0.02, quantize_int8=True,
+                      value_dtype="int4", error_feedback=True,
+                      codec_block=512)
+    st2 = retune_sync_state(cfg4, cfg8, st, p)
+    # the residual is tier-independent (dense bucket coords): carried over
+    np.testing.assert_array_equal(np.asarray(st2.ef_residual),
+                                  np.asarray(st.ef_residual))
+    assert int(st2.tier) == cfg4.tier
+    # EF off drops the buffer; EF back on re-arms it at zero
+    cfg_no_ef = SyncConfig("asgd_ga", 2, compress_topk=0.02,
+                           quantize_int8=True, codec_block=512)
+    st3 = retune_sync_state(cfg_no_ef, cfg4, st2, p)
+    assert st3.ef_residual.shape[1] == 0
+    st4 = retune_sync_state(cfg4, cfg_no_ef, st3, p)
+    assert st4.ef_residual.shape == st.ef_residual.shape
+    assert float(jnp.abs(st4.ef_residual).max()) == 0.0
+    # strategy changes are reconfigurations, not retunes
+    with pytest.raises(ValueError, match="strategy"):
+        retune_sync_state(SyncConfig("ama", 2), cfg4, st2, p)
+
+
+def test_trainer_retune_keeps_training():
+    from repro.training.trainer import Trainer, TrainerConfig
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    def init_fn(key):
+        return {"w": jax.random.normal(key, (8, 1)) * 0.1}
+
+    tr = Trainer(loss_fn, init_fn,
+                 TrainerConfig(n_pods=2, optimizer="sgd", lr=0.05, sync=BASE))
+    st = tr.init_state(jax.random.key(0))
+    rng = np.random.default_rng(0)
+
+    def batch():
+        x = rng.normal(size=(2, 16, 8)).astype(np.float32)
+        y = (x.sum(-1, keepdims=True) * 0.3).astype(np.float32)
+        return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+    for step in range(4):
+        st, m = tr.train_step(st, batch())
+        st = tr.maybe_sync(st, step)
+    new_sync = SyncConfig("asgd_ga", 2, compress_topk=0.01,
+                          quantize_int8=True, value_dtype="int4",
+                          error_feedback=True)
+    tr2, st2 = tr.retune(st, new_sync)
+    # params/opt pass through untouched; tier updated; residual carried
+    for a, b in zip(jax.tree.leaves(st.params), jax.tree.leaves(st2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(st.sync_state.ef_residual),
+                                  np.asarray(st2.sync_state.ef_residual))
+    assert int(st2.sync_state.tier) == new_sync.tier
+    losses = []
+    for step in range(4, 10):
+        st2, m = tr2.train_step(st2, batch())
+        st2 = tr2.maybe_sync(st2, step)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+
+
+# ------------------------------------------------------- bandwidth traces
+
+
+def test_bandwidth_trace_lookup_and_events():
+    tr = BandwidthTrace(times_s=(0.0, 30.0, 60.0), mbps=(100.0, 10.0, 80.0))
+    assert tr.at(0.0) == 100.0 and tr.at(29.9) == 100.0
+    assert tr.at(30.0) == 10.0 and tr.at(1e9) == 80.0
+    assert tr.at_step(7, 5.0) == 10.0      # 35 s -> second segment
+    evs = tr.to_events()
+    assert [e.bandwidth_mbps for e in evs] == [10.0, 80.0]
+    assert all(e.kind == "bandwidth_changed" for e in evs)
+    with pytest.raises(ValueError):
+        BandwidthTrace(times_s=(1.0,), mbps=(5.0,))      # must start at 0
+    with pytest.raises(ValueError):
+        BandwidthTrace(times_s=(0.0, 0.0), mbps=(5.0, 6.0))
+
+
+def test_fluctuating_trace_is_valid_and_seeded():
+    a = BandwidthTrace.fluctuating(seed=3, duration_s=300.0)
+    b = BandwidthTrace.fluctuating(seed=3, duration_s=300.0)
+    assert a == b
+    assert len(a.mbps) >= 5 and all(m > 0 for m in a.mbps)
+    assert len(set(a.mbps)) > 1                          # actually fluctuates
+
+
+def test_simulate_accepts_trace():
+    clouds = [SimCloud("sh", 1.0), SimCloud("cq", 1.2)]
+    tr = BandwidthTrace(times_s=(0.0, 20.0), mbps=(100.0, 10.0))
+    r1 = simulate(clouds, SyncConfig("asgd_ga", 4), n_iters=50,
+                  model_mb=44.6, wan=WANConfig(fluctuation=0.0), trace=tr)
+    r2 = simulate(clouds, SyncConfig("asgd_ga", 4), n_iters=50,
+                  model_mb=44.6, wan=WANConfig(fluctuation=0.0))
+    assert r1.makespan_s > r2.makespan_s  # the 10 Mbps tail hurts
+
+
+# ------------------------------------------------------- safety property
+
+
+def test_guard_never_violated_on_random_traces():
+    """The EF-guard invariant on random WAN traces + random stats streams:
+    the controller NEVER escalates while the observed ratio is at/above the
+    escalation margin, and always de-escalates (or clamps at rung 0) when
+    the guard trips.  Runs under hypothesis when installed, else a seeded
+    1000-case fallback exercises the same invariant."""
+    def run_case(seed):
+        rng = np.random.default_rng(seed)
+        c = _ctrl(hysteresis=int(rng.integers(1, 4)),
+                  ef_guard=float(rng.uniform(0.5, 0.95)))
+        trace = BandwidthTrace.fluctuating(
+            base_mbps=float(rng.uniform(5, 200)), seed=seed,
+            duration_s=600.0, sigma=float(rng.uniform(0.2, 1.2)))
+        t = 0.0
+        for i in range(40):
+            t += float(rng.uniform(1, 30))
+            c.observe_wan(trace.at(t))
+            ratio = float(rng.uniform(0.0, 1.0))
+            before = c.rung
+            c.update(i, BucketStats(msg_norm=1.0, resid_norm=ratio))
+            if ratio >= c.ef_guard:
+                assert c.rung == max(0, before - 1), \
+                    f"guard trip must de-escalate (seed {seed}, step {i})"
+            elif ratio >= c.escalate_margin * c.ef_guard:
+                assert c.rung <= before, \
+                    f"escalated under guard stress (seed {seed}, step {i})"
+            assert 0 <= c.rung < len(c.ladder)
+            assert c.min_interval <= c.interval <= c.max_interval
+
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st_
+    except ImportError:
+        for seed in range(1000):
+            run_case(seed)
+        return
+
+    @settings(max_examples=200, deadline=None)
+    @given(st_.integers(0, 2 ** 31 - 1))
+    def prop(seed):
+        run_case(seed)
+
+    prop()

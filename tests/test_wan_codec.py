@@ -125,6 +125,130 @@ def test_ops_dispatch_oracle_equals_kernel():
     np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_o))
 
 
+# --------------------------------------------- precision tiers (int4 / fp8)
+
+
+@pytest.mark.parametrize("value_dtype", ["int8", "fp8", "int4"])
+@pytest.mark.parametrize("n,k_block,block", [
+    (4096, 41, 1024),     # odd k_block: int4 pads one zero nibble per block
+    (5000, 12, 1024),     # padded tail block
+    (300, 8, 512),        # single short block
+])
+def test_tier_kernel_matches_oracle_exactly(value_dtype, n, k_block, block):
+    x = _rand(n)
+    q1, i1, s1 = wan_encode_pallas(x, k_block, block=block,
+                                   value_dtype=value_dtype, interpret=True)
+    q2, i2, s2 = ref.wan_encode(x, k_block, block=block,
+                                value_dtype=value_dtype)
+    assert q1.dtype == q2.dtype
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    d1 = wan_decode_pallas(q1, i1, s1, n, block=block,
+                           value_dtype=value_dtype, interpret=True)
+    d2 = ref.wan_decode(q2, i2, s2, n, block=block, value_dtype=value_dtype)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+def test_int4_payload_is_nibble_packed():
+    """int4 wire bytes: uint8, ceil(k_block/2) per block — half of int8."""
+    n, block = 4096, 1024
+    for kb in (16, 17):                       # even and odd winner counts
+        q8, _, _ = ref.wan_encode(_rand(n), kb, block=block,
+                                  value_dtype="int8")
+        q4, _, _ = ref.wan_encode(_rand(n), kb, block=block,
+                                  value_dtype="int4")
+        nb = n // block
+        assert q8.shape[0] == nb * kb and q8.dtype == jnp.int8
+        assert q4.shape[0] == nb * ((kb + 1) // 2) and q4.dtype == jnp.uint8
+
+
+def test_pack_unpack_nibbles_round_trip():
+    from repro.kernels.wan_codec import pack_nibbles, unpack_nibbles
+
+    for k in (6, 7):                          # even / odd
+        q = jnp.asarray(RNG.integers(-7, 8, size=(5, k)), jnp.int8)
+        p = pack_nibbles(q)
+        assert p.shape == (5, (k + 1) // 2) and p.dtype == jnp.uint8
+        np.testing.assert_array_equal(np.asarray(unpack_nibbles(p, k)),
+                                      np.asarray(q))
+
+
+@pytest.mark.parametrize("value_dtype", ["fp8", "int4"])
+def test_tier_ties_and_zero_blocks(value_dtype):
+    x = _rand(777).at[:64].set(0.25).at[400:].set(0.0)
+    q1, i1, s1 = wan_encode_pallas(x, 16, block=128,
+                                   value_dtype=value_dtype, interpret=True)
+    q2, i2, s2 = ref.wan_encode(x, 16, block=128, value_dtype=value_dtype)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    # all-zero input: scale falls back to 1, payload decodes to exact zeros
+    z = jnp.zeros((512,), jnp.float32)
+    q, i, s = wan_encode_pallas(z, 8, block=256, value_dtype=value_dtype,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(s), np.ones(2, np.float32))
+    d = wan_decode_pallas(q, i, s, 512, block=256, value_dtype=value_dtype,
+                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(d), np.zeros(512, np.float32))
+
+
+def test_int4_round_trip_error_bounded_by_half_scale():
+    """Every reconstructed winner is within scale/2 = max|x|/14 of its
+    fp32 value — the int4 analogue of the int8 half-step bound."""
+    n, block, k_block = 4096, 1024, 64
+    x = _rand(n)
+    q, idx, scales = ref.wan_encode(x, k_block, block=block,
+                                    value_dtype="int4")
+    dense = np.asarray(ref.wan_decode(q, idx, scales, n, block=block,
+                                      value_dtype="int4"))
+    xb = np.asarray(x).reshape(-1, block)
+    db = dense.reshape(-1, block)
+    il = np.asarray(idx).reshape(-1, k_block)
+    for b in range(xb.shape[0]):
+        err = np.abs(db[b, il[b]] - xb[b, il[b]])
+        assert err.max() <= float(scales[b]) * 0.5 + 1e-7
+
+
+def test_fp8_round_trip_error_is_relative():
+    """fp8-e4m3 rounds to 3 mantissa bits: every reconstructed winner is
+    within half an ulp — 2^-4 relative — of its fp32 value (plus the
+    subnormal floor scale * 2^-10)."""
+    n, block, k_block = 4096, 1024, 64
+    x = _rand(n)
+    q, idx, scales = ref.wan_encode(x, k_block, block=block,
+                                    value_dtype="fp8")
+    dense = np.asarray(ref.wan_decode(q, idx, scales, n, block=block,
+                                      value_dtype="fp8"))
+    xs = np.asarray(x)
+    sel = dense != 0
+    err = np.abs(dense[sel] - xs[sel])
+    bound = np.abs(xs[sel]) * 2.0 ** -4 + float(scales.max()) * 2.0 ** -10
+    assert (err <= bound).all()
+
+
+def test_fp8_beats_int8_on_heavy_tailed_blocks():
+    """The fp8 tier's reason to exist: int8's uniform step is set by the
+    block max, so one huge outlier crushes every small value to zero; fp8's
+    relative rounding keeps them.  Reconstruction error (on the selected
+    entries) must be strictly better for fp8 here."""
+    block = 256
+    x = np.asarray(RNG.normal(size=(1024,)) * 1e-3, np.float32)
+    x[::block] = 50.0                          # one outlier per block
+    xj = jnp.asarray(x)
+    errs = {}
+    for dt in ("int8", "fp8"):
+        q, idx, s = ref.wan_encode(xj, 32, block=block, value_dtype=dt)
+        d = np.asarray(ref.wan_decode(q, idx, s, 1024, block=block,
+                                      value_dtype=dt))
+        sel = np.zeros_like(x, bool)
+        il = np.asarray(idx).reshape(-1, 32)
+        for b in range(il.shape[0]):
+            sel[b * block + il[b]] = True
+        errs[dt] = np.abs(d - x)[sel].sum()
+    assert errs["fp8"] < errs["int8"]
+
+
 # ------------------------------------------------- sync-layer integration
 
 
@@ -266,6 +390,23 @@ def test_payload_math_int8():
     assert dense.payload_mb(100.0) / codec.payload_mb(100.0) >= 8.0
 
 
+def test_payload_math_tiers():
+    """fp8 costs int8 bytes (1 B + u16 idx); int4 nibble-packs to 0.5 B."""
+    base = dict(compress_topk=0.01, quantize_int8=True, codec_block=4096)
+    int8 = SyncConfig("asgd_ga", 8, **base)
+    fp8 = SyncConfig("asgd_ga", 8, value_dtype="fp8", **base)
+    int4 = SyncConfig("asgd_ga", 8, value_dtype="int4", **base)
+    assert fp8.payload_mb(100.0) == int8.payload_mb(100.0)
+    assert int4.payload_mb(100.0) == pytest.approx(
+        100.0 * (0.01 * 0.625 + 1.0 / 4096))
+    assert int4.payload_mb(100.0) < int8.payload_mb(100.0)
+    # tier indices follow the CODEC_TIERS ladder; codec-off is tier 0
+    from repro.core.sync import CODEC_TIERS
+    assert CODEC_TIERS == ("fp32", "int8", "fp8", "int4")
+    assert SyncConfig("asgd_ga", 8).tier == 0
+    assert (int8.tier, fp8.tier, int4.tier) == (1, 2, 3)
+
+
 def test_config_validation():
     with pytest.raises(ValueError):
         SyncConfig("asgd_ga", 1, error_feedback=True)   # EF needs the codec
@@ -280,6 +421,62 @@ def test_config_validation():
         SyncConfig("asgd_ga", 1, quantize_int8=True)
     with pytest.raises(ValueError):
         SyncConfig("ama", 1, compress_topk=0.1, quantize_int8=True)
+
+
+def test_config_validation_precise_errors():
+    """Each mis-coupling gets its own actionable message (not one blanket
+    error), and the new tiers validate their own knob."""
+    with pytest.raises(ValueError, match="value_dtype"):
+        SyncConfig("asgd_ga", 1, compress_topk=0.1, quantize_int8=True,
+                   value_dtype="int2")
+    with pytest.raises(ValueError, match="strategy='asgd_ga'"):
+        SyncConfig("sma", 1, compress_topk=0.1, quantize_int8=True)
+    with pytest.raises(ValueError, match="compress_topk"):
+        SyncConfig("asgd_ga", 1, quantize_int8=True, value_dtype="int4")
+    with pytest.raises(ValueError, match="error_feedback"):
+        SyncConfig("asgd_ga", 1, error_feedback=True)
+    with pytest.raises(ValueError, match="overlap_chunks"):
+        SyncConfig("asgd_ga", 1, overlap_chunks=4)
+    # a non-default tier without the codec would be silently inert: the
+    # run ships fp32 while the summary claims fp8/int4
+    with pytest.raises(ValueError, match="inert"):
+        SyncConfig("asgd_ga", 1, compress_topk=0.01, value_dtype="fp8")
+    with pytest.raises(ValueError, match="inert"):
+        SyncConfig("asgd_ga", 1, value_dtype="int4")
+    # valid tier configs construct fine
+    for dt in ("int8", "fp8", "int4"):
+        cfg = SyncConfig("asgd_ga", 4, compress_topk=0.05,
+                         quantize_int8=True, value_dtype=dt,
+                         error_feedback=True)
+        assert cfg.uses_codec and cfg.value_dtype == dt
+
+
+@pytest.mark.parametrize("value_dtype", ["fp8", "int4"])
+def test_codec_tier_sync_round_trip(value_dtype):
+    """The sync layer ships each tier end to end: peer message bounded by
+    the tier's quantization step, EF residual exact, tier recorded in
+    SyncState."""
+    g = _grads()
+    cfg = SyncConfig("asgd_ga", 1, compress_topk=0.25, quantize_int8=True,
+                     value_dtype=value_dtype, error_feedback=True,
+                     codec_block=512)
+    p = jax.tree.map(jnp.zeros_like, g)
+    st = init_sync_state(cfg, p)
+    assert int(st.tier) == cfg.tier
+    _, st = on_step_gradients(cfg, g, st)
+    out, st2 = apply_sync(cfg, p, st, lr=1.0)
+    from repro.core.sync import _pack_stacked
+    msg = np.asarray(_pack_stacked(st.ga_buffer))
+    received = -np.asarray(_pack_stacked(out))
+    local = np.roll(received, -cfg.peer_shift, axis=0)
+    np.testing.assert_allclose(np.asarray(st2.ef_residual), msg - local,
+                               atol=1e-6)
+    assert int(st2.tier) == cfg.tier
+    # the sync round recorded the controller's signals
+    assert (np.asarray(st2.msg_norm) > 0).all()
+    assert (np.asarray(st2.resid_norm) > 0).all()
+    ratio = np.asarray(st2.resid_norm) / np.asarray(st2.msg_norm)
+    assert (ratio < 1.0).all()        # structurally sqrt(1 - capture)
 
 
 # ------------------------------------------------- convergence parity
