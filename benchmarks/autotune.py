@@ -20,9 +20,18 @@ Headline metric: **time-to-target-loss** — emulated seconds until the
 must beat the best *static* configuration, with its EF-residual guard never
 violated (``max_ef_ratio <= ef_guard`` over the whole run).
 
-The per-sync signal stream (sim time, bandwidth, EF ratio) and the decision
-list land in ``BENCH_autotune.json`` so ``benchmarks/check_regression.py``
-can replay the control law deterministically without re-training.
+A second scenario measures **per-bucket vs single-bucket control** on the
+same fluctuating trace: DeepFM (the paper's CTR workload — its embedding
+table is ~27% of the payload and norm-class vectors ~2%, so the layer-class
+partition has real byte mass to trade) trained once under the single-bucket
+``AdaptiveSyncController`` and once under the ``BucketedSyncController``.
+Acceptance: the bucketed run reaches the target **no later** at **no more
+wire bytes**, with neither run's EF guard violated on any bucket.
+
+The per-sync signal stream (sim time, bandwidth, EF norms — per bucket for
+the multi-controller run) and the decision lists land in
+``BENCH_autotune.json`` so ``benchmarks/check_regression.py`` can replay
+both control laws deterministically without re-training.
 
 Run:  PYTHONPATH=src python -m benchmarks.autotune
       PYTHONPATH=src python -m benchmarks.autotune --compare A.json B.json
@@ -58,6 +67,18 @@ TUNER_KW = dict(ef_guard=EF_GUARD, topk_ladder=(0.05, 0.02, 0.01),
 BASE_SYNC = dict(strategy="asgd_ga", interval=4, compress_topk=0.05)
 SEED = 0
 
+# per-bucket scenario: DeepFM, same trace, same emulated payload scale.
+# Both deepfm runs (single AND bucketed) use the same knobs; the wider
+# escalate_margin reflects that per-bucket EF ratios are structurally
+# higher than the pooled single-bucket ratio (a bucket's own ratio is not
+# diluted by easier buckets' energy — on deepfm the dense tower reads
+# ~0.96 where the pooled ratio reads ~0.88), so the escalation threshold
+# scales accordingly; the hard ef_guard is identical for both.
+BUCKETED_MODEL = "deepfm"
+BUCKETED_TARGET_LOSS = 0.04      # bce from ~0.69; reached ~step 140
+BUCKETED_TUNER_KW = {**TUNER_KW, "escalate_margin": 0.99}
+FEATURE_VOCAB = 5400             # Frappe-scale feature space (reference.py)
+
 # the fluctuating link: calm 100 Mbps, a deep 0.5 Mbps trough, partial
 # recovery, a second trough — the regime the paper measures ("low bandwidth
 # and high fluctuations") where no static config is right twice: fidelity
@@ -74,14 +95,15 @@ def _trace():
                           mbps=tuple(b for _, b in TRACE_SEGMENTS))
 
 
-def _make_trainer(sync):
+def _make_trainer(sync, model: str = "lenet"):
     from repro.data.pipeline import GeoDataset, synthetic_classification
     from repro.models.reference import PAPER_MODELS
     from repro.training.trainer import Trainer, TrainerConfig
 
-    m = PAPER_MODELS["lenet"]
-    data = synthetic_classification(1500, m["input_shape"], m["n_classes"],
-                                    seed=SEED)
+    m = PAPER_MODELS[model]
+    data = synthetic_classification(
+        1500, m["input_shape"], m["n_classes"], seed=SEED,
+        feature_vocab=FEATURE_VOCAB if model == "deepfm" else None)
     geo = GeoDataset.partition(data, ["sh", "cq"], [2, 1])
     loaders = [geo.loader("sh", 32, seed=0), geo.loader("cq", 32, seed=1)]
     tr = Trainer(lambda p, b: (m["loss"](p, b), {}), m["init"],
@@ -89,34 +111,47 @@ def _make_trainer(sync):
     return tr, loaders
 
 
-def run_variant(sync, *, adaptive: bool = False) -> Dict:
+def run_variant(sync, *, adaptive: bool = False, bucketed: bool = False,
+                model: str = "lenet", target_loss: float = TARGET_LOSS,
+                tuner_kw: Optional[Dict] = None) -> Dict:
     """One emulated-timeline training run; returns the measured trajectory.
 
     ``adaptive=True`` attaches an AdaptiveSyncController that observes the
     trace bandwidth + each sync's EF stats and retunes through
     ``Trainer.retune`` — the exact production path of ``launch.train
-    --adaptive-sync``."""
-    from repro.core.autotune import AdaptiveSyncController, BucketStats
-    from repro.core.sync import is_sync_step
+    --adaptive-sync``.  ``bucketed=True`` attaches the per-bucket
+    BucketedSyncController instead (``--bucket-policy layer-class``) and
+    records per-bucket signals/decisions for the replay gate."""
+    from repro.core.autotune import (AdaptiveSyncController, BucketStats,
+                                     BucketedSyncController,
+                                     bucket_stats_from_sync_state)
+    from repro.core.sync import bucket_weights_of, is_sync_step
     from repro.training.trainer import stack_pod_batches
 
     trace = _trace()
-    trainer, loaders = _make_trainer(sync)
+    trainer, loaders = _make_trainer(sync, model=model)
     state = trainer.init_state(jax.random.key(SEED))
+    weights = (bucket_weights_of(sync, state.params)
+               if sync.bucket_policy != "single" else None)
     tuner = None
-    if adaptive:
-        tuner = AdaptiveSyncController(sync, MODEL_MB, COMPUTE_STEP_S,
-                                       **TUNER_KW)
+    kw = tuner_kw if tuner_kw is not None else TUNER_KW
+    if bucketed:
+        bucket_mb = {n: w * MODEL_MB for n, w in weights.items()}
+        tuner = BucketedSyncController(sync, bucket_mb, COMPUTE_STEP_S, **kw)
+        tuner.observe_wan(trace.at(0.0))
+    elif adaptive:
+        tuner = AdaptiveSyncController(sync, MODEL_MB, COMPUTE_STEP_S, **kw)
         tuner.observe_wan(trace.at(0.0))
 
     sim_t = 0.0
     losses: List[float] = []
-    signals: List[List[float]] = []     # [sim_t, bw, ef_ratio] per step
+    signals: List[list] = []   # [sim_t, bw, <stats...>] per step
     decisions: List[Dict] = []
     traffic_mb = 0.0
     max_ratio = 0.0
     time_to_target: Optional[float] = None
     stats = BucketStats(0.0, 0.0)       # no reading before the first sync
+    bstats: Dict[str, BucketStats] = {}
 
     for step in range(STEPS):
         # the WAN monitor probes every step (out-of-band, like the bus's
@@ -129,21 +164,35 @@ def run_variant(sync, *, adaptive: bool = False) -> Dict:
             tuner.observe_wan(bw)
             # full-precision norms, NOT a rounded ratio: the replay gate
             # reconstructs BucketStats from these, and both the
-            # "no reading yet" state (msg_norm 0) and the controller's
+            # "no reading yet" state (msg_norm 0) and the controllers'
             # consume-once staleness check (value equality of consecutive
             # readings) must survive the JSON round trip exactly
-            signals.append([round(sim_t, 3), bw,
-                            stats.msg_norm, stats.resid_norm])
-            upd = tuner.update(step, stats)
+            if bucketed:
+                signals.append([round(sim_t, 3), bw,
+                                {n: [s.msg_norm, s.resid_norm]
+                                 for n, s in bstats.items()}])
+                upd = tuner.update(step, bstats)
+            else:
+                signals.append([round(sim_t, 3), bw,
+                                stats.msg_norm, stats.resid_norm])
+                upd = tuner.update(step, stats)
             if upd is not None:
                 trainer, state = trainer.retune(state, upd.sync)
-                decisions.append({
-                    "step": step, "sim_t": round(sim_t, 2),
-                    "rung": upd.rung, "tier": upd.tier,
-                    "value_dtype": upd.sync.value_dtype,
-                    "compress_topk": upd.sync.compress_topk,
-                    "interval": upd.sync.interval,
-                    "reason": upd.reason})
+                if bucketed:
+                    decisions.append({
+                        "step": step, "sim_t": round(sim_t, 2),
+                        "rungs": {n: r for n, r, _ in upd.rungs},
+                        "tiers": {n: t for n, _, t in upd.rungs},
+                        "interval": upd.sync.interval,
+                        "reasons": list(upd.reasons)})
+                else:
+                    decisions.append({
+                        "step": step, "sim_t": round(sim_t, 2),
+                        "rung": upd.rung, "tier": upd.tier,
+                        "value_dtype": upd.sync.value_dtype,
+                        "compress_topk": upd.sync.compress_topk,
+                        "interval": upd.sync.interval,
+                        "reason": upd.reason})
 
         state, metrics = trainer.train_step(
             state, stack_pod_batches([next(ld) for ld in loaders]))
@@ -152,15 +201,19 @@ def run_variant(sync, *, adaptive: bool = False) -> Dict:
 
         if is_sync_step(trainer.cfg.sync, step):
             bw = trace.at(sim_t)            # achieved bandwidth this round
-            payload = trainer.cfg.sync.payload_mb(MODEL_MB)
+            payload = trainer.cfg.sync.payload_mb(MODEL_MB,
+                                                  bucket_weights=weights)
             sim_t += payload * 8.0 / bw * (1.0 - OVERLAP)
             traffic_mb += payload * trainer.cfg.n_pods
             state = trainer._sync_step(state)
             stats = BucketStats.from_sync_state(state.sync_state)
             max_ratio = max(max_ratio, stats.ef_ratio)
+            if bucketed:
+                bstats = bucket_stats_from_sync_state(
+                    state.sync_state, trainer.cfg.sync.bucket_names)
 
         if (time_to_target is None and len(losses) >= 5
-                and float(np.mean(losses[-5:])) <= TARGET_LOSS):
+                and float(np.mean(losses[-5:])) <= target_loss):
             time_to_target = round(sim_t, 2)
 
     out = {
@@ -174,14 +227,29 @@ def run_variant(sync, *, adaptive: bool = False) -> Dict:
         out.update({
             "n_retunes": len(decisions),
             "ef_guard": EF_GUARD,
-            "final_rung": tuner.rung,
-            "final_config": {
-                "value_dtype": trainer.cfg.sync.value_dtype,
-                "compress_topk": trainer.cfg.sync.compress_topk,
-                "interval": trainer.cfg.sync.interval},
             "decisions": decisions,
             "signals": signals,
         })
+        if bucketed:
+            out.update({
+                "final_rungs": {n: b.rung for n, b in tuner.buckets.items()},
+                "final_config": {
+                    n: {"value_dtype": b.cfg.value_dtype,
+                        "compress_topk": b.cfg.compress_topk}
+                    for n, b in tuner.buckets.items()},
+                "final_interval": trainer.cfg.sync.interval,
+                "max_ef_ratio_by_bucket": {
+                    n: round(r, 6)
+                    for n, r in tuner.max_ef_ratio_by_bucket.items()},
+            })
+        else:
+            out.update({
+                "final_rung": tuner.rung,
+                "final_config": {
+                    "value_dtype": trainer.cfg.sync.value_dtype,
+                    "compress_topk": trainer.cfg.sync.compress_topk,
+                    "interval": trainer.cfg.sync.interval},
+            })
     return out
 
 
@@ -198,6 +266,50 @@ def static_variants() -> Dict[str, "object"]:
         "int4_topk0.01@4": SyncConfig("asgd_ga", 4, compress_topk=0.01,
                                       value_dtype="int4", **base),
     }
+
+
+def bench_bucketed() -> Dict:
+    """Per-bucket vs single-bucket adaptive control, same trace, DeepFM."""
+    import jax as _jax
+    from repro.core.sync import SyncConfig, bucket_weights_of
+    from repro.models.reference import PAPER_MODELS
+
+    base_kw = dict(compress_topk=BASE_SYNC["compress_topk"],
+                   quantize_int8=True, error_feedback=True)
+    single = SyncConfig(BASE_SYNC["strategy"], BASE_SYNC["interval"],
+                        **base_kw)
+    multi = SyncConfig(BASE_SYNC["strategy"], BASE_SYNC["interval"],
+                       bucket_policy="layer-class", **base_kw)
+    p0 = PAPER_MODELS[BUCKETED_MODEL]["init"](_jax.random.key(SEED))
+    stacked = _jax.tree.map(lambda x: x[None], p0)
+    weights = bucket_weights_of(multi, stacked)
+    out = {
+        "model": BUCKETED_MODEL,
+        "target_loss": BUCKETED_TARGET_LOSS,
+        "tuner": {k: list(v) if isinstance(v, tuple) else v
+                  for k, v in BUCKETED_TUNER_KW.items()},
+        # full precision, NOT rounded: check_regression rebuilds the
+        # controller from these, and _fit_interval's ceil / the interval
+        # deadband are discontinuous — a rounded weight could replay a
+        # different decision stream than the live run produced
+        "bucket_mb": {n: w * MODEL_MB for n, w in weights.items()},
+        "variants": {
+            "single": run_variant(single, adaptive=True,
+                                  model=BUCKETED_MODEL,
+                                  target_loss=BUCKETED_TARGET_LOSS,
+                                  tuner_kw=BUCKETED_TUNER_KW),
+            "bucketed": run_variant(multi, bucketed=True,
+                                    model=BUCKETED_MODEL,
+                                    target_loss=BUCKETED_TARGET_LOSS,
+                                    tuner_kw=BUCKETED_TUNER_KW),
+        },
+    }
+    t_single = out["variants"]["single"]["time_to_target_s"]
+    t_bucket = out["variants"]["bucketed"]["time_to_target_s"]
+    out["single_s"], out["bucketed_s"] = t_single, t_bucket
+    out["speedup_vs_single"] = (round(t_single / t_bucket, 3)
+                                if t_single and t_bucket else None)
+    return out
 
 
 def bench_autotune() -> Dict:
@@ -233,12 +345,24 @@ def bench_autotune() -> Dict:
     report["speedup_vs_best_static"] = (
         round(reached[best_static] / t_adapt, 3)
         if best_static and t_adapt else None)
+
+    report["bucketed"] = bench_bucketed()
+    b = report["bucketed"]
+    sv, bv = b["variants"]["single"], b["variants"]["bucketed"]
     report["acceptance"] = {
         "adaptive_beats_best_static":
             bool(t_adapt is not None and best_static is not None
                  and t_adapt < reached[best_static]),
         "ef_guard_never_violated":
             report["variants"]["adaptive"]["max_ef_ratio"] <= EF_GUARD,
+        "bucketed_time_not_worse":
+            bool(b["single_s"] is not None and b["bucketed_s"] is not None
+                 and b["bucketed_s"] <= b["single_s"]),
+        "bucketed_wire_bytes_not_worse":
+            bv["traffic_mb"] <= sv["traffic_mb"],
+        "bucketed_ef_guard_never_violated":
+            bv["max_ef_ratio"] <= EF_GUARD
+            and sv["max_ef_ratio"] <= EF_GUARD,
     }
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(OUT_PATH, "w") as f:
@@ -259,6 +383,19 @@ def _print_report(r: Dict) -> None:
           f"{a['final_config']}")
     print(f"speedup vs best static ({r['best_static']}): "
           f"{r['speedup_vs_best_static']}x")
+    b = r["bucketed"]
+    print(f"\nbucketed scenario ({b['model']}, target "
+          f"{b['target_loss']}): bucket_mb "
+          f"{ {n: round(v, 4) for n, v in b['bucket_mb'].items()} }")
+    for name in ("single", "bucketed"):
+        v = b["variants"][name]
+        print(f"  {name:9s} t_target {v['time_to_target_s']}s  traffic "
+              f"{v['traffic_mb']} MB  retunes {v['n_retunes']}  "
+              f"max_ef {v['max_ef_ratio']}")
+    bv = b["variants"]["bucketed"]
+    print(f"  bucketed final rungs {bv['final_rungs']}, per-bucket max_ef "
+          f"{bv['max_ef_ratio_by_bucket']}")
+    print(f"  speedup vs single-bucket: {b['speedup_vs_single']}x")
     print(f"acceptance: {r['acceptance']}")
 
 

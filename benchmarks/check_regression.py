@@ -7,12 +7,14 @@ checker makes them a *gate*, not a log.  Checks, cheapest first:
 - **Exact** (tolerance 1e-6): payload math — bytes-on-wire per tier,
   reductions vs dense.  Pure arithmetic over ``SyncConfig.payload_mb``;
   any drift is a real semantics change.
-- **Replay** (exact): the adaptive controller's decision sequence.
+- **Replay** (exact): the adaptive controllers' decision sequences.
   ``BENCH_autotune.json`` records the per-step (sim_t, bandwidth,
-  EF-ratio) signal stream; replaying it through a fresh
-  ``AdaptiveSyncController`` must reproduce the recorded decisions
-  rung-for-rung — a deterministic regression check of the control law
-  without re-training — and must never escalate past the EF guard.
+  EF-norm) signal stream — per bucket for the multi-controller run;
+  replaying it through a fresh ``AdaptiveSyncController`` (and the
+  per-bucket stream through a fresh ``BucketedSyncController``) must
+  reproduce the recorded decisions rung-for-rung — a deterministic
+  regression check of both control laws without re-training — and must
+  never escalate past the EF guard on any bucket.
 - **Banded** (deterministic sims, 5%): the elasticity benchmark's
   speedup / cost-reduction / traffic-reduction (discrete-event simulator,
   seeded RNG).
@@ -143,6 +145,54 @@ def check_controller_replay(gate: Gate, base: Dict) -> None:
                f"replayed max {round(tuner.max_ef_ratio, 6)} vs guard {guard}")
 
 
+def check_bucketed_replay(gate: Gate, base: Dict) -> None:
+    """Replay the multi-controller (per-bucket) trace: the recorded
+    per-bucket signal stream through a fresh BucketedSyncController must
+    reproduce every decision — rungs, interval and reasons — exactly."""
+    from repro.core.autotune import BucketStats, BucketedSyncController
+    from repro.core.sync import SyncConfig
+
+    scen = base["scenario"]
+    bucketed = base["bucketed"]
+    run = bucketed["variants"]["bucketed"]
+    # the bucketed scenario records its own knob set (wider escalation
+    # margin for the undiluted per-bucket ratios) — replay exactly those
+    knobs = dict(bucketed["tuner"])
+    base_sync = scen["tuner"]["base_sync"]
+    knobs["topk_ladder"] = tuple(knobs["topk_ladder"])
+    guard = knobs["ef_guard"]
+    sync = SyncConfig(base_sync["strategy"], base_sync["interval"],
+                      compress_topk=base_sync["compress_topk"],
+                      quantize_int8=True, error_feedback=True,
+                      bucket_policy="layer-class")
+    tuner = BucketedSyncController(
+        sync, bucketed["bucket_mb"], scen["compute_step_s"], **knobs)
+    tuner.observe_wan(scen["trace"][0][1])
+    replayed = []
+    for step, (sim_t, bw, per_bucket) in enumerate(run["signals"]):
+        tuner.observe_wan(bw)
+        stats = {n: BucketStats(msg_norm=m, resid_norm=r)
+                 for n, (m, r) in per_bucket.items()}
+        upd = tuner.update(step, stats)
+        if upd is not None:
+            replayed.append((step, {n: r for n, r, _ in upd.rungs},
+                             upd.sync.interval, list(upd.reasons)))
+    recorded = [(d["step"], d["rungs"], d["interval"], d["reasons"])
+                for d in run["decisions"]]
+    gate.check("autotune.bucketed_replay.decisions",
+               replayed == recorded,
+               f"{len(replayed)} replayed vs {len(recorded)} recorded"
+               + ("" if replayed == recorded
+                  else f"; first diff at "
+                       f"{next((i for i, (a, b) in enumerate(zip(replayed, recorded)) if a != b), min(len(replayed), len(recorded)))}"))
+    gate.check("autotune.bucketed_replay.guard_on_every_bucket",
+               all(r <= guard
+                   for r in tuner.max_ef_ratio_by_bucket.values()),
+               f"replayed per-bucket max "
+               f"{ {n: round(r, 4) for n, r in tuner.max_ef_ratio_by_bucket.items()} } "
+               f"vs guard {guard}")
+
+
 # ----------------------------------------------------------- banded checks
 
 
@@ -216,6 +266,7 @@ def main(argv: Sequence[str] = None) -> int:
     check_acceptance_flags(gate, baselines)
     check_payload_math(gate, baselines["wan_codec"])
     check_controller_replay(gate, baselines["autotune"])
+    check_bucketed_replay(gate, baselines["autotune"])
     check_elasticity_sim(gate, baselines["elasticity"])
     check_encode_speedup(gate, baselines["wan_codec"])
 

@@ -1,6 +1,8 @@
 """Core: the paper's contributions — sync strategies, elastic scheduler,
 control plane, WAN simulator, cost model."""
 from repro.core.sync import SyncConfig, SyncState, CODEC_TIERS, \
+    BUCKET_CLASSES, BucketOverride, BucketSpec, BucketLayout, \
+    bucket_layout, bucket_weights_of, \
     init_sync_state, on_step_gradients, apply_sync, is_sync_step, \
     traffic_per_step_mb, grow_pods, shrink_pods, resize_sync_state, \
     retune_sync_state  # noqa: F401
@@ -10,9 +12,10 @@ from repro.core.scheduler import CloudResources, ResourcePlan, DeviceType, \
 from repro.core.wan import SimCloud, SimEvent, WANConfig, SimResult, \
     BandwidthTrace, simulate, compare_strategies  # noqa: F401
 from repro.core.cost import CostReport, cost_report, tier_payload_table, \
-    adaptive_traffic_mb  # noqa: F401
+    bucket_payload_table, adaptive_traffic_mb  # noqa: F401
 from repro.core.autotune import AdaptiveSyncController, BucketStats, \
-    SyncPlanUpdate, WanProbe, build_ladder  # noqa: F401
+    BucketedSyncController, BucketPlanUpdate, SyncPlanUpdate, WanProbe, \
+    WanProbeEstimator, bucket_stats_from_sync_state, build_ladder  # noqa: F401
 from repro.core.control_plane import FunctionRegistry, AddressTable, Workflow, \
     WorkflowEngine, TrainingRequest, TrainingPlan, SchedulerFunction, \
     CommunicatorFunction, build_training_plan, training_workflow, reschedule, \

@@ -62,9 +62,9 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, replace
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
-from repro.core.sync import CODEC_TIERS, SyncConfig
+from repro.core.sync import BucketOverride, CODEC_TIERS, SyncConfig
 
 _EPS = 1e-12
 
@@ -94,17 +94,85 @@ class BucketStats:
         return max(0.0, 1.0 - self.ef_ratio ** 2)
 
     @classmethod
-    def from_sync_state(cls, sync_state) -> "BucketStats":
+    def from_sync_state(cls, sync_state,
+                        bucket: Optional[int] = None) -> "BucketStats":
         """Worst-pod reading: the pod whose residual ratio is highest
-        governs (its model replica is the one compression hurts most)."""
+        governs (its model replica is the one compression hurts most).
+
+        ``SyncState`` telemetry is (n_pods, n_buckets); ``bucket`` selects
+        one column, ``None`` takes the worst entry across all buckets (the
+        single-controller view of a possibly-partitioned payload)."""
         import numpy as np
 
         msg = np.asarray(sync_state.msg_norm, dtype=np.float64)
         res = np.asarray(sync_state.resid_norm, dtype=np.float64)
-        if msg.size == 0 or float(msg.max()) <= 0.0:
+        if bucket is not None and msg.ndim == 2:
+            msg, res = msg[:, bucket], res[:, bucket]
+        msg, res = msg.ravel(), res.ravel()
+        keep = msg > 0.0          # empty buckets / no reading yet
+        if msg.size == 0 or not keep.any():
             return cls(msg_norm=0.0, resid_norm=0.0)
+        msg, res = msg[keep], res[keep]
         worst = int(np.argmax(res / (msg + _EPS)))
         return cls(msg_norm=float(msg[worst]), resid_norm=float(res[worst]))
+
+
+def bucket_stats_from_sync_state(sync_state, names: Sequence[str]
+                                 ) -> Dict[str, BucketStats]:
+    """One worst-pod :class:`BucketStats` per named bucket group — the
+    :class:`BucketedSyncController`'s input (``names`` in segment order,
+    i.e. ``SyncConfig.bucket_names``)."""
+    return {name: BucketStats.from_sync_state(sync_state, bucket=g)
+            for g, name in enumerate(names)}
+
+
+class WanProbeEstimator:
+    """Bandwidth EMA + fluctuation estimator, shareable across controllers.
+
+    The per-bucket controller holds ONE of these for all bucket rungs (the
+    WAN does not care which bucket's bytes it carries), and the single-
+    bucket controller embeds its own; both consume the same achieved-
+    bandwidth samples (simulator, ``--wan-trace``, or ``bandwidth_changed``
+    events off the control-plane bus).
+
+    ``cliff_snap`` (off at 0): when a sample comes in more than
+    ``cliff_snap``x BELOW the EMA, the belief snaps to the sample instead
+    of averaging toward it — smoothing exists for noise, and a bandwidth
+    collapse is not noise.  The fluctuation estimate still absorbs the
+    full deviation first (a cliff IS fluctuation), and recoveries stay
+    smoothed (optimism is what the EMA protects against).  The
+    multi-bucket controller enables this by default, so one observation
+    of a crashed link reprices every bucket's escalation before the next
+    transfer is paid."""
+
+    def __init__(self, alpha: float = 0.5, cliff_snap: float = 0.0):
+        self.alpha = alpha
+        self.cliff_snap = cliff_snap
+        self._ema: Optional[float] = None
+        self._var: float = 0.0        # EMA of squared relative deviation
+
+    def observe(self, bandwidth_mbps: float) -> "WanProbe":
+        b = float(bandwidth_mbps)
+        if self._ema is None:
+            self._ema = b
+        else:
+            rel = (b - self._ema) / (self._ema + _EPS)
+            self._var += self.alpha * (rel * rel - self._var)
+            if self.cliff_snap > 0 and b * self.cliff_snap < self._ema:
+                self._ema = b
+            else:
+                self._ema += self.alpha * (b - self._ema)
+        return self.probe
+
+    @property
+    def bandwidth_mbps(self) -> Optional[float]:
+        return self._ema
+
+    @property
+    def probe(self) -> "WanProbe":
+        return WanProbe(
+            bandwidth_mbps=self._ema if self._ema is not None else 0.0,
+            fluctuation=self._var ** 0.5)
 
 
 @dataclass(frozen=True)
@@ -115,6 +183,26 @@ class WanProbe:
 
     bandwidth_mbps: float
     fluctuation: float = 0.0
+
+
+def trend_tripped(trend: Sequence[float], window: int, rise: float,
+                  guard: float) -> bool:
+    """The residual *growth-trend* guard predicate, shared by both
+    controllers so the single- and multi-bucket control laws cannot drift:
+    a full ``window`` of strictly rising fresh EF-ratio readings whose
+    extrapolation (one more window at the observed rise) would cross the
+    absolute ``guard``.  Catches a slowly diverging rung *before* the
+    bound trips — by which point an interval's worth of gradient mass is
+    already stuck in the residual — while staying quiet on noise (any dip
+    resets the run) and on benign drift far below the guard (the
+    extrapolation test)."""
+    if len(trend) < window:
+        return False
+    win = list(trend[-window:])
+    total = win[-1] - win[0]
+    return (total >= rise
+            and all(y > x for x, y in zip(win, win[1:]))
+            and win[-1] + total >= guard)
 
 
 @dataclass(frozen=True)
@@ -172,6 +260,8 @@ class AdaptiveSyncController:
                  min_interval: int = 1, interval_budget: Optional[int] = None,
                  max_interval: int = 64,
                  hysteresis: int = 2, probe_alpha: float = 0.5,
+                 trend_window: int = 4, trend_rise: float = 0.02,
+                 probe_est: Optional[WanProbeEstimator] = None,
                  bus=None):
         if not base_sync.uses_codec:
             raise ValueError(
@@ -187,6 +277,9 @@ class AdaptiveSyncController:
                              "structurally in (0, 1)")
         if not 0.0 < escalate_margin <= 1.0:
             raise ValueError("escalate_margin must be in (0, 1]")
+        if trend_window < 2:
+            raise ValueError("trend_window must be >= 2 (a slope needs at "
+                             "least two readings)")
         self.model_mb = model_mb
         self.compute_step_s = compute_step_s
         self.ef_guard = ef_guard
@@ -198,6 +291,8 @@ class AdaptiveSyncController:
         self.max_interval = max(max_interval, self.interval_budget)
         self.hysteresis = hysteresis
         self.probe_alpha = probe_alpha
+        self.trend_window = trend_window
+        self.trend_rise = trend_rise
 
         self.ladder = build_ladder(base_sync, topk_ladder, dtype_ladder)
         # start at the rung matching the base config (exact knob match if
@@ -210,27 +305,25 @@ class AdaptiveSyncController:
         self.current = replace(self.ladder[self.rung],
                                interval=self.interval)
 
-        self._bw_ema: Optional[float] = None
-        self._bw_var: float = 0.0      # EMA of squared relative deviation
+        self._probe_est = (probe_est if probe_est is not None
+                           else WanProbeEstimator(alpha=probe_alpha))
         self._pressure_streak = 0
         self._calm_streak = 0
         self._last_stats: Optional[Tuple[float, float]] = None
+        self._trend: List[float] = []  # fresh EF-ratio readings, newest last
         self.decisions: List[SyncPlanUpdate] = []
         self.max_ef_ratio = 0.0        # worst guard reading ever observed
         if bus is not None:
             bus.subscribe("bandwidth_changed", self.handle)
 
     # ------------------------------------------------------------- probes
+    @property
+    def _bw_ema(self) -> Optional[float]:
+        return self._probe_est.bandwidth_mbps
+
     def observe_wan(self, bandwidth_mbps: float) -> WanProbe:
         """Fold an achieved-bandwidth sample into the EMA + fluctuation."""
-        b = float(bandwidth_mbps)
-        if self._bw_ema is None:
-            self._bw_ema = b
-        else:
-            rel = (b - self._bw_ema) / (self._bw_ema + _EPS)
-            self._bw_var += self.probe_alpha * (rel * rel - self._bw_var)
-            self._bw_ema += self.probe_alpha * (b - self._bw_ema)
-        return self.probe
+        return self._probe_est.observe(bandwidth_mbps)
 
     def handle(self, event) -> None:
         """EventBus subscriber — same ``bandwidth_changed`` CloudEvents the
@@ -241,9 +334,13 @@ class AdaptiveSyncController:
 
     @property
     def probe(self) -> WanProbe:
-        return WanProbe(
-            bandwidth_mbps=self._bw_ema if self._bw_ema is not None else 0.0,
-            fluctuation=self._bw_var ** 0.5)
+        return self._probe_est.probe
+
+    # -------------------------------------------------- growth-trend guard
+    def _trend_tripped(self) -> bool:
+        """See :func:`trend_tripped` (shared with the bucketed law)."""
+        return trend_tripped(self._trend, self.trend_window,
+                             self.trend_rise, self.ef_guard)
 
     def resync(self, cfg: SyncConfig) -> None:
         """Re-anchor the belief state to an externally applied config.
@@ -260,6 +357,8 @@ class AdaptiveSyncController:
         self.interval = cfg.interval
         self.current = replace(self.ladder[self.rung], interval=cfg.interval)
         self._pressure_streak = self._calm_streak = 0
+        self._trend.clear()   # readings under the old knobs say nothing
+        #   about the drift of the rung now running
 
     # ----------------------------------------------------------- decision
     def _comm_frac(self, cfg: SyncConfig) -> float:
@@ -302,12 +401,21 @@ class AdaptiveSyncController:
         ratio = stats.ef_ratio if have_reading else 0.0
         if fresh:
             self.max_ef_ratio = max(self.max_ef_ratio, ratio)
+            self._trend.append(ratio)
+            if len(self._trend) > self.trend_window:
+                del self._trend[0]
 
         rung, reason = self.rung, ""
         if fresh and ratio >= self.ef_guard:
             # convergence guard tripped: de-escalate NOW, no hysteresis —
             # never trade fidelity away while EF is drowning
             rung, reason = max(0, self.rung - 1), "ef-guard"
+            self._pressure_streak = self._calm_streak = 0
+        elif fresh and self.rung > 0 and self._trend_tripped():
+            # growth-trend guard: the ratio is strictly rising toward the
+            # bound — step back one rung while the residual is still
+            # recoverable instead of waiting for the absolute trip
+            rung, reason = self.rung - 1, "ef-trend"
             self._pressure_streak = self._calm_streak = 0
         else:
             fit = self._fit_interval(self.ladder[self.rung])
@@ -360,6 +468,8 @@ class AdaptiveSyncController:
                 return None
         if not reason:
             reason = "interval-fit"
+        if rung != self.rung:
+            self._trend.clear()   # new rung, new drift regime
         self.rung = rung
         self.interval = interval
         self.current = replace(cfg, interval=interval)
@@ -367,5 +477,375 @@ class AdaptiveSyncController:
             sync=self.current, step=step, rung=rung,
             tier=self.current.tier, reason=reason,
             probe=self.probe, stats=stats if have_reading else None)
+        self.decisions.append(update)
+        return update
+
+
+# ---------------------------------------------------------------------------
+# per-bucket control: one rung per layer-class bucket group
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BucketPlanUpdate:
+    """Multi-bucket controller output: the combined retuned config (per-
+    bucket overrides + shared interval) plus which bucket moved and why —
+    applied through ``Trainer.retune`` exactly like a single-bucket
+    :class:`SyncPlanUpdate`."""
+
+    sync: SyncConfig
+    step: int
+    rungs: Tuple[Tuple[str, int, int], ...]   # (bucket, rung, tier) each
+    reasons: Tuple[str, ...]
+    probe: Optional[WanProbe] = None
+
+    def summary(self) -> str:
+        knobs = ", ".join(
+            f"{name}={CODEC_TIERS[tier]}@r{rung}"
+            for name, rung, tier in self.rungs)
+        return (f"[{knobs}], interval {self.sync.interval} "
+                f"[{'; '.join(self.reasons)}]")
+
+
+class _BucketRung:
+    """One bucket group's ladder position + guard state (the per-bucket
+    slice of what :class:`AdaptiveSyncController` tracks globally)."""
+
+    def __init__(self, name: str, ladder: Tuple[SyncConfig, ...],
+                 rung: int, model_mb: float):
+        self.name = name
+        self.ladder = ladder
+        self.rung = rung
+        self.model_mb = model_mb
+        self.last_stats: Optional[Tuple[float, float]] = None
+        self.trend: List[float] = []
+        self.ratio = 0.0              # last observed EF ratio
+        self.has_reading = False
+        self.max_ef_ratio = 0.0
+
+    def payload_mb(self, rung: Optional[int] = None) -> float:
+        r = self.rung if rung is None else rung
+        return self.ladder[r].payload_mb(self.model_mb)
+
+    @property
+    def cfg(self) -> SyncConfig:
+        return self.ladder[self.rung]
+
+
+class BucketedSyncController:
+    """Per-bucket adaptive codec control: one aggression-ladder rung per
+    layer-class bucket group, one shared WAN picture.
+
+    The split follows the physics: gradient statistics (and therefore how
+    much compression a tensor tolerates) are a property of the *layer
+    class* — embeddings, norms, dense bulk, MoE experts — while bandwidth
+    is a property of the *link*.  So EF statistics, ladders, trend state
+    and guards are per bucket, and the bandwidth probe/EMA, pressure
+    streaks and the sync interval are shared:
+
+    - **Guards are per bucket and autonomous**: a bucket whose EF ratio
+      trips ``ef_guard`` (or whose ratio is trending into it — the
+      growth-trend guard) de-escalates *that bucket only*, immediately.
+      Other buckets keep their aggression: the whole point is not paying
+      embed-grade fidelity for norm-grade sensitivity.
+    - **WAN pressure is shared and escalation is greedy-by-bytes**: when
+      the fitted interval (from the summed per-bucket payloads) busts the
+      staleness budget for ``hysteresis`` updates, the controller
+      escalates guard-calm buckets one rung at a time in order of wire
+      bytes saved, until the fit respects the budget — the cheapest
+      fidelity is traded first, and a guard-stressed bucket is never
+      escalated regardless of pressure.
+    - **Headroom returns fidelity where it hurts most**: on a long calm
+      streak the bucket with the highest observed EF ratio de-escalates
+      first.
+    - **One interval**: sync rounds are barriers, so the interval is fitted
+      once from the total payload and capped by the staleness budget
+      (escape valve only when every bucket sits at its last rung).
+
+    The controller is host-side and deterministic; ``benchmarks/autotune``
+    records its per-bucket signal stream so ``check_regression`` replays
+    the multi-controller trace in CI.
+    """
+
+    def __init__(self, base_sync: SyncConfig, bucket_mb: Mapping[str, float],
+                 compute_step_s: float, *,
+                 ef_guard: float = 0.9,
+                 escalate_margin: float = 0.95,
+                 target_comm_frac: float = 0.25,
+                 topk_ladder: Sequence[float] = (0.05, 0.02, 0.01),
+                 dtype_ladder: Sequence[str] = ("int8", "fp8", "int4"),
+                 min_interval: int = 1, interval_budget: Optional[int] = None,
+                 max_interval: int = 64,
+                 hysteresis: int = 2, probe_alpha: float = 0.5,
+                 trend_window: int = 4, trend_rise: float = 0.02,
+                 cliff_snap: float = 4.0,
+                 bus=None):
+        if base_sync.bucket_policy != "layer-class":
+            raise ValueError(
+                "BucketedSyncController drives the layer-class partition: "
+                "base_sync must set bucket_policy='layer-class' (for one "
+                "flat bucket use AdaptiveSyncController)")
+        if not (base_sync.uses_codec and base_sync.error_feedback):
+            raise ValueError(
+                "BucketedSyncController tunes the fused codec under the EF "
+                "guard: base_sync must have strategy='asgd_ga', "
+                "0 < compress_topk < 1, quantize_int8=True and "
+                "error_feedback=True")
+        if not 0.0 < ef_guard < 1.0:
+            raise ValueError("ef_guard is a bound on ||resid||/||msg|| — "
+                             "structurally in (0, 1)")
+        self.compute_step_s = compute_step_s
+        self.ef_guard = ef_guard
+        self.escalate_margin = escalate_margin
+        self.target_comm_frac = target_comm_frac
+        self.min_interval = min_interval
+        self.interval_budget = (interval_budget if interval_budget is not None
+                                else max(1, 2 * base_sync.interval))
+        self.max_interval = max(max_interval, self.interval_budget)
+        self.hysteresis = hysteresis
+        self.trend_window = trend_window
+        self.trend_rise = trend_rise
+        self.base_sync = base_sync
+
+        # controlled buckets: the groups that actually hold model bytes
+        # (a dense-only model has empty embed/moe groups — nothing to tune)
+        self.buckets: Dict[str, _BucketRung] = {}
+        for name in base_sync.bucket_names:
+            mb = float(bucket_mb.get(name, 0.0))
+            if mb <= 0.0:
+                continue
+            ladder = build_ladder(base_sync.for_bucket(name),
+                                  topk_ladder, dtype_ladder)
+            start = base_sync.for_bucket(name)
+            rung = min(range(len(ladder)),
+                       key=lambda i: abs(ladder[i].payload_mb(1.0)
+                                         - start.payload_mb(1.0)))
+            self.buckets[name] = _BucketRung(name, ladder, rung, mb)
+        if not self.buckets:
+            raise ValueError("bucket_mb holds no positive-size bucket group")
+
+        self.interval = base_sync.interval
+        self._probe_est = WanProbeEstimator(alpha=probe_alpha,
+                                            cliff_snap=cliff_snap)
+        self._pressure_streak = 0
+        self._calm_streak = 0
+        self.decisions: List[BucketPlanUpdate] = []
+        if bus is not None:
+            bus.subscribe("bandwidth_changed", self.handle)
+
+    # ------------------------------------------------------------- probes
+    def observe_wan(self, bandwidth_mbps: float) -> WanProbe:
+        return self._probe_est.observe(bandwidth_mbps)
+
+    def handle(self, event) -> None:
+        if getattr(event, "bandwidth_mbps", None) is not None:
+            self.observe_wan(event.bandwidth_mbps)
+
+    @property
+    def probe(self) -> WanProbe:
+        return self._probe_est.probe
+
+    @property
+    def max_ef_ratio(self) -> float:
+        """Worst guard reading ever observed across all buckets."""
+        return max((b.max_ef_ratio for b in self.buckets.values()),
+                   default=0.0)
+
+    @property
+    def max_ef_ratio_by_bucket(self) -> Dict[str, float]:
+        return {n: b.max_ef_ratio for n, b in self.buckets.items()}
+
+    # ------------------------------------------------------------ assembly
+    def _total_payload_mb(self,
+                          rungs: Optional[Mapping[str, int]] = None) -> float:
+        return sum(b.payload_mb(None if rungs is None else rungs[n])
+                   for n, b in self.buckets.items())
+
+    @property
+    def current(self) -> SyncConfig:
+        """The combined live config: per-bucket overrides on the base."""
+        overrides = tuple(
+            BucketOverride(name=n,
+                           compress_topk=b.cfg.compress_topk,
+                           value_dtype=b.cfg.value_dtype)
+            for n, b in self.buckets.items())
+        return replace(self.base_sync, buckets=overrides,
+                       interval=self.interval)
+
+    def resync(self, cfg: SyncConfig) -> None:
+        """Re-anchor to an externally applied config (elasticity reconfigs
+        rewrite the live sync settings — same contract as the single-bucket
+        controller's ``resync``)."""
+        for n, b in self.buckets.items():
+            eff = cfg.for_bucket(n)
+            b.rung = min(range(len(b.ladder)),
+                         key=lambda i: abs(b.ladder[i].payload_mb(1.0)
+                                           - eff.payload_mb(1.0)))
+            b.trend.clear()
+        self.interval = cfg.interval
+        self._pressure_streak = self._calm_streak = 0
+
+    def _fit_interval(self, payload_mb: float) -> int:
+        if self._probe_est.bandwidth_mbps is None \
+                or self._probe_est.bandwidth_mbps <= 0:
+            return self.interval
+        t_sync = (payload_mb * 8.0 / self._probe_est.bandwidth_mbps
+                  * (1.0 + self.probe.fluctuation))
+        f = self.target_comm_frac
+        want = t_sync * (1.0 - f) / (f * self.compute_step_s + _EPS)
+        return max(self.min_interval,
+                   min(self.max_interval, math.ceil(want)))
+
+    # ----------------------------------------------------------- decision
+    def _bucket_guards(self, stats: Mapping[str, BucketStats]) -> List[str]:
+        """Per-bucket absolute + growth-trend guards; returns reasons."""
+        reasons = []
+        for n, b in self.buckets.items():
+            s = stats.get(n)
+            if s is None or s.msg_norm <= 0.0:
+                # no CURRENT reading (first interval, or a pod resize just
+                # re-armed the telemetry): stale evidence of calm must not
+                # license an escalation — same rule as the single-bucket
+                # controller, which gates on the reading it was handed
+                b.has_reading = False
+                continue
+            fresh = (s.msg_norm, s.resid_norm) != b.last_stats
+            b.ratio, b.has_reading = s.ef_ratio, True
+            if not fresh:
+                continue
+            b.last_stats = (s.msg_norm, s.resid_norm)
+            b.max_ef_ratio = max(b.max_ef_ratio, s.ef_ratio)
+            b.trend.append(s.ef_ratio)
+            if len(b.trend) > self.trend_window:
+                del b.trend[0]
+            if s.ef_ratio >= self.ef_guard:
+                if b.rung > 0:
+                    b.rung -= 1
+                    b.trend.clear()
+                reasons.append(f"ef-guard[{n}]")
+            elif b.rung > 0 and self._trend_tripped(b):
+                b.rung -= 1
+                b.trend.clear()
+                reasons.append(f"ef-trend[{n}]")
+        return reasons
+
+    def _trend_tripped(self, b: _BucketRung) -> bool:
+        """See :func:`trend_tripped` (shared with the single-bucket law)."""
+        return trend_tripped(b.trend, self.trend_window, self.trend_rise,
+                             self.ef_guard)
+
+    def _guard_calm(self, b: _BucketRung) -> bool:
+        # absence of a reading gates escalation, exactly like the single-
+        # bucket law: no fresh evidence is not evidence of calm
+        return (b.has_reading
+                and b.ratio < self.escalate_margin * self.ef_guard)
+
+    def _ladder_exhausted(self) -> bool:
+        """True when no bucket can shed another byte: each is at its byte
+        floor or measured guard-stressed.  A bucket with NO reading and
+        cheaper rungs left keeps this False — ignorance opens neither the
+        escalation path nor the staleness escape valve."""
+        for b in self.buckets.values():
+            cur = b.payload_mb(b.rung)
+            has_cheaper = any(b.payload_mb(i) < cur
+                              for i in range(b.rung + 1, len(b.ladder)))
+            if not has_cheaper:
+                continue
+            if b.has_reading and not self._guard_calm(b):
+                continue
+            return False
+        return True
+
+    def update(self, step: int, stats: Mapping[str, BucketStats]
+               ) -> Optional[BucketPlanUpdate]:
+        """One control step with this round's per-bucket statistics
+        (``bucket_stats_from_sync_state``).  Returns a plan update when any
+        bucket's rung or the shared interval moved."""
+        before = {n: b.rung for n, b in self.buckets.items()}
+        reasons = self._bucket_guards(stats)
+        if reasons:
+            self._pressure_streak = self._calm_streak = 0
+        else:
+            fit = self._fit_interval(self._total_payload_mb())
+            if fit > self.interval_budget:
+                self._pressure_streak += 1
+                self._calm_streak = 0
+            elif fit <= max(self.min_interval, self.interval_budget // 2):
+                self._calm_streak += 1
+                self._pressure_streak = 0
+            else:
+                self._pressure_streak = self._calm_streak = 0
+            if self._pressure_streak >= self.hysteresis:
+                # greedy escalation: trade the cheapest fidelity first —
+                # each candidate bucket jumps to its next *strictly
+                # cheaper* rung (byte-equal rungs are no relief on a slow
+                # link), largest wire-byte saving wins — until the fit
+                # respects the budget.  Guard-stressed buckets never move.
+                moved = False
+                while (self._fit_interval(self._total_payload_mb())
+                       > self.interval_budget):
+                    candidates = []
+                    for b in self.buckets.values():
+                        if not self._guard_calm(b):
+                            continue
+                        cur = b.payload_mb(b.rung)
+                        target = next(
+                            (i for i in range(b.rung + 1, len(b.ladder))
+                             if b.payload_mb(i) < cur), None)
+                        if target is not None:
+                            candidates.append(
+                                (cur - b.payload_mb(target), b, target))
+                    if not candidates:
+                        break
+                    _, best, target = max(candidates, key=lambda t: t[0])
+                    best.rung = target
+                    best.trend.clear()
+                    reasons.append(f"wan-pressure[{best.name}]")
+                    moved = True
+                if moved:
+                    self._pressure_streak = 0
+            elif self._calm_streak >= 4 * self.hysteresis:
+                # headroom: one rung of fidelity back, to the bucket the
+                # compression is hurting most, if the budget still fits
+                candidates = [b for b in self.buckets.values() if b.rung > 0]
+                candidates = [
+                    b for b in candidates
+                    if self._fit_interval(
+                        self._total_payload_mb(
+                            {n: (bb.rung - 1 if bb is b else bb.rung)
+                             for n, bb in self.buckets.items()}))
+                    <= self.interval_budget]
+                if candidates:
+                    worst = max(candidates, key=lambda b: b.ratio)
+                    worst.rung -= 1
+                    worst.trend.clear()
+                    reasons.append(f"wan-headroom[{worst.name}]")
+                    self._calm_streak = 0
+
+        # the staleness budget caps the interval while fidelity remains to
+        # trade; the escape valve opens when the ladder is EXHAUSTED — every
+        # bucket is at its floor *or guard-blocked from escalating* (a
+        # stressed bucket cannot compress harder, so only staleness can
+        # absorb the link; the single-bucket law's "last rung" generalized)
+        fit = self._fit_interval(self._total_payload_mb())
+        exhausted = fit > self.interval_budget and self._ladder_exhausted()
+        cap = self.max_interval if exhausted else self.interval_budget
+        interval = min(fit, cap)
+        rung_moved = any(b.rung != before[n]
+                         for n, b in self.buckets.items())
+        if not rung_moved:
+            if interval == self.interval or (
+                    not reasons
+                    and abs(interval - self.interval)
+                    < max(1.0, 0.25 * self.interval)):
+                return None
+        if not reasons:
+            reasons.append("interval-fit")
+        self.interval = interval
+        update = BucketPlanUpdate(
+            sync=self.current, step=step,
+            rungs=tuple((n, b.rung, b.cfg.tier)
+                        for n, b in self.buckets.items()),
+            reasons=tuple(reasons), probe=self.probe)
         self.decisions.append(update)
         return update

@@ -9,7 +9,7 @@ the straggler either way).
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Dict, Sequence
+from typing import Dict, Mapping, Optional, Sequence
 
 from repro.core.sync import CODEC_TIERS, SyncConfig
 from repro.core.wan import SimResult
@@ -68,15 +68,52 @@ def tier_payload_table(model_mb: float, frac: float,
     return rows
 
 
+def bucket_payload_table(cfg: SyncConfig, bucket_mb: Mapping[str, float]
+                         ) -> Dict[str, Dict[str, float]]:
+    """Per-bucket traffic table for a layer-class config: each bucket
+    group's model bytes, effective (top-k, tier) knobs, per-sync payload
+    and reduction vs its dense share — the per-bucket price list the
+    :class:`~repro.core.autotune.BucketedSyncController` walks, and what
+    the bench reports next to its decisions.  A ``total`` row sums the
+    groups (equals ``cfg.payload_mb(model_mb, bucket_weights=...)``)."""
+    rows: Dict[str, Dict[str, float]] = {}
+    total_mb = sum(bucket_mb.values())
+    total_payload = 0.0
+    for name in cfg.bucket_names:
+        mb = float(bucket_mb.get(name, 0.0))
+        eff = cfg.for_bucket(name)
+        payload = eff.payload_mb(mb)
+        total_payload += payload
+        rows[name] = {
+            "model_mb": round(mb, 4),
+            "compress_topk": eff.compress_topk,
+            "tier": CODEC_TIERS[eff.tier],
+            "payload_mb": round(payload, 6),
+            "reduction_vs_dense": round(mb / payload, 2) if payload else 0.0,
+        }
+    rows["total"] = {
+        "model_mb": round(total_mb, 4),
+        "payload_mb": round(total_payload, 6),
+        "reduction_vs_dense": (round(total_mb / total_payload, 2)
+                               if total_payload else 0.0),
+    }
+    return rows
+
+
 def adaptive_traffic_mb(decisions: Sequence, n_syncs_per_decision: Sequence[int],
-                        model_mb: float, n_pods: int = 1) -> float:
+                        model_mb: float, n_pods: int = 1,
+                        bucket_weights: Optional[Mapping[str, float]] = None
+                        ) -> float:
     """Bytes-on-wire of an adaptive run: each controller decision's config
     billed for the sync rounds it was live (``SyncPlanUpdate.sync`` carries
     the payload math; the launcher's traffic accounting uses the same
-    ``payload_mb`` per active config, so simulator and emulation agree)."""
+    ``payload_mb`` per active config, so simulator and emulation agree).
+    Pass ``bucket_weights`` for a multi-bucket decision stream — each
+    decision's per-bucket overrides are then billed at their own tier."""
     total = 0.0
     for update, n in zip(decisions, n_syncs_per_decision):
-        total += update.sync.payload_mb(model_mb) * n * n_pods
+        total += update.sync.payload_mb(
+            model_mb, bucket_weights=bucket_weights) * n * n_pods
     return total
 
 

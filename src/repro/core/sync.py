@@ -41,7 +41,12 @@ With ``quantize_int8`` the top-k path upgrades to the **fused WAN codec**
 
 - **bucket**: the accumulated-gradient pytree is packed once into a single
   contiguous ``(n_pods, N)`` buffer, so compression is a handful of fused
-  dispatches instead of one per leaf.
+  dispatches instead of one per leaf.  Under ``bucket_policy=
+  "layer-class"`` the buffer is *grouped by layer class* (embed / norm /
+  dense / MoE — :class:`BucketSpec` classifies leaves by parameter path),
+  each group a contiguous segment with its OWN ``(compress_topk,
+  value_dtype)`` knobs and EF telemetry: aggressive compression where the
+  gradient statistics make it free, conservative where it hurts.
 - **top-k + int8**: a single-pass Pallas kernel selects the block-local
   top-k and quantizes the winners to int8 with per-block scales — payload
   bytes drop to ``~0.75 * compress_topk`` of dense fp32 (int8 value + u16
@@ -66,8 +71,9 @@ tests reproduce the paper's Figs 7/9/10 accuracy results for real.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, NamedTuple, Optional, Sequence, Tuple, Union
+from dataclasses import dataclass, replace as _dc_replace
+from typing import (Any, Dict, Mapping, NamedTuple, Optional, Sequence,
+                    Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -86,6 +92,139 @@ VALUE_DTYPES = CODEC_TIERS[1:]
 _VALUE_BYTES = {"int8": 1.0, "fp8": 1.0, "int4": 0.5}
 
 
+# ---------------------------------------------------------------------------
+# bucket groups: layer-class partitioning of the sync payload
+# ---------------------------------------------------------------------------
+#
+# Gradient statistics are wildly non-uniform across layer classes: embedding
+# rows are touched sparsely (top-k is nearly free), norms/biases are tiny but
+# convergence-critical (compression buys nothing and hurts), MoE expert
+# blocks see token-routed sparsity, and the attention/MLP dense bulk is where
+# the bytes actually live.  The layer-class bucket policy splits the one flat
+# codec bucket into named groups so each can run its own (top-k x dtype)
+# aggression — the per-tensor adaptation network-aware geo-distributed
+# systems converge on (TAAR, arXiv:2404.11352; HeterPS, arXiv:2111.10635).
+
+BUCKET_CLASSES = ("embed", "norm", "dense", "moe")
+BUCKET_POLICIES = ("single", "layer-class")
+
+
+@dataclass(frozen=True)
+class BucketSpec:
+    """Classifies pytree leaves into named bucket groups.
+
+    A leaf's parameter *path* (``jax.tree_util.keystr``) is matched against
+    per-group substring patterns, first hit wins (``patterns`` order is the
+    precedence order — MoE before embed so ``moe/router`` lands in the
+    expert group).  Pattern-less leaves fall through on shape: rank <= 1
+    per-pod tensors (biases, norm scales, per-feature vectors) go to
+    ``vector_bucket``, everything else to ``fallback``.  The default
+    patterns are the same path vocabulary ``sharding/rules.py`` keys its
+    logical axes on (vocab/embed, experts/router, heads/d_ff dense)."""
+
+    names: Tuple[str, ...] = BUCKET_CLASSES
+    patterns: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+        ("moe", ("moe", "expert", "router")),
+        ("embed", ("embed", "emb", "vocab", "wte", "wpe", "lm_head",
+                   "tok_", "token")),
+        ("norm", ("norm", "ln1", "ln2", "rms", "bias", "scale")),
+    )
+    vector_bucket: str = "norm"
+    fallback: str = "dense"
+
+    def classify(self, path: str, inner_ndim: int) -> str:
+        """Bucket name for one leaf (``inner_ndim`` excludes the pod dim)."""
+        low = path.lower()
+        for name, subs in self.patterns:
+            if any(s in low for s in subs):
+                return name
+        return self.vector_bucket if inner_ndim <= 1 else self.fallback
+
+
+DEFAULT_BUCKET_SPEC = BucketSpec()
+
+
+@dataclass(frozen=True)
+class BucketLayout:
+    """Concrete partition of one stacked pytree into bucket groups.
+
+    The grouped flat buffer concatenates leaves in ``order`` (stable: by
+    bucket, then original ``jax.tree.leaves`` position), so every bucket
+    group owns one contiguous ``(n_pods, N_g)`` segment —
+    ``[offsets[g] : offsets[g] + sizes[g])`` — of the same ``(n_pods, N)``
+    buffer the EF residual lives in.  For the ``"single"`` policy the order
+    is the identity and the layout degenerates to the legacy one-bucket
+    packing."""
+
+    names: Tuple[str, ...]          # bucket group names, fixed order
+    leaf_bucket: Tuple[int, ...]    # bucket index per leaf (original order)
+    leaf_sizes: Tuple[int, ...]     # per-leaf flat width (per pod)
+    order: Tuple[int, ...]          # leaf indices in packing order
+    sizes: Tuple[int, ...]          # per-bucket segment width N_g
+    offsets: Tuple[int, ...]        # per-bucket segment start
+
+    @property
+    def leaf_offsets(self) -> Tuple[int, ...]:
+        """Offset of each (original-index) leaf in the grouped buffer."""
+        off, out = 0, [0] * len(self.order)
+        for i in self.order:
+            out[i] = off
+            off += self.leaf_sizes[i]
+        return tuple(out)
+
+    def segment(self, name: str) -> Tuple[int, int]:
+        g = self.names.index(name)
+        return self.offsets[g], self.sizes[g]
+
+
+def bucket_layout(cfg: "SyncConfig", stacked_tree: Pytree,
+                  spec: BucketSpec = DEFAULT_BUCKET_SPEC) -> BucketLayout:
+    """Partition ``stacked_tree`` (leading pod dim) per ``cfg.bucket_policy``.
+
+    Host-side and shape-only: safe to call while tracing (it runs once per
+    compile inside the jitted sync step)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(stacked_tree)
+    leaf_sizes = tuple(int(np_prod(x.shape[1:])) for _, x in flat)
+    if cfg.bucket_policy == "single":
+        names = ("all",)
+        leaf_bucket = (0,) * len(flat)
+        order = tuple(range(len(flat)))
+    else:
+        names = spec.names
+        leaf_bucket = tuple(
+            names.index(spec.classify(jax.tree_util.keystr(path),
+                                      x.ndim - 1))
+            for path, x in flat)
+        order = tuple(sorted(range(len(flat)),
+                             key=lambda i: (leaf_bucket[i], i)))
+    sizes = tuple(sum(leaf_sizes[i] for i in range(len(flat))
+                      if leaf_bucket[i] == g) for g in range(len(names)))
+    offsets = tuple(sum(sizes[:g]) for g in range(len(names)))
+    return BucketLayout(names=names, leaf_bucket=leaf_bucket,
+                        leaf_sizes=leaf_sizes, order=order,
+                        sizes=sizes, offsets=offsets)
+
+
+def bucket_weights_of(cfg: "SyncConfig", stacked_tree: Pytree,
+                      spec: BucketSpec = DEFAULT_BUCKET_SPEC
+                      ) -> Dict[str, float]:
+    """Fraction of model elements per bucket group (sums to 1.0) — the
+    weights :meth:`SyncConfig.payload_mb` uses for per-bucket accounting."""
+    layout = bucket_layout(cfg, stacked_tree, spec)
+    total = max(1, sum(layout.sizes))
+    return {n: layout.sizes[g] / total for g, n in enumerate(layout.names)}
+
+
+@dataclass(frozen=True)
+class BucketOverride:
+    """Per-bucket codec knobs; ``None`` inherits the global SyncConfig
+    value.  Carried in ``SyncConfig.buckets`` (hashable, jit-static)."""
+
+    name: str
+    compress_topk: Optional[float] = None
+    value_dtype: Optional[str] = None
+
+
 @dataclass(frozen=True)
 class SyncConfig:
     strategy: str = "asgd"
@@ -102,6 +241,11 @@ class SyncConfig:
     error_feedback: bool = False   # EF-SGD: re-inject compression residual
     codec_block: int = 4096        # block-local top-k block size (codec path)
     overlap_chunks: int = 1        # >1: pipeline ring permute with encode
+    bucket_policy: str = "single"  # "single": one flat codec bucket (legacy);
+    #   "layer-class": partition the payload into BUCKET_CLASSES groups, each
+    #   with its own (top-k, dtype) knobs and EF telemetry
+    buckets: Tuple[BucketOverride, ...] = ()   # per-bucket knob overrides
+    #   (layer-class only); unnamed buckets inherit the global knobs
 
     def __post_init__(self):
         self._validate()
@@ -152,6 +296,82 @@ class SyncConfig:
                 "(strategy='asgd_ga', 0 < compress_topk < 1, "
                 "quantize_int8=True): chunk pipelining only exists on the "
                 "codec path")
+        self._validate_buckets()
+
+    def _validate_buckets(self) -> None:
+        """Multi-bucket coupling checks.  Every message names the offending
+        bucket group: a multi-bucket config has one line per group and a
+        bare per-knob error would not say WHICH group is misconfigured."""
+        if self.bucket_policy not in BUCKET_POLICIES:
+            raise ValueError(
+                f"unknown bucket_policy {self.bucket_policy!r}: choices are "
+                f"{BUCKET_POLICIES}")
+        if self.bucket_policy != "single" and not self.uses_codec:
+            raise ValueError(
+                "bucket_policy='layer-class' is inert without the fused "
+                "codec (strategy='asgd_ga', 0 < compress_topk < 1, "
+                "quantize_int8=True): only the codec path packs per-bucket "
+                "payloads, so the run would train single-bucket while its "
+                "summary claims per-bucket control")
+        if not self.buckets:
+            return
+        if self.bucket_policy == "single":
+            raise ValueError(
+                f"bucket overrides ({', '.join(o.name for o in self.buckets)}"
+                f") require bucket_policy='layer-class': under 'single' "
+                f"there is one unnamed bucket and the overrides would be "
+                f"silently ignored")
+        seen = set()
+        for ov in self.buckets:
+            where = f"bucket {ov.name!r}: "
+            if ov.name not in BUCKET_CLASSES:
+                raise ValueError(
+                    where + f"unknown bucket group; the layer-class groups "
+                    f"are {BUCKET_CLASSES}")
+            if ov.name in seen:
+                raise ValueError(where + "duplicate override — each bucket "
+                                         "group may be overridden once")
+            seen.add(ov.name)
+            if ov.compress_topk is not None and \
+                    not 0.0 < ov.compress_topk < 1.0:
+                raise ValueError(
+                    where + f"compress_topk must be in (0, 1), got "
+                    f"{ov.compress_topk} — a dense per-bucket payload has "
+                    f"no codec selection to quantize")
+            if ov.value_dtype is not None and \
+                    ov.value_dtype not in VALUE_DTYPES:
+                raise ValueError(
+                    where + f"unknown value_dtype {ov.value_dtype!r}: the "
+                    f"codec's payload tiers are {VALUE_DTYPES}")
+
+    # ------------------------------------------------------ bucket groups
+    @property
+    def bucket_names(self) -> Tuple[str, ...]:
+        """Bucket group names in segment order (one unnamed group when the
+        policy is ``"single"``)."""
+        return ("all",) if self.bucket_policy == "single" else BUCKET_CLASSES
+
+    def bucket_knobs(self, name: str) -> Tuple[float, str]:
+        """Effective (compress_topk, value_dtype) for one bucket group."""
+        for ov in self.buckets:
+            if ov.name == name:
+                return (ov.compress_topk if ov.compress_topk is not None
+                        else self.compress_topk,
+                        ov.value_dtype if ov.value_dtype is not None
+                        else self.value_dtype)
+        return self.compress_topk, self.value_dtype
+
+    def for_bucket(self, name: str) -> "SyncConfig":
+        """The effective single-bucket config governing one group's segment
+        — what the codec dispatch and the payload math run with."""
+        frac, dtype = self.bucket_knobs(name)
+        return _dc_replace(self, compress_topk=frac, value_dtype=dtype,
+                           bucket_policy="single", buckets=())
+
+    @property
+    def bucket_tiers(self) -> Tuple[int, ...]:
+        """Per-bucket index into :data:`CODEC_TIERS` (segment order)."""
+        return tuple(self.for_bucket(n).tier for n in self.bucket_names)
 
     @property
     def sends_gradients(self) -> bool:
@@ -169,7 +389,9 @@ class SyncConfig:
         return CODEC_TIERS.index(self.value_dtype) if self.uses_codec else 0
 
     def payload_mb(self, model_mb: float,
-                   measured_frac: Optional[float] = None) -> float:
+                   measured_frac: Optional[float] = None,
+                   bucket_weights: Optional[Mapping[str, float]] = None
+                   ) -> float:
         """Per-sync WAN payload per pod (drives the simulator & roofline).
 
         Sparse fp32 ships (fp32 value, int32 index) pairs: ``2 * frac`` of
@@ -180,7 +402,21 @@ class SyncConfig:
         ``0.625 * frac + 1/codec_block`` — >=8x below dense fp32 whenever
         ``frac <= 0.166`` (int8, default block) / ``frac <= 0.2`` (int4).
         For ASP pass the measured significant fraction (runtime-dependent);
-        a nominal 30% is assumed otherwise (Gaia reports 10-50%)."""
+        a nominal 30% is assumed otherwise (Gaia reports 10-50%).
+
+        With ``bucket_weights`` (fraction of model elements per bucket,
+        from :func:`bucket_weights_of`) a layer-class config is billed
+        per bucket: each group's segment pays its *own* (top-k, dtype)
+        rate.  Without weights the global knobs price the whole model —
+        exact for "single", an approximation for an overridden
+        layer-class config (callers that know the partition pass
+        weights)."""
+        if (bucket_weights is not None and self.uses_codec
+                and self.bucket_policy != "single"):
+            return sum(
+                self.for_bucket(n).payload_mb(
+                    model_mb * bucket_weights.get(n, 0.0))
+                for n in self.bucket_names)
         if self.strategy == "asp":
             frac = measured_frac if measured_frac is not None else 0.3
             return model_mb * (2 * frac if frac < 1.0 else 1.0)
@@ -199,20 +435,24 @@ class SyncState(NamedTuple):
     steps_since_sync: jnp.ndarray  # scalar int32
     significant_frac: jnp.ndarray  # ASP: fraction shipped at the last sync
     ef_residual: jnp.ndarray
-    #   error-feedback residual, flat (n_pods, N) in bucket order (what the
-    #   codec dropped + quantization error, re-injected next sync); (n_pods,
-    #   0) when the codec/EF path is off.  Deliberately no default: a
-    #   defaulted jnp array would be built at import time AND let stale
-    #   3-field constructor calls silently produce a wrong pod dim —
-    #   ``init_sync_state`` is the way to build one
-    tier: jnp.ndarray              # scalar int32 index into CODEC_TIERS —
-    #   the payload tier active at the last sync (survives retunes/resizes,
-    #   so logs and checkpoints can tell what the adaptive controller chose)
-    msg_norm: jnp.ndarray          # (n_pods,) L2 of the last codec sync's
-    #   pre-compression message (accumulated grad avg + EF residual)
-    resid_norm: jnp.ndarray        # (n_pods,) L2 of the post-sync EF
-    #   residual.  msg/resid norms are the AdaptiveSyncController's
-    #   gradient-statistics inputs; zeros off the codec path
+    #   error-feedback residual, flat (n_pods, N) in *bucket-grouped* leaf
+    #   order (what the codec dropped + quantization error, re-injected next
+    #   sync); each bucket group owns one contiguous (n_pods, N_g) segment
+    #   of it (see BucketLayout); (n_pods, 0) when the codec/EF path is off.
+    #   Deliberately no default: a defaulted jnp array would be built at
+    #   import time AND let stale 3-field constructor calls silently produce
+    #   a wrong pod dim — ``init_sync_state`` is the way to build one
+    tier: jnp.ndarray              # (n_buckets,) int32 indices into
+    #   CODEC_TIERS — each bucket group's payload tier at the last sync
+    #   (survives retunes/resizes, so logs and checkpoints can tell what
+    #   the adaptive controller chose per bucket; length 1 under "single")
+    msg_norm: jnp.ndarray          # (n_pods, n_buckets) L2 of the last
+    #   codec sync's pre-compression message per bucket segment
+    #   (accumulated grad avg + EF residual)
+    resid_norm: jnp.ndarray        # (n_pods, n_buckets) L2 of the
+    #   post-sync EF residual per bucket segment.  msg/resid norms are the
+    #   adaptive controllers' per-bucket gradient-statistics inputs; zeros
+    #   off the codec path
 
 
 def init_sync_state(cfg: SyncConfig, stacked_params: Pytree) -> SyncState:
@@ -229,13 +469,14 @@ def init_sync_state(cfg: SyncConfig, stacked_params: Pytree) -> SyncState:
                            stacked_params)
     n_ef = (sum(x.size for x in jax.tree.leaves(stacked_params)) // n_pods
             if (cfg.uses_codec and cfg.error_feedback) else 0)
+    nb = len(cfg.bucket_names)
     return SyncState(ga_buffer=buf,
                      steps_since_sync=jnp.zeros((), jnp.int32),
                      significant_frac=jnp.ones((), jnp.float32),
                      ef_residual=jnp.zeros((n_pods, n_ef), jnp.float32),
-                     tier=jnp.asarray(cfg.tier, jnp.int32),
-                     msg_norm=jnp.zeros((n_pods,), jnp.float32),
-                     resid_norm=jnp.zeros((n_pods,), jnp.float32))
+                     tier=jnp.asarray(cfg.bucket_tiers, jnp.int32),
+                     msg_norm=jnp.zeros((n_pods, nb), jnp.float32),
+                     resid_norm=jnp.zeros((n_pods, nb), jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -275,25 +516,33 @@ def on_step_gradients(cfg: SyncConfig, grads: Pytree, state: SyncState
 # --------------------------------------------------- bucketed WAN codec path
 
 
-def _pack_stacked(tree: Pytree) -> jnp.ndarray:
+def _pack_stacked(tree: Pytree,
+                  layout: Optional[BucketLayout] = None) -> jnp.ndarray:
     """Pack a stacked pytree into one contiguous (n_pods, N) bucket buffer.
 
     One concatenate amortizes the per-leaf compression dispatch the legacy
-    path pays; leaf order (jax.tree.leaves) defines the bucket layout and is
-    the order ``ef_residual`` is stored in."""
+    path pays.  Without a layout, leaf order (jax.tree.leaves) defines the
+    buffer order; with one, leaves are grouped by bucket (``layout.order``)
+    so each bucket group is a contiguous segment — either way the result's
+    order is the order ``ef_residual`` is stored in."""
     leaves = jax.tree.leaves(tree)
+    if layout is not None:
+        leaves = [leaves[i] for i in layout.order]
     return jnp.concatenate(
         [x.reshape(x.shape[0], -1).astype(jnp.float32) for x in leaves],
         axis=1)
 
 
-def _unpack_stacked(flat: jnp.ndarray, like: Pytree) -> Pytree:
+def _unpack_stacked(flat: jnp.ndarray, like: Pytree,
+                    layout: Optional[BucketLayout] = None) -> Pytree:
     """Inverse of :func:`_pack_stacked` against a reference pytree."""
     leaves, treedef = jax.tree.flatten(like)
+    offsets = (layout.leaf_offsets if layout is not None else None)
     out, off = [], 0
-    for x in leaves:
+    for i, x in enumerate(leaves):
         size = int(np_prod(x.shape[1:]))
-        out.append(flat[:, off:off + size].reshape(x.shape))
+        lo = offsets[i] if offsets is not None else off
+        out.append(flat[:, lo:lo + size].reshape(x.shape))
         off += size
     return jax.tree.unflatten(treedef, out)
 
@@ -321,6 +570,11 @@ def _codec_ship_flat(cfg: SyncConfig, flat: jnp.ndarray,
     n_pods, n_total = flat.shape
     block = min(cfg.codec_block, max(1, n_total))
     k_block = k_per_block(block, cfg.compress_topk)
+    # one encode/decode pair bound to this bucket's (block, tier) knobs —
+    # the per-bucket codec dispatch point (each bucket group of a
+    # layer-class config gets its own pair)
+    encode, decode = kops.wan_codec_fns(block=block,
+                                        value_dtype=cfg.value_dtype)
     nb = -(-n_total // block)
     n_chunks = max(1, min(cfg.overlap_chunks, nb))
     blocks_per_chunk = -(-nb // n_chunks)
@@ -330,14 +584,10 @@ def _codec_ship_flat(cfg: SyncConfig, flat: jnp.ndarray,
     for lo in range(0, n_total, step):
         seg = flat[:, lo:lo + step]
         m = seg.shape[1]
-        q, idx, scales = jax.vmap(
-            lambda f: kops.wan_encode(f, k_block, block=block,
-                                      value_dtype=cfg.value_dtype))(seg)
+        q, idx, scales = jax.vmap(lambda f: encode(f, k_block))(seg)
         if want_local:
             local_parts.append(jax.vmap(
-                lambda a, i, s: kops.wan_decode(a, i, s, m, block=block,
-                                                value_dtype=cfg.value_dtype)
-            )(q, idx, scales))
+                lambda a, i, s: decode(a, i, s, m))(q, idx, scales))
         # only the compact triple crosses the pod axis (collective-permute);
         # indices travel as u16 — they are block-local (< codec_block <=
         # 65536), and this is the wire format payload_mb bills for (the
@@ -346,12 +596,48 @@ def _codec_ship_flat(cfg: SyncConfig, flat: jnp.ndarray,
         idx16 = jnp.roll(idx.astype(jnp.uint16), cfg.peer_shift, axis=0)
         scales = jnp.roll(scales, cfg.peer_shift, axis=0)
         peer_parts.append(jax.vmap(
-            lambda a, i, s: kops.wan_decode(a, i, s, m, block=block,
-                                            value_dtype=cfg.value_dtype)
+            lambda a, i, s: decode(a, i, s, m)
         )(q, idx16.astype(jnp.int32), scales))
     peer = jnp.concatenate(peer_parts, axis=1)
     local = jnp.concatenate(local_parts, axis=1) if want_local else None
     return peer, local
+
+
+def _codec_ship_buckets(cfg: SyncConfig, flat: jnp.ndarray,
+                        layout: BucketLayout, want_local: bool
+                        ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Per-bucket encode -> ring -> decode over a bucket-grouped buffer.
+
+    Each bucket group's contiguous segment runs :func:`_codec_ship_flat`
+    under its *own* effective config (top-k fraction, payload tier) — the
+    layer-class partition's whole point: aggressive compression where the
+    gradient statistics make it free, conservative where it hurts.  Empty
+    groups (a model family without that layer class) pass through."""
+    peer_parts, local_parts = [], []
+    for g, name in enumerate(layout.names):
+        off, size = layout.offsets[g], layout.sizes[g]
+        seg = flat[:, off:off + size]
+        if size == 0:
+            peer_parts.append(seg)
+            local_parts.append(seg)
+            continue
+        p, l = _codec_ship_flat(cfg.for_bucket(name), seg,
+                                want_local=want_local)
+        peer_parts.append(p)
+        if want_local:
+            local_parts.append(l)
+    peer = jnp.concatenate(peer_parts, axis=1)
+    local = jnp.concatenate(local_parts, axis=1) if want_local else None
+    return peer, local
+
+
+def _bucket_norms(flat: jnp.ndarray, layout: BucketLayout) -> jnp.ndarray:
+    """Per-pod, per-bucket L2 norms of a bucket-grouped buffer:
+    (n_pods, n_buckets), zero columns for empty groups."""
+    cols = [jnp.linalg.norm(flat[:, off:off + size], axis=1)
+            if size else jnp.zeros((flat.shape[0],), jnp.float32)
+            for off, size in zip(layout.offsets, layout.sizes)]
+    return jnp.stack(cols, axis=1)
 
 
 def _ship_ring(cfg: SyncConfig, tree: Pytree) -> Pytree:
@@ -408,23 +694,25 @@ def apply_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
         new_resid = state.ef_residual
         msg_norm, resid_norm = state.msg_norm, state.resid_norm
         if cfg.uses_codec:
-            # fused codec: bucket -> (+ EF residual) -> top-k -> quantize ->
-            # ring -> decode; the residual keeps everything the codec
-            # dropped for re-injection at the next sync (EF-SGD)
-            flat = _pack_stacked(avg)
+            # fused codec: bucket -> (+ EF residual) -> per-bucket top-k ->
+            # quantize -> ring -> decode; the residual keeps everything the
+            # codec dropped for re-injection at the next sync (EF-SGD)
+            layout = bucket_layout(cfg, avg)
+            flat = _pack_stacked(avg, layout)
             if cfg.error_feedback:
                 flat = flat + state.ef_residual
-            peer_flat, local_flat = _codec_ship_flat(
-                cfg, flat, want_local=cfg.error_feedback)
-            peer = _unpack_stacked(peer_flat, avg)
-            # per-pod message norm — with EF also the residual norm; their
-            # ratio is the convergence signal the adaptive controller
-            # guards on (residual growing toward the message norm means
-            # the tier is dropping more than EF can recover per interval)
-            msg_norm = jnp.linalg.norm(flat, axis=1)
+            peer_flat, local_flat = _codec_ship_buckets(
+                cfg, flat, layout, want_local=cfg.error_feedback)
+            peer = _unpack_stacked(peer_flat, avg, layout)
+            # per-pod, per-bucket message norms — with EF also the residual
+            # norms; their ratio is the convergence signal the adaptive
+            # controllers guard on (a bucket's residual growing toward its
+            # message norm means that bucket's tier is dropping more than
+            # EF can recover per interval)
+            msg_norm = _bucket_norms(flat, layout)
             if cfg.error_feedback:
                 new_resid = flat - local_flat
-                resid_norm = jnp.linalg.norm(new_resid, axis=1)
+                resid_norm = _bucket_norms(new_resid, layout)
         else:
             peer = _ship_ring(cfg, avg)
         scale = jnp.asarray(lr, jnp.float32) * cfg.ga_lr_scale
@@ -433,7 +721,8 @@ def apply_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
             params, peer)
         buf = jax.tree.map(jnp.zeros_like, state.ga_buffer)
         return params, zero._replace(ga_buffer=buf, ef_residual=new_resid,
-                                     tier=jnp.asarray(cfg.tier, jnp.int32),
+                                     tier=jnp.asarray(cfg.bucket_tiers,
+                                                      jnp.int32),
                                      msg_norm=msg_norm,
                                      resid_norm=resid_norm)
 
@@ -603,12 +892,16 @@ def resize_sync_state(cfg: SyncConfig, state: SyncState, new_params: Pytree,
             resid = grow_pods([resid], n_new, how="zeros")[0]
         # msg/resid norms are transient telemetry of the *last* sync round:
         # a pod-count change invalidates them, so they re-arm at zero (the
-        # adaptive controller treats zeros as "no reading yet"); the active
-        # tier survives the resize untouched
+        # adaptive controllers treat zeros as "no reading yet"); the active
+        # per-bucket tiers survive the resize untouched, and the bucket
+        # partition itself is pod-count-independent (it is a property of
+        # the per-pod leaf shapes), so the grouped EF-residual segments
+        # stay aligned through the pod-axis grow/shrink above
+        nb = len(cfg.bucket_names)
         return state._replace(
             ga_buffer=buf, ef_residual=resid,
-            msg_norm=jnp.zeros((n_new,), jnp.float32),
-            resid_norm=jnp.zeros((n_new,), jnp.float32))
+            msg_norm=jnp.zeros((n_new, nb), jnp.float32),
+            resid_norm=jnp.zeros((n_new, nb), jnp.float32))
     fresh = init_sync_state(cfg, new_params)
     return fresh._replace(steps_since_sync=state.steps_since_sync,
                           significant_frac=state.significant_frac,
@@ -624,9 +917,15 @@ def retune_sync_state(new_cfg: SyncConfig, old_cfg: SyncConfig,
     The EF residual is the one buffer whose meaning survives a tier change:
     it is defined in dense bucket coordinates (message minus what the peer
     reconstructed), independent of how the next message will be encoded —
-    re-injecting it under the new tier is exactly EF-SGD semantics.  It is
-    dropped only when the new config stops tracking it (EF off) and
-    zero-seeded when EF turns on.
+    re-injecting it under the new tier is exactly EF-SGD semantics, and
+    each bucket group's segment carries over *independently* (a retune
+    that moves only the MoE bucket's tier leaves every other bucket's
+    residual bytes untouched).  When the retune changes the bucket
+    *policy* (single <-> layer-class) the grouped buffer order changes,
+    so the residual is re-permuted leaf-chunk by leaf-chunk into the new
+    layout — no residual mass is dropped.  It is dropped only when the
+    new config stops tracking it (EF off) and zero-seeded when EF turns
+    on.
     """
     if new_cfg.strategy != old_cfg.strategy:
         raise ValueError(
@@ -643,8 +942,25 @@ def retune_sync_state(new_cfg: SyncConfig, old_cfg: SyncConfig,
         resid = jnp.zeros((n_pods, 0), jnp.float32)
     else:
         resid = state.ef_residual
+        old_layout = bucket_layout(old_cfg, stacked_params)
+        new_layout = bucket_layout(new_cfg, stacked_params)
+        if old_layout.order != new_layout.order:
+            # policy change re-groups the buffer: move each leaf's chunk
+            # from its old offset to its new packing position
+            old_off = old_layout.leaf_offsets
+            resid = jnp.concatenate(
+                [resid[:, old_off[i]:old_off[i] + old_layout.leaf_sizes[i]]
+                 for i in new_layout.order], axis=1)
+    nb_new, nb_old = len(new_cfg.bucket_names), len(old_cfg.bucket_names)
+    msg_norm, resid_norm = state.msg_norm, state.resid_norm
+    if nb_new != nb_old:
+        # telemetry columns are per-bucket: a policy change re-arms them
+        # at zero ("no reading yet") rather than mislabeling old readings
+        msg_norm = jnp.zeros((n_pods, nb_new), jnp.float32)
+        resid_norm = jnp.zeros((n_pods, nb_new), jnp.float32)
     return state._replace(ef_residual=resid,
-                          tier=jnp.asarray(new_cfg.tier, jnp.int32))
+                          tier=jnp.asarray(new_cfg.bucket_tiers, jnp.int32),
+                          msg_norm=msg_norm, resid_norm=resid_norm)
 
 
 # ---------------------------------------------------------------------------
@@ -659,8 +975,15 @@ def is_sync_step(cfg: SyncConfig, step: int) -> bool:
     return (step + 1) % cfg.interval == 0
 
 
-def traffic_per_step_mb(cfg: SyncConfig, model_mb: float) -> float:
-    """Average inter-pod WAN traffic per training step per pod."""
+def traffic_per_step_mb(cfg: SyncConfig, model_mb: float,
+                        bucket_weights: Optional[Mapping[str, float]] = None
+                        ) -> float:
+    """Average inter-pod WAN traffic per training step per pod.
+
+    ``bucket_weights`` (from :func:`bucket_weights_of`) makes a
+    layer-class config's accounting exact — each bucket group is billed
+    at its own tier."""
     if cfg.strategy == "asgd":
         return model_mb
-    return cfg.payload_mb(model_mb) / cfg.interval
+    return cfg.payload_mb(model_mb, bucket_weights=bucket_weights) \
+        / cfg.interval

@@ -82,3 +82,32 @@ def wan_decode(q: jnp.ndarray, idx: jnp.ndarray, scales: jnp.ndarray,
                                  interpret=not _on_tpu())
     return _ref.wan_decode(q, idx, scales, n, block=block,
                            value_dtype=value_dtype)
+
+
+def wan_codec_fns(*, block: int = 4096, value_dtype: str = "int8",
+                  use_kernel: bool = True, interpret: bool = False):
+    """Bind one bucket group's codec knobs; returns ``(encode, decode)``.
+
+    The multi-bucket sync path dispatches each bucket group's contiguous
+    segment through its own pair — one dispatch decision per (block, tier)
+    combination instead of one per call site, and the single place where a
+    backend could swap in tier-specialized kernels per bucket.
+
+    ``encode(x, k_block) -> (q, idx, scales)``;
+    ``decode(q, idx, scales, n) -> dense``.
+    """
+    if value_dtype not in ("int8", "fp8", "int4"):
+        raise ValueError(f"unknown codec value_dtype {value_dtype!r}")
+
+    def encode(x: jnp.ndarray, k_block: int
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        return wan_encode(x, k_block, block=block, value_dtype=value_dtype,
+                          use_kernel=use_kernel, interpret=interpret)
+
+    def decode(q: jnp.ndarray, idx: jnp.ndarray, scales: jnp.ndarray,
+               n: int) -> jnp.ndarray:
+        return wan_decode(q, idx, scales, n, block=block,
+                          value_dtype=value_dtype, use_kernel=use_kernel,
+                          interpret=interpret)
+
+    return encode, decode

@@ -102,9 +102,9 @@ def sync_state_axes(sync: SyncConfig, param_axes: Pytree) -> SyncState:
     return SyncState(ga_buffer=buf, steps_since_sync=LA(()),
                      significant_frac=LA(()),
                      ef_residual=LA(("pod_stack", None)),
-                     tier=LA(()),
-                     msg_norm=LA(("pod_stack",)),
-                     resid_norm=LA(("pod_stack",)))
+                     tier=LA((None,)),              # (n_buckets,) vector
+                     msg_norm=LA(("pod_stack", None)),
+                     resid_norm=LA(("pod_stack", None)))
 
 
 def train_state_axes(fns: ModelFns, cfg, tcfg: TrainerConfig) -> TrainState:

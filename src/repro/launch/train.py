@@ -35,13 +35,16 @@ import numpy as np
 from repro.checkpoint import checkpoint as ckpt
 from repro.configs import ARCH_IDS, get_arch
 from repro.configs.base import dense
-from repro.core.autotune import AdaptiveSyncController, BucketStats
+from repro.core.autotune import (AdaptiveSyncController, BucketStats,
+                                 BucketedSyncController,
+                                 bucket_stats_from_sync_state)
 from repro.core.control_plane import (CloudEvent, ElasticityController,
                                       EventBus, ReconfigPlan,
                                       TrainingRequest, build_training_plan)
 from repro.core.scheduler import CloudResources, diff_plans
-from repro.core.sync import (VALUE_DTYPES, SyncConfig, is_sync_step,
-                             traffic_per_step_mb)
+from repro.core.sync import (BUCKET_CLASSES, BUCKET_POLICIES, VALUE_DTYPES,
+                             BucketOverride, SyncConfig, bucket_weights_of,
+                             is_sync_step, traffic_per_step_mb)
 from repro.core.wan import BandwidthTrace
 from repro.data.pipeline import TokenStream
 from repro.models.registry import get_model_fns
@@ -114,6 +117,34 @@ def parse_wan_trace(spec: str, steps: int, step_time_s: float
     return BandwidthTrace(times_s=tuple(times), mbps=tuple(mbps))
 
 
+def parse_bucket_overrides(spec: str) -> tuple:
+    """Parse ``--bucket-override`` into :class:`BucketOverride` entries.
+
+    Comma-separated per-bucket entries, colon-separated ``key=value``
+    knobs:  ``embed:topk=0.02:dtype=int4,norm:dtype=int8``.
+    Keys: ``topk`` (compress fraction) and ``dtype`` (codec tier)."""
+    out = []
+    if not spec:
+        return ()
+    for entry in spec.split(","):
+        name, _, rest = entry.strip().partition(":")
+        kw = {}
+        for part in rest.split(":"):
+            if not part:
+                continue
+            k, _, v = part.partition("=")
+            if k == "topk":
+                kw["compress_topk"] = float(v)
+            elif k == "dtype":
+                kw["value_dtype"] = v
+            else:
+                raise ValueError(
+                    f"bucket {name!r}: unknown override key {k!r} in "
+                    f"{entry!r} (keys: topk, dtype)")
+        out.append(BucketOverride(name=name, **kw))
+    return tuple(out)
+
+
 def preset_100m():
     """~100M-parameter dense decoder for the end-to-end driver."""
     return dense("dense-100m", n_layers=8, d_model=768, n_heads=12,
@@ -161,6 +192,17 @@ def main(argv=None):
                     help=">1: pipeline the ring permute of one chunk with "
                          "the encode of the next")
     ap.add_argument("--codec-block", type=int, default=4096)
+    ap.add_argument("--bucket-policy", default="single",
+                    choices=list(BUCKET_POLICIES),
+                    help="layer-class: partition the codec payload into "
+                         f"{BUCKET_CLASSES} groups, each with its own "
+                         "(top-k, dtype) knobs, EF telemetry and — under "
+                         "--adaptive-sync — its own controller rung")
+    ap.add_argument("--bucket-override", default="",
+                    help="per-bucket knob overrides (with --bucket-policy "
+                         "layer-class), e.g. "
+                         "'embed:topk=0.02:dtype=int4,norm:dtype=int8'; "
+                         "unnamed groups inherit the global knobs")
     ap.add_argument("--optimizer", default="sgd")
     ap.add_argument("--lr", type=float, default=0.02)
     ap.add_argument("--data-ratio", default="1:1",
@@ -216,7 +258,9 @@ def main(argv=None):
                           value_dtype=args.value_dtype,
                           error_feedback=args.error_feedback,
                           codec_block=args.codec_block,
-                          overlap_chunks=args.overlap_chunks)
+                          overlap_chunks=args.overlap_chunks,
+                          bucket_policy=args.bucket_policy,
+                          buckets=parse_bucket_overrides(args.bucket_override))
     request = TrainingRequest(model=name, clouds=clouds, sync=sync_cfg,
                               n_iters=args.steps, global_batch=args.batch)
     plan = build_training_plan(request)
@@ -261,14 +305,23 @@ def main(argv=None):
                    for x in jax.tree.leaves(state.params)) / args.pods / 1e6
     print(f"[train] {name}: {n_params:,} params/pod ({model_mb:.1f} MB), "
           f"{args.pods} pods, sync={args.sync}@{args.interval}")
+    bweights = (bucket_weights_of(sync_cfg, state.params)
+                if sync_cfg.bucket_policy != "single" else None)
     if sync_cfg.uses_codec:
+        payload = sync_cfg.payload_mb(model_mb, bucket_weights=bweights)
         print(f"[train] wan codec: top-k {sync_cfg.compress_topk} + "
               f"{sync_cfg.value_dtype}, block {sync_cfg.codec_block}, "
               f"ef={'on' if sync_cfg.error_feedback else 'off'}, "
               f"chunks {sync_cfg.overlap_chunks}, payload "
-              f"{sync_cfg.payload_mb(model_mb):.2f} MB/sync "
-              f"({model_mb / max(sync_cfg.payload_mb(model_mb), 1e-9):.0f}x "
-              f"below dense)")
+              f"{payload:.2f} MB/sync "
+              f"({model_mb / max(payload, 1e-9):.0f}x below dense)")
+        if bweights is not None:
+            knobs = {n: sync_cfg.bucket_knobs(n)
+                     for n in sync_cfg.bucket_names if bweights.get(n, 0) > 0}
+            print(f"[train] bucket groups: "
+                  + ", ".join(f"{n} {bweights[n] * model_mb:.1f} MB "
+                              f"(topk {f}, {d})"
+                              for n, (f, d) in knobs.items()))
 
     # -------------------------------------------------------- elasticity
     # one control plane: the EventBus carries bandwidth/cloud churn to BOTH
@@ -284,14 +337,26 @@ def main(argv=None):
             raise SystemExit(
                 "--adaptive-sync requires the fused codec with error "
                 "feedback: add --compress-topk F --int8 --error-feedback")
-        tuner = AdaptiveSyncController(
-            sync_cfg, model_mb, args.step_time, ef_guard=args.ef_guard,
-            bus=bus)
+        if sync_cfg.bucket_policy == "layer-class":
+            bucket_mb = {n: w * model_mb for n, w in bweights.items()}
+            tuner = BucketedSyncController(
+                sync_cfg, bucket_mb, args.step_time, ef_guard=args.ef_guard,
+                bus=bus)
+            print(f"[autotune] per-bucket rungs: "
+                  + ", ".join(f"{n} ({b.model_mb:.1f} MB, "
+                              f"{len(b.ladder)} rungs)"
+                              for n, b in tuner.buckets.items())
+                  + f", ef_guard {args.ef_guard}, "
+                  f"budget {tuner.interval_budget}")
+        else:
+            tuner = AdaptiveSyncController(
+                sync_cfg, model_mb, args.step_time, ef_guard=args.ef_guard,
+                bus=bus)
+            print(f"[autotune] ladder: "
+                  f"{[f'{c.value_dtype}@{c.compress_topk}' for c in tuner.ladder]}"
+                  f", ef_guard {args.ef_guard}, budget {tuner.interval_budget}")
         if trace is not None:
             tuner.observe_wan(trace.at(0.0))
-        print(f"[autotune] ladder: "
-              f"{[f'{c.value_dtype}@{c.compress_topk}' for c in tuner.ladder]}"
-              f", ef_guard {args.ef_guard}, budget {tuner.interval_budget}")
     last_bw = trace.at(0.0) if trace is not None else None
     # several events may fire between two barriers: the reconfig applied at
     # the barrier is composed against the plan that is actually live on the
@@ -337,16 +402,21 @@ def main(argv=None):
         # in SyncState) — so a link crash is acted on BEFORE this step's
         # transfer is paid at the stale config
         if tuner is not None and trainer.cfg.n_pods > 1:
-            upd = tuner.update(step, BucketStats.from_sync_state(
-                state.sync_state))
+            if isinstance(tuner, BucketedSyncController):
+                upd = tuner.update(step, bucket_stats_from_sync_state(
+                    state.sync_state, trainer.cfg.sync.bucket_names))
+            else:
+                upd = tuner.update(step, BucketStats.from_sync_state(
+                    state.sync_state))
             if upd is not None:
                 trainer, state = trainer.retune(state, upd.sync)
                 n_retunes += 1
                 detail = (f", ef_ratio {upd.stats.ef_ratio:.3f}"
-                          if upd.stats else "")
+                          if getattr(upd, "stats", None) else "")
                 print(f"[autotune] step {step + 1}: {upd.summary()} "
-                      f"(payload {upd.sync.payload_mb(model_mb):.3f} MB"
-                      f"{detail})")
+                      f"(payload "
+                      f"{upd.sync.payload_mb(model_mb, bucket_weights=bweights):.3f}"
+                      f" MB{detail})")
 
         state, metrics = trainer.train_step(state, batches(step))
         state = trainer.maybe_sync(state, step, model_mb)
@@ -417,7 +487,17 @@ def main(argv=None):
         "final_tier": trainer.cfg.sync.tier,
         "final_compress_topk": trainer.cfg.sync.compress_topk,
         "final_value_dtype": trainer.cfg.sync.value_dtype,
+        "bucket_policy": args.bucket_policy,
+        "final_buckets": {
+            n: {"compress_topk": f, "value_dtype": d}
+            for n in trainer.cfg.sync.bucket_names
+            for f, d in [trainer.cfg.sync.bucket_knobs(n)]
+        } if args.bucket_policy != "single" else None,
         "max_ef_ratio": round(tuner.max_ef_ratio, 4) if tuner else None,
+        "max_ef_ratio_by_bucket": (
+            {n: round(r, 4)
+             for n, r in tuner.max_ef_ratio_by_bucket.items()}
+            if isinstance(tuner, BucketedSyncController) else None),
         "wall_s": round(time.time() - t0, 1),
     }
     print(json.dumps(summary, indent=1))

@@ -28,10 +28,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sync import (SyncConfig, SyncState, apply_sync, grow_pods,
-                             init_sync_state, is_sync_step, on_step_gradients,
-                             resize_sync_state, retune_sync_state, shrink_pods,
-                             traffic_per_step_mb)
+from repro.core.sync import (SyncConfig, SyncState, apply_sync,
+                             bucket_weights_of, grow_pods, init_sync_state,
+                             is_sync_step, on_step_gradients,
+                             resize_sync_state, retune_sync_state,
+                             shrink_pods, traffic_per_step_mb)
 from repro.optim.optimizers import (Optimizer, clip_by_global_norm,
                                     constant_schedule, get_optimizer,
                                     global_norm)
@@ -75,7 +76,31 @@ class Trainer:
         self.schedule = cfg.make_schedule()
         self._train_step = jax.jit(self._train_step_impl)
         self._sync_step = jax.jit(self._sync_step_impl)
+        # compiled-sync-step cache across retunes, keyed by the codec
+        # shape of the config (interval is host-side scheduling only and
+        # never forces a re-jit); carried from trainer to trainer so an
+        # adaptive controller revisiting a rung reuses the old executable
+        self._sync_cache: Dict[SyncConfig, Any] = {self._sync_key(cfg.sync):
+                                                   self._sync_step}
+        self._bucket_weights: Optional[Dict[str, float]] = None
         self.traffic_mb = 0.0
+
+    @staticmethod
+    def _sync_key(sync: SyncConfig) -> SyncConfig:
+        """Cache key: the jitted sync step depends on every codec knob —
+        per-bucket tiers/fractions included — but NOT on the interval."""
+        import dataclasses
+        return dataclasses.replace(sync, interval=1)
+
+    def bucket_weights(self, state: "TrainState") -> Optional[Dict[str, float]]:
+        """Per-bucket model-element fractions (memoized; shape-only), for
+        exact layer-class traffic accounting."""
+        if self.cfg.sync.bucket_policy == "single":
+            return None
+        if self._bucket_weights is None:
+            self._bucket_weights = bucket_weights_of(self.cfg.sync,
+                                                     state.params)
+        return self._bucket_weights
 
     # ------------------------------------------------------------- state
     def init_state(self, key, same_init: bool = True) -> TrainState:
@@ -166,16 +191,30 @@ class Trainer:
         trainer = Trainer(self.loss_fn, self.init_fn, new_cfg)
         # the per-step path depends on the sync *strategy* (which a retune
         # cannot change), not the codec knobs — reuse the compiled train
-        # step so a retune recompiles only the sync step
+        # step so a retune recompiles only the sync step.  And only when a
+        # bucket's tier/top-k actually changed: the shared sync-step cache
+        # (keyed on the interval-normalized config) means an interval-only
+        # retune, or a return to a previously compiled rung combination,
+        # re-jits nothing at all
         trainer._train_step = self._train_step
+        trainer._sync_cache = self._sync_cache
+        key = self._sync_key(sync)
+        cached = self._sync_cache.get(key)
+        if cached is not None:
+            trainer._sync_step = cached
+        else:
+            self._sync_cache[key] = trainer._sync_step
+        if sync.bucket_policy == self.cfg.sync.bucket_policy:
+            trainer._bucket_weights = self._bucket_weights
         trainer.traffic_mb = self.traffic_mb
         return trainer, state._replace(sync_state=sync_state)
 
     def maybe_sync(self, state: TrainState, host_step: int,
                    model_mb: float = 0.0) -> TrainState:
         if self.cfg.n_pods > 1:
-            self.traffic_mb += traffic_per_step_mb(self.cfg.sync, model_mb) \
-                * self.cfg.n_pods
+            self.traffic_mb += traffic_per_step_mb(
+                self.cfg.sync, model_mb,
+                bucket_weights=self.bucket_weights(state)) * self.cfg.n_pods
         if is_sync_step(self.cfg.sync, host_step) and self.cfg.n_pods > 1:
             state = self._sync_step(state)
         return state

@@ -226,7 +226,7 @@ def test_retune_preserves_ef_residual_across_tiers():
     # the residual is tier-independent (dense bucket coords): carried over
     np.testing.assert_array_equal(np.asarray(st2.ef_residual),
                                   np.asarray(st.ef_residual))
-    assert int(st2.tier) == cfg4.tier
+    assert int(st2.tier[0]) == cfg4.tier   # one bucket under "single"
     # EF off drops the buffer; EF back on re-arms it at zero
     cfg_no_ef = SyncConfig("asgd_ga", 2, compress_topk=0.02,
                            quantize_int8=True, codec_block=512)
@@ -272,7 +272,7 @@ def test_trainer_retune_keeps_training():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     np.testing.assert_array_equal(np.asarray(st.sync_state.ef_residual),
                                   np.asarray(st2.sync_state.ef_residual))
-    assert int(st2.sync_state.tier) == new_sync.tier
+    assert int(st2.sync_state.tier[0]) == new_sync.tier
     losses = []
     for step in range(4, 10):
         st2, m = tr2.train_step(st2, batch())

@@ -1,0 +1,509 @@
+"""Per-bucket WAN sync partitioning: layer-class classification, per-bucket
+codec semantics, EF-residual carry-over across retune + elasticity in one
+run, the growth-trend guard, and the BucketedSyncController control law.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autotune import (AdaptiveSyncController, BucketStats,
+                                 BucketedSyncController,
+                                 bucket_stats_from_sync_state)
+from repro.core.sync import (BUCKET_CLASSES, BucketOverride, SyncConfig,
+                             apply_sync, bucket_layout, bucket_weights_of,
+                             init_sync_state, on_step_gradients,
+                             resize_sync_state, retune_sync_state,
+                             _pack_stacked)
+
+# a stacked tree with one leaf per layer class (2 pods)
+def _tree(n_pods=2, seed=0):
+    rng = np.random.default_rng(seed)
+    f32 = lambda *s: jnp.asarray(rng.normal(size=(n_pods,) + s), jnp.float32)
+    return {"embed": {"tokens": f32(40, 8)},
+            "final_norm": {"scale": f32(16)},
+            "mlp": {"w": f32(64, 32)},
+            "moe": {"wg": f32(4, 16, 8)}}
+
+
+MULTI = SyncConfig("asgd_ga", 1, compress_topk=0.1, quantize_int8=True,
+                   error_feedback=True, codec_block=256,
+                   bucket_policy="layer-class")
+
+
+# ----------------------------------------------------------- classification
+
+
+def test_layer_class_classification():
+    t = _tree()
+    lay = bucket_layout(MULTI, t)
+    assert lay.names == BUCKET_CLASSES
+    # leaves flatten in dict-key order: embed, final_norm, mlp, moe
+    assert lay.leaf_bucket == (BUCKET_CLASSES.index("embed"),
+                               BUCKET_CLASSES.index("norm"),
+                               BUCKET_CLASSES.index("dense"),
+                               BUCKET_CLASSES.index("moe"))
+    # contiguous segments covering the whole buffer, in name order
+    assert lay.offsets == (0, 320, 336, 2384)
+    assert sum(lay.sizes) == 320 + 16 + 2048 + 512
+
+
+def test_vector_fallback_and_pattern_precedence():
+    t = {"moe": {"bias": jnp.zeros((2, 8))},       # moe pattern beats bias
+         "w1": jnp.zeros((2, 4, 4)),               # no pattern, rank 2 -> dense
+         "b1": jnp.zeros((2, 4))}                  # no pattern, rank 1 -> norm
+    lay = bucket_layout(MULTI, t)
+    # dict keys flatten sorted: b1, moe/bias, w1
+    by_name = dict(zip(["b1", "bias", "w1"], lay.leaf_bucket))
+    assert BUCKET_CLASSES[by_name["bias"]] == "moe"
+    assert BUCKET_CLASSES[by_name["w1"]] == "dense"
+    assert BUCKET_CLASSES[by_name["b1"]] == "norm"
+
+
+def test_single_policy_layout_is_identity():
+    cfg = SyncConfig("asgd_ga", 1, compress_topk=0.1, quantize_int8=True,
+                     error_feedback=True)
+    t = _tree()
+    lay = bucket_layout(cfg, t)
+    assert lay.names == ("all",)
+    assert lay.order == tuple(range(4))
+    legacy = np.asarray(_pack_stacked(t))
+    grouped = np.asarray(_pack_stacked(t, lay))
+    np.testing.assert_array_equal(legacy, grouped)
+
+
+def test_bucket_weights_sum_to_one():
+    w = bucket_weights_of(MULTI, _tree())
+    assert w.keys() == set(BUCKET_CLASSES)
+    assert sum(w.values()) == pytest.approx(1.0)
+    assert all(v >= 0 for v in w.values())
+
+
+# -------------------------------------------------------- config semantics
+
+
+def test_bucket_override_knobs_and_payload():
+    cfg = SyncConfig(
+        "asgd_ga", 4, compress_topk=0.05, quantize_int8=True,
+        error_feedback=True, bucket_policy="layer-class",
+        buckets=(BucketOverride("moe", compress_topk=0.01,
+                                value_dtype="int4"),
+                 BucketOverride("norm", compress_topk=0.5)))
+    assert cfg.bucket_knobs("moe") == (0.01, "int4")
+    assert cfg.bucket_knobs("norm") == (0.5, "int8")
+    assert cfg.bucket_knobs("dense") == (0.05, "int8")   # inherits global
+    assert cfg.for_bucket("moe").uses_codec
+    assert cfg.bucket_tiers == (1, 1, 1, 3)
+    # weighted payload equals the sum of per-bucket payloads
+    w = {"embed": 0.2, "norm": 0.05, "dense": 0.55, "moe": 0.2}
+    expect = sum(cfg.for_bucket(n).payload_mb(100.0 * w[n])
+                 for n in cfg.bucket_names)
+    assert cfg.payload_mb(100.0, bucket_weights=w) == pytest.approx(expect)
+
+
+def test_validation_errors_name_the_bucket():
+    base = dict(compress_topk=0.1, quantize_int8=True, error_feedback=True,
+                bucket_policy="layer-class")
+    with pytest.raises(ValueError, match="bucket 'moe'"):
+        SyncConfig("asgd_ga", 1, **base,
+                   buckets=(BucketOverride("moe", value_dtype="fp16"),))
+    with pytest.raises(ValueError, match="bucket 'embed'"):
+        SyncConfig("asgd_ga", 1, **base,
+                   buckets=(BucketOverride("embed", compress_topk=1.5),))
+    with pytest.raises(ValueError, match="bucket 'attn'"):
+        SyncConfig("asgd_ga", 1, **base,
+                   buckets=(BucketOverride("attn", compress_topk=0.1),))
+    with pytest.raises(ValueError, match="bucket 'norm'.*duplicate"):
+        SyncConfig("asgd_ga", 1, **base,
+                   buckets=(BucketOverride("norm", compress_topk=0.1),
+                            BucketOverride("norm", compress_topk=0.2)))
+    # overrides without the layer-class policy name the offenders
+    with pytest.raises(ValueError, match="moe.*layer-class"):
+        SyncConfig("asgd_ga", 1, compress_topk=0.1, quantize_int8=True,
+                   error_feedback=True,
+                   buckets=(BucketOverride("moe", compress_topk=0.1),))
+    # the policy itself is inert without the codec
+    with pytest.raises(ValueError, match="inert without the fused codec"):
+        SyncConfig("asgd_ga", 1, bucket_policy="layer-class")
+
+
+# ------------------------------------------------------- sync-round physics
+
+
+def test_per_bucket_ef_residual_is_exact_per_segment():
+    g = _tree(seed=3)
+    cfg = SyncConfig(
+        "asgd_ga", 1, compress_topk=0.1, quantize_int8=True,
+        error_feedback=True, codec_block=256, bucket_policy="layer-class",
+        buckets=(BucketOverride("norm", compress_topk=0.5),
+                 BucketOverride("moe", value_dtype="int4")))
+    p = jax.tree.map(jnp.zeros_like, g)
+    st = init_sync_state(cfg, p)
+    _, st = on_step_gradients(cfg, g, st)
+    out, st2 = apply_sync(cfg, p, st, lr=1.0)
+    lay = bucket_layout(cfg, p)
+    msg = np.asarray(_pack_stacked(st.ga_buffer, lay))
+    received = -np.asarray(_pack_stacked(out, lay))
+    local = np.roll(received, -cfg.peer_shift, axis=0)
+    # the residual is exactly message - decode(encode(message)), per bucket
+    np.testing.assert_allclose(np.asarray(st2.ef_residual), msg - local,
+                               atol=1e-6)
+    # telemetry matches the segment norms
+    for gidx in range(len(lay.names)):
+        off, size = lay.offsets[gidx], lay.sizes[gidx]
+        np.testing.assert_allclose(
+            np.asarray(st2.msg_norm)[:, gidx],
+            np.linalg.norm(msg[:, off:off + size], axis=1), rtol=1e-5)
+    assert tuple(np.asarray(st2.tier)) == cfg.bucket_tiers
+    # per-bucket stats expose differentiated ratios (norm@0.5 captures more
+    # energy than dense@0.1)
+    stats = bucket_stats_from_sync_state(st2, cfg.bucket_names)
+    assert stats["norm"].ef_ratio < stats["dense"].ef_ratio
+
+
+def test_bucketed_run_converges_like_single():
+    """Same knobs everywhere: the layer-class partition only re-orders the
+    packing, so training converges the same as single-bucket (not
+    bit-identical — block boundaries shift — but to the same quality)."""
+    rng = np.random.default_rng(0)
+
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"] + params["bias"]
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    def init_fn(key):
+        return {"w": jax.random.normal(key, (8, 4)) * 0.1,
+                "bias": jnp.zeros((4,))}
+
+    from repro.training.trainer import Trainer, TrainerConfig
+
+    def run(policy):
+        sync = SyncConfig("asgd_ga", 2, compress_topk=0.2,
+                          quantize_int8=True, error_feedback=True,
+                          codec_block=128, bucket_policy=policy)
+        tr = Trainer(loss_fn, init_fn,
+                     TrainerConfig(n_pods=2, optimizer="sgd", lr=0.05,
+                                   sync=sync))
+        st = tr.init_state(jax.random.key(0))
+        losses = []
+        data_rng = np.random.default_rng(7)
+        for step in range(30):
+            x = data_rng.normal(size=(2, 16, 8)).astype(np.float32)
+            y = (x[..., :4] * 0.5).astype(np.float32)
+            st, m = tr.train_step(st, {"x": jnp.asarray(x),
+                                       "y": jnp.asarray(y)})
+            st = tr.maybe_sync(st, step)
+            losses.append(float(m["loss"]))
+        return losses
+
+    single, multi = run("single"), run("layer-class")
+    assert multi[-1] < multi[0] * 0.5
+    assert multi[-1] == pytest.approx(single[-1], rel=0.25)
+
+
+# ----------------------- EF carry-over: retune + grow/shrink in one run
+
+
+def test_ef_residual_carries_across_retune_and_resize_same_run():
+    """The satellite guarantee: a bucket's EF residual survives BOTH a
+    codec retune and a pod grow/shrink in the same run — sum-preserving
+    through the resize, byte-identical through the retune."""
+    g = _tree(n_pods=3, seed=5)
+    p = jax.tree.map(jnp.zeros_like, g)
+    st = init_sync_state(MULTI, p)
+    _, st = on_step_gradients(MULTI, g, st)
+    _, st = apply_sync(MULTI, p, st, lr=1.0)
+    assert float(jnp.linalg.norm(st.ef_residual)) > 0
+
+    # 1. retune: move only the moe bucket's tier — every bucket's residual
+    # segment is untouched (dense bucket coordinates are tier-free)
+    retuned = SyncConfig(
+        "asgd_ga", 2, compress_topk=0.1, quantize_int8=True,
+        error_feedback=True, codec_block=256, bucket_policy="layer-class",
+        buckets=(BucketOverride("moe", compress_topk=0.02,
+                                value_dtype="int4"),))
+    st2 = retune_sync_state(retuned, MULTI, st, p)
+    np.testing.assert_array_equal(np.asarray(st2.ef_residual),
+                                  np.asarray(st.ef_residual))
+    assert tuple(np.asarray(st2.tier)) == retuned.bucket_tiers
+
+    # 2. shrink 3 -> 2 pods: per-bucket residual totals are preserved
+    # (replay-distribution is sum-preserving on every segment)
+    lay = bucket_layout(retuned, p)
+    totals_before = [np.asarray(st2.ef_residual)[:, off:off + size].sum()
+                     for off, size in zip(lay.offsets, lay.sizes)]
+    p2 = jax.tree.map(lambda x: x[:2], p)
+    st3 = resize_sync_state(retuned, st2, p2, keep=(0, 1))
+    assert st3.ef_residual.shape[0] == 2
+    for (off, size), before in zip(zip(lay.offsets, lay.sizes),
+                                   totals_before):
+        after = np.asarray(st3.ef_residual)[:, off:off + size].sum()
+        assert after == pytest.approx(before, abs=1e-4)
+    # telemetry re-armed, per-bucket tiers survive
+    assert np.asarray(st3.msg_norm).shape == (2, len(BUCKET_CLASSES))
+    assert float(np.abs(np.asarray(st3.msg_norm)).max()) == 0.0
+    assert tuple(np.asarray(st3.tier)) == retuned.bucket_tiers
+
+    # 3. grow back to 3: joiner starts with zero residual on every bucket
+    p3 = jax.tree.map(
+        lambda x: jnp.concatenate([x, x[:1]], axis=0), p2)
+    st4 = resize_sync_state(retuned, st3, p3)
+    assert st4.ef_residual.shape[0] == 3
+    np.testing.assert_allclose(np.asarray(st4.ef_residual)[2], 0.0)
+
+    # 4. and a second retune after the resize still carries it
+    st5 = retune_sync_state(MULTI, retuned, st4, p3)
+    np.testing.assert_array_equal(np.asarray(st5.ef_residual),
+                                  np.asarray(st4.ef_residual))
+
+
+def test_policy_change_retune_remaps_residual():
+    g = _tree(seed=9)
+    p = jax.tree.map(jnp.zeros_like, g)
+    st = init_sync_state(MULTI, p)
+    _, st = on_step_gradients(MULTI, g, st)
+    _, st = apply_sync(MULTI, p, st, lr=1.0)
+    single = SyncConfig("asgd_ga", 1, compress_topk=0.1, quantize_int8=True,
+                        error_feedback=True, codec_block=256)
+    st_single = retune_sync_state(single, MULTI, st, p)
+    st_back = retune_sync_state(MULTI, single, st_single, p)
+    # round trip through the single layout is the identity permutation
+    np.testing.assert_array_equal(np.asarray(st_back.ef_residual),
+                                  np.asarray(st.ef_residual))
+    # and no residual mass is lost either way
+    assert float(jnp.linalg.norm(st_single.ef_residual)) == pytest.approx(
+        float(jnp.linalg.norm(st.ef_residual)), rel=1e-6)
+    # telemetry re-armed on the policy change (bucket columns re-labeled)
+    assert st_single.msg_norm.shape[1] == 1
+    assert float(np.abs(np.asarray(st_single.msg_norm)).max()) == 0.0
+
+
+def test_trainer_retune_cache_skips_rejit():
+    from repro.training.trainer import Trainer, TrainerConfig
+
+    def loss_fn(params, batch):
+        return jnp.mean((batch["x"] @ params["w"]) ** 2), {}
+
+    def init_fn(key):
+        return {"w": jax.random.normal(key, (4, 2)) * 0.1}
+
+    base = SyncConfig("asgd_ga", 4, compress_topk=0.05, quantize_int8=True,
+                      error_feedback=True)
+    tr = Trainer(loss_fn, init_fn,
+                 TrainerConfig(n_pods=2, optimizer="sgd", sync=base))
+    st = tr.init_state(jax.random.key(0))
+    # interval-only retune: the compiled sync step is reused as-is
+    import dataclasses
+    tr2, st = tr.retune(st, dataclasses.replace(base, interval=8))
+    assert tr2._sync_step is tr._sync_step
+    # tier change: new sync step...
+    tier2 = dataclasses.replace(base, interval=8, value_dtype="int4")
+    tr3, st = tr2.retune(st, tier2)
+    assert tr3._sync_step is not tr2._sync_step
+    # ...but returning to a previously compiled rung reuses its executable
+    tr4, st = tr3.retune(st, dataclasses.replace(base, interval=2))
+    assert tr4._sync_step is tr._sync_step
+
+
+# ------------------------------------------------------ growth-trend guard
+
+
+def test_trend_guard_fires_before_absolute_bound():
+    """Property (satellite): on a monotone-rising EF-ratio trace the
+    growth-trend guard de-escalates BEFORE the ratio reaches the absolute
+    bound."""
+    base = SyncConfig("asgd_ga", 4, compress_topk=0.05, quantize_int8=True,
+                      error_feedback=True)
+    for slope in (0.03, 0.05, 0.08):
+        c = AdaptiveSyncController(base, 44.6, 0.5, ef_guard=0.9,
+                                   hysteresis=1000)  # isolate the guard
+        c.rung = 5
+        c.current = c.ladder[5]
+        ratio, step, fired = 0.05, 0, None
+        while ratio < 0.9:
+            u = c.update(step, BucketStats(1.0, ratio))
+            if u is not None and u.reason == "ef-trend":
+                fired = ratio
+                break
+            assert c.rung == 5, "no other rule may move the rung here"
+            ratio, step = ratio + slope, step + 1
+        assert fired is not None and fired < 0.9, f"slope {slope}"
+
+
+def test_trend_guard_ignores_noise_and_benign_drift():
+    base = SyncConfig("asgd_ga", 4, compress_topk=0.05, quantize_int8=True,
+                      error_feedback=True)
+    c = AdaptiveSyncController(base, 44.6, 0.5, ef_guard=0.9,
+                               hysteresis=1000)
+    c.rung = 5
+    c.current = c.ladder[5]
+    # non-monotone wiggle far below the guard: never fires
+    for step, r in enumerate([0.3, 0.32, 0.31, 0.33, 0.32, 0.34, 0.33]):
+        u = c.update(step, BucketStats(1.0, r))
+        assert u is None or u.reason != "ef-trend"
+    assert c.rung == 5
+    # slow drift whose extrapolation stays below the guard: never fires
+    c2 = AdaptiveSyncController(base, 44.6, 0.5, ef_guard=0.9,
+                                hysteresis=1000, trend_rise=0.02)
+    c2.rung = 5
+    c2.current = c2.ladder[5]
+    for step in range(8):
+        u = c2.update(step, BucketStats(1.0, 0.10 + 0.021 * step))
+        assert u is None or u.reason != "ef-trend"
+    assert c2.rung == 5
+
+
+# --------------------------------------------- BucketedSyncController law
+
+
+BMULTI = SyncConfig("asgd_ga", 4, compress_topk=0.05, quantize_int8=True,
+                    error_feedback=True, bucket_policy="layer-class")
+BMB = {"embed": 10.0, "norm": 0.5, "dense": 30.0, "moe": 0.0}
+
+
+def _bctrl(**kw):
+    kw.setdefault("interval_budget", 8)
+    kw.setdefault("max_interval", 12)
+    return BucketedSyncController(BMULTI, BMB, 0.5, **kw)
+
+
+def test_bucketed_controller_requires_layer_class():
+    single = SyncConfig("asgd_ga", 4, compress_topk=0.05,
+                        quantize_int8=True, error_feedback=True)
+    with pytest.raises(ValueError, match="layer-class"):
+        BucketedSyncController(single, BMB, 0.5)
+    with pytest.raises(ValueError, match="positive-size"):
+        BucketedSyncController(BMULTI, {"moe": 0.0}, 0.5)
+
+
+def test_guard_trip_moves_only_the_tripped_bucket():
+    c = _bctrl()
+    for b in c.buckets.values():
+        b.rung = 4
+    u = c.update(0, {"embed": BucketStats(1.0, 0.95),
+                     "norm": BucketStats(1.0, 0.2),
+                     "dense": BucketStats(1.0, 0.2)})
+    assert u is not None and "ef-guard[embed]" in u.reasons
+    assert c.buckets["embed"].rung == 3
+    assert c.buckets["norm"].rung == 4
+    assert c.buckets["dense"].rung == 4
+
+
+def test_pressure_escalates_biggest_bucket_first():
+    c = _bctrl(hysteresis=2)
+    for _ in range(6):
+        c.observe_wan(5.0)
+    calm = {n: BucketStats(1.0, 0.3) for n in c.buckets}
+    c.update(0, calm)
+    u = c.update(1, calm)
+    assert u is not None and any("wan-pressure[dense]" in r
+                                 for r in u.reasons)
+    # dense (30 MB) sheds bytes; embed/norm keep full fidelity
+    assert c.buckets["dense"].rung > 0
+    assert c.buckets["embed"].rung == 0
+    assert c.buckets["norm"].rung == 0
+
+
+def test_pressure_never_escalates_guard_stressed_bucket():
+    c = _bctrl(hysteresis=1, ef_guard=0.9, escalate_margin=0.8)
+    for _ in range(8):
+        c.observe_wan(0.5)      # catastrophic link
+    stressed = {"embed": BucketStats(1.0, 0.85),   # above 0.72 margin
+                "norm": BucketStats(1.0, 0.2),
+                "dense": BucketStats(1.0, 0.85)}
+    for step in range(6):
+        c.update(step, stressed)
+    assert c.buckets["embed"].rung == 0
+    assert c.buckets["dense"].rung == 0
+    # only the calm (tiny) bucket was allowed to trade fidelity
+    assert c.buckets["norm"].rung > 0
+
+
+def test_rearmed_telemetry_blocks_escalation():
+    """After a pod resize re-arms telemetry (msg_norm == 0), stale
+    pre-resize calm must not license an escalation — same rule as the
+    single-bucket controller."""
+    c = _bctrl(hysteresis=1)
+    calm = {n: BucketStats(1.0, 0.2) for n in c.buckets}
+    c.update(0, calm)                       # readings arrive once
+    for _ in range(8):
+        c.observe_wan(0.5)                  # heavy pressure
+    rearmed = {n: BucketStats(0.0, 0.0) for n in c.buckets}
+    for step in range(1, 6):
+        c.update(step, rearmed)
+    assert all(b.rung == 0 for b in c.buckets.values())
+    # and the interval stays within the budget (no escape valve on
+    # ignorance either)
+    assert c.interval <= c.interval_budget
+
+
+def test_headroom_returns_fidelity_to_most_hurt_bucket():
+    c = _bctrl(hysteresis=2)
+    for b in c.buckets.values():
+        b.rung = 4
+    for _ in range(10):
+        c.observe_wan(10_000.0)
+    stats = {"embed": BucketStats(1.0, 0.7),
+             "norm": BucketStats(1.0, 0.2),
+             "dense": BucketStats(1.0, 0.4)}
+    for step in range(20):
+        u = c.update(step, stats)
+        if u is not None and any("wan-headroom" in r for r in u.reasons):
+            break
+    assert c.buckets["embed"].rung == 3       # highest ratio de-escalates
+    assert c.buckets["norm"].rung == 4
+    assert c.buckets["dense"].rung == 4
+
+
+def test_combined_config_is_valid_and_applies():
+    c = _bctrl()
+    c.buckets["dense"].rung = 5
+    cfg = c.current
+    assert cfg.bucket_policy == "layer-class"
+    assert cfg.uses_codec and cfg.error_feedback    # validation ran
+    knobs = {o.name for o in cfg.buckets}
+    assert knobs == {"embed", "norm", "dense"}
+    # resync re-anchors from an externally applied config
+    c2 = _bctrl()
+    c2.resync(cfg)
+    assert c2.buckets["dense"].rung == 5
+    assert c2.interval == cfg.interval
+
+
+def test_bucketed_guard_never_violated_on_random_streams():
+    """Safety invariant on random stats streams: a guard trip always
+    de-escalates that bucket (or clamps at 0), and no bucket escalates
+    while its ratio is at/above the escalation margin."""
+    for seed in range(300):
+        rng = np.random.default_rng(seed)
+        c = _bctrl(hysteresis=int(rng.integers(1, 4)),
+                   ef_guard=float(rng.uniform(0.5, 0.95)))
+        for i in range(40):
+            c.observe_wan(float(rng.uniform(0.5, 200.0)))
+            stats, before = {}, {n: b.rung for n, b in c.buckets.items()}
+            for n in c.buckets:
+                stats[n] = BucketStats(1.0, float(rng.uniform(0.0, 1.0)))
+            c.update(i, stats)
+            for n, b in c.buckets.items():
+                r = stats[n].ef_ratio
+                if r >= c.ef_guard:
+                    assert b.rung == max(0, before[n] - 1), (seed, i, n)
+                elif r >= c.escalate_margin * c.ef_guard:
+                    assert b.rung <= before[n], (seed, i, n)
+                assert 0 <= b.rung < len(b.ladder)
+            assert c.min_interval <= c.interval <= c.max_interval
+
+
+# ------------------------------------------------------------ launcher glue
+
+
+def test_parse_bucket_overrides():
+    from repro.launch.train import parse_bucket_overrides
+
+    got = parse_bucket_overrides("embed:topk=0.02:dtype=int4,norm:dtype=int8")
+    assert got == (BucketOverride("embed", compress_topk=0.02,
+                                  value_dtype="int4"),
+                   BucketOverride("norm", value_dtype="int8"))
+    assert parse_bucket_overrides("") == ()
+    with pytest.raises(ValueError, match="unknown override key"):
+        parse_bucket_overrides("embed:block=4096")

@@ -1,0 +1,30 @@
+"""The docs gate (tools/check_docs.py) as a tier-1 test: intra-repo links
+resolve, fenced Python snippets compile, and each sync-related launcher
+flag is owned by exactly one cookbook page.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_intra_repo_links_resolve():
+    errors = []
+    n = check_docs.check_links(errors)
+    assert n > 0, "link scan found no links — scan is broken"
+    assert not errors, errors
+
+
+def test_python_snippets_compile():
+    errors = []
+    n = check_docs.check_snippets(errors)
+    assert n >= 1, "expected at least one fenced python snippet in docs"
+    assert not errors, errors
+
+
+def test_sync_flags_owned_by_exactly_one_page():
+    errors = []
+    check_docs.check_flag_ownership(errors)
+    assert not errors, errors

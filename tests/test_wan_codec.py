@@ -462,7 +462,7 @@ def test_codec_tier_sync_round_trip(value_dtype):
                      codec_block=512)
     p = jax.tree.map(jnp.zeros_like, g)
     st = init_sync_state(cfg, p)
-    assert int(st.tier) == cfg.tier
+    assert int(st.tier[0]) == cfg.tier     # one bucket under "single"
     _, st = on_step_gradients(cfg, g, st)
     out, st2 = apply_sync(cfg, p, st, lr=1.0)
     from repro.core.sync import _pack_stacked
@@ -471,7 +471,7 @@ def test_codec_tier_sync_round_trip(value_dtype):
     local = np.roll(received, -cfg.peer_shift, axis=0)
     np.testing.assert_allclose(np.asarray(st2.ef_residual), msg - local,
                                atol=1e-6)
-    assert int(st2.tier) == cfg.tier
+    assert int(st2.tier[0]) == cfg.tier
     # the sync round recorded the controller's signals
     assert (np.asarray(st2.msg_norm) > 0).all()
     assert (np.asarray(st2.resid_norm) > 0).all()

@@ -1,0 +1,144 @@
+"""Docs gate: intra-repo links resolve, fenced Python compiles, and every
+sync-related launcher flag is documented in exactly one cookbook page.
+
+Three checks over ``docs/*.md`` + the READMEs, cheapest first:
+
+- **Links**: every relative markdown link target (``[x](path)`` with no
+  scheme) must exist on disk, resolved against the linking file's
+  directory (``#anchors`` are stripped).  Dead intra-repo links are how
+  a docs suite rots silently.
+- **Snippets**: every fenced ```` ```python ```` block must *compile*
+  (``compile(src, ..., "exec")``) — no execution, so docs can show
+  snippets with side effects, but renamed APIs in illustrative code at
+  least fail on syntax and the snippet author is forced to keep them
+  plausible.  Import-level validity is the test suite's job, not the
+  docs gate's.
+- **Flag ownership**: each sync-related ``repro.launch.train`` flag must
+  appear in *exactly one* of ``docs/sync-tuning.md`` /
+  ``docs/control-loops.md`` (the acceptance rule for the operator docs:
+  one page owns each flag, no drift between the two), and every flag in
+  the list must still exist in ``launch/train.py`` (catches renames).
+
+Exit code 1 on any failure.  Run:  python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import List, Tuple
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.normpath(os.path.join(HERE, ".."))
+
+DOC_FILES = (
+    "README.md",
+    "benchmarks/README.md",
+    "ROADMAP.md",
+)
+
+# one cookbook page owns each sync-related launcher flag
+FLAG_PAGES = ("docs/sync-tuning.md", "docs/control-loops.md")
+SYNC_FLAGS = (
+    "--sync", "--interval", "--compress-topk", "--int8", "--value-dtype",
+    "--error-feedback", "--overlap-chunks", "--codec-block",
+    "--bucket-policy", "--bucket-override", "--adaptive-sync", "--ef-guard",
+    "--wan-trace", "--step-time",
+)
+LAUNCHER = "src/repro/launch/train.py"
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def _doc_paths() -> List[str]:
+    docs = [os.path.join("docs", f) for f in
+            sorted(os.listdir(os.path.join(ROOT, "docs")))
+            if f.endswith(".md")]
+    return docs + [f for f in DOC_FILES
+                   if os.path.exists(os.path.join(ROOT, f))]
+
+
+def check_links(errors: List[str]) -> int:
+    n = 0
+    for rel in _doc_paths():
+        base = os.path.dirname(os.path.join(ROOT, rel))
+        with open(os.path.join(ROOT, rel)) as f:
+            text = f.read()
+        for target in _LINK.findall(text):
+            if "://" in target or target.startswith(("mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            n += 1
+            if not os.path.exists(os.path.normpath(os.path.join(base, path))):
+                errors.append(f"{rel}: dead link -> {target}")
+    return n
+
+
+def _python_fences(rel: str) -> List[Tuple[int, str]]:
+    blocks, buf, lang, start = [], None, None, 0
+    with open(os.path.join(ROOT, rel)) as f:
+        for i, line in enumerate(f, 1):
+            m = _FENCE.match(line.strip())
+            if m and buf is None:
+                lang, buf, start = m.group(1).lower(), [], i
+            elif line.strip() == "```" and buf is not None:
+                if lang == "python":
+                    blocks.append((start, "".join(buf)))
+                buf = lang = None
+            elif buf is not None:
+                buf.append(line)
+    return blocks
+
+
+def check_snippets(errors: List[str]) -> int:
+    n = 0
+    for rel in _doc_paths():
+        for lineno, src in _python_fences(rel):
+            n += 1
+            try:
+                compile(src, f"{rel}:{lineno}", "exec")
+            except SyntaxError as e:
+                errors.append(f"{rel}:{lineno}: python snippet does not "
+                              f"compile: {e}")
+    return n
+
+
+def check_flag_ownership(errors: List[str]) -> int:
+    with open(os.path.join(ROOT, LAUNCHER)) as f:
+        launcher_src = f.read()
+    pages = {}
+    for rel in FLAG_PAGES:
+        with open(os.path.join(ROOT, rel)) as f:
+            pages[rel] = f.read()
+    for flag in SYNC_FLAGS:
+        if f'"{flag}"' not in launcher_src:
+            errors.append(f"{LAUNCHER}: sync flag {flag} no longer exists "
+                          f"(update tools/check_docs.py SYNC_FLAGS)")
+            continue
+        owners = [rel for rel, text in pages.items() if flag in text]
+        if len(owners) != 1:
+            errors.append(
+                f"flag {flag} must appear in exactly one of {FLAG_PAGES}, "
+                f"found in {owners or 'none'}")
+    return len(SYNC_FLAGS)
+
+
+def main() -> int:
+    errors: List[str] = []
+    n_links = check_links(errors)
+    n_snips = check_snippets(errors)
+    n_flags = check_flag_ownership(errors)
+    print(f"docs-check: {len(_doc_paths())} files, {n_links} intra-repo "
+          f"links, {n_snips} python snippets, {n_flags} sync flags")
+    for e in errors:
+        print(f"[FAIL] {e}")
+    if not errors:
+        print("[PASS] docs are consistent")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
