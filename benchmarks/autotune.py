@@ -87,6 +87,26 @@ FEATURE_VOCAB = 5400             # Frappe-scale feature space (reference.py)
 TRACE_SEGMENTS = ((0.0, 100.0), (12.0, 0.5), (60.0, 60.0),
                   (90.0, 2.0), (130.0, 80.0))
 
+# measured-feedback scenario (the PR-5 transport seam): a SimTransport
+# bills each sync round with the simulator's transfer law on the SAME
+# trace, and the controller's ONLY bandwidth input is those billed times
+# (MeasuredWanProbe -> injected probe_est).  latency 0 keeps achieved ==
+# trace bandwidth at calm (a 50 ms latency would dominate the small
+# compressed payloads and bias the belief toward single-digit Mbps);
+# sigma 0.15 exercises the estimator's smoothing while inflating the
+# timeline by ~1% mean — the decision band absorbs it.
+MEASURED_WAN = dict(fluctuation=0.15, latency_s=0.0, seed=SEED)
+MEASURED_PROBE = dict(alpha=0.5, cliff_snap=4.0)   # MeasuredWanProbe knobs,
+#   recorded into the baseline so check_regression replays EXACTLY this
+#   probe (same discipline as the controller knobs)
+MEASURED_BAND = 0.15   # time-to-target band vs the trace-driven run
+
+# mesh overlap measurement: 4 virtual devices, 8 chunks, a 1 Mbps emulated
+# WAN hop sized so per-chunk transfer and per-chunk encode are comparable
+# (that is the regime where pipelining pays; see
+# MeshTransport.measure_overlap)
+MESH_OVERLAP = dict(n_pods=4, n_elems=1 << 21, emulate_mbps=1.0, chunks=8)
+
 
 def _trace():
     from repro.core.wan import BandwidthTrace
@@ -112,6 +132,7 @@ def _make_trainer(sync, model: str = "lenet"):
 
 
 def run_variant(sync, *, adaptive: bool = False, bucketed: bool = False,
+                measured: bool = False,
                 model: str = "lenet", target_loss: float = TARGET_LOSS,
                 tuner_kw: Optional[Dict] = None) -> Dict:
     """One emulated-timeline training run; returns the measured trajectory.
@@ -121,11 +142,24 @@ def run_variant(sync, *, adaptive: bool = False, bucketed: bool = False,
     ``Trainer.retune`` — the exact production path of ``launch.train
     --adaptive-sync``.  ``bucketed=True`` attaches the per-bucket
     BucketedSyncController instead (``--bucket-policy layer-class``) and
-    records per-bucket signals/decisions for the replay gate."""
+    records per-bucket signals/decisions for the replay gate.
+
+    ``measured=True`` (the transport-seam scenario, implies the adaptive
+    controller): the SAME fluctuating trace drives a ``SimTransport`` —
+    and **nothing else**.  The controller never sees the trace: its only
+    bandwidth input is the transport-billed transfer time of each sync
+    round, folded through ``MeasuredWanProbe`` into the injected
+    ``probe_est`` (the exact production path of ``launch.train
+    --transport sim --adaptive-sync``).  Observability is therefore
+    sync-cadence-bound — a link crash is discovered by *paying one
+    transfer on it* — which is the honest cost of measured feedback that
+    the trace-driven variant's every-step probing hides."""
     from repro.core.autotune import (AdaptiveSyncController, BucketStats,
                                      BucketedSyncController,
                                      bucket_stats_from_sync_state)
     from repro.core.sync import bucket_weights_of, is_sync_step
+    from repro.core.transport import MeasuredWanProbe, SimTransport
+    from repro.core.wan import WANConfig
     from repro.training.trainer import stack_pod_batches
 
     trace = _trace()
@@ -134,8 +168,18 @@ def run_variant(sync, *, adaptive: bool = False, bucketed: bool = False,
     weights = (bucket_weights_of(sync, state.params)
                if sync.bucket_policy != "single" else None)
     tuner = None
+    transport = None
     kw = tuner_kw if tuner_kw is not None else TUNER_KW
-    if bucketed:
+    if measured:
+        transport = SimTransport(
+            trace, WANConfig(bandwidth_mbps=trace.mbps[0], **MEASURED_WAN),
+            probe=MeasuredWanProbe(**MEASURED_PROBE))
+        tuner = AdaptiveSyncController(
+            sync, MODEL_MB, COMPUTE_STEP_S,
+            probe_est=transport.probe.estimator, **kw)
+        # NO observe_wan: the belief starts empty and fills from billed
+        # transfers only
+    elif bucketed:
         bucket_mb = {n: w * MODEL_MB for n, w in weights.items()}
         tuner = BucketedSyncController(sync, bucket_mb, COMPUTE_STEP_S, **kw)
         tuner.observe_wan(trace.at(0.0))
@@ -152,27 +196,36 @@ def run_variant(sync, *, adaptive: bool = False, bucketed: bool = False,
     time_to_target: Optional[float] = None
     stats = BucketStats(0.0, 0.0)       # no reading before the first sync
     bstats: Dict[str, BucketStats] = {}
+    pending_transfer: Optional[List[float]] = None   # [mb, s] since last step
 
     for step in range(STEPS):
         # the WAN monitor probes every step (out-of-band, like the bus's
         # bandwidth_changed events) and the controller decides at the TOP
         # of the step — reaction latency must NOT be coupled to the sync
         # cadence, or a crashed link is discovered only by paying one full
-        # transfer at the stale config
+        # transfer at the stale config.  (In measured mode there IS no
+        # out-of-band monitor: the probe advanced when the last sync's
+        # transfer was billed, below.)
         bw = trace.at(sim_t)
         if tuner is not None:
-            tuner.observe_wan(bw)
             # full-precision norms, NOT a rounded ratio: the replay gate
             # reconstructs BucketStats from these, and both the
             # "no reading yet" state (msg_norm 0) and the controllers'
             # consume-once staleness check (value equality of consecutive
             # readings) must survive the JSON round trip exactly
-            if bucketed:
+            if measured:
+                signals.append([round(sim_t, 3), pending_transfer,
+                                stats.msg_norm, stats.resid_norm])
+                pending_transfer = None
+                upd = tuner.update(step, stats)
+            elif bucketed:
+                tuner.observe_wan(bw)
                 signals.append([round(sim_t, 3), bw,
                                 {n: [s.msg_norm, s.resid_norm]
                                  for n, s in bstats.items()}])
                 upd = tuner.update(step, bstats)
             else:
+                tuner.observe_wan(bw)
                 signals.append([round(sim_t, 3), bw,
                                 stats.msg_norm, stats.resid_norm])
                 upd = tuner.update(step, stats)
@@ -200,10 +253,19 @@ def run_variant(sync, *, adaptive: bool = False, bucketed: bool = False,
         sim_t += COMPUTE_STEP_S
 
         if is_sync_step(trainer.cfg.sync, step):
-            bw = trace.at(sim_t)            # achieved bandwidth this round
             payload = trainer.cfg.sync.payload_mb(MODEL_MB,
                                                   bucket_weights=weights)
-            sim_t += payload * 8.0 / bw * (1.0 - OVERLAP)
+            if measured:
+                # the transport bills this round at its sim clock (the
+                # same trace), records the transfer, and feeds the probe —
+                # the ONLY bandwidth signal the controller ever gets
+                transport.clock_s = sim_t
+                t = transport.on_sync({"all": payload}, step=step)
+                pending_transfer = [payload, t]
+                sim_t += t * (1.0 - OVERLAP)
+            else:
+                bw = trace.at(sim_t)        # achieved bandwidth this round
+                sim_t += payload * 8.0 / bw * (1.0 - OVERLAP)
             traffic_mb += payload * trainer.cfg.n_pods
             state = trainer._sync_step(state)
             stats = BucketStats.from_sync_state(state.sync_state)
@@ -312,6 +374,52 @@ def bench_bucketed() -> Dict:
     return out
 
 
+def _mesh_overlap_here() -> Dict:
+    """The measurement itself — requires >= 4 devices in THIS process."""
+    from repro.core.sync import SyncConfig
+    from repro.core.transport import MeshTransport
+
+    cfg = SyncConfig("asgd_ga", 4, compress_topk=0.05, quantize_int8=True,
+                     error_feedback=True,
+                     overlap_chunks=MESH_OVERLAP["chunks"])
+    mesh = MeshTransport(emulate_mbps=MESH_OVERLAP["emulate_mbps"])
+    return mesh.measure_overlap(cfg, n_pods=MESH_OVERLAP["n_pods"],
+                                n_elems=MESH_OVERLAP["n_elems"], reps=2)
+
+
+def bench_mesh_overlap() -> Dict:
+    """Measured overlap_chunks pipelining on a >= 4-virtual-device mesh.
+
+    Multi-device CPU needs ``XLA_FLAGS=--xla_force_host_platform_device_
+    count=4`` *before jax initializes* — and forcing it on the whole bench
+    would perturb the training numerics every other scenario's baseline
+    was recorded under (multi-device XLA compiles the same program
+    slightly differently).  So when this process has one device, the
+    measurement runs in a subprocess with the flag set; the rest of the
+    bench stays on the single-device numerics CI replays."""
+    import jax
+
+    if jax.device_count() >= 4:
+        return _mesh_overlap_here()
+    import subprocess
+    import sys
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(HERE, "..", "src"),
+                    os.environ.get("PYTHONPATH", "")]).rstrip(os.pathsep))
+    try:
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.autotune", "--mesh-overlap"],
+            env=env, cwd=os.path.join(HERE, ".."), capture_output=True,
+            text=True, timeout=600, check=True)
+        return json.loads(out.stdout.strip().splitlines()[-1])
+    except (subprocess.SubprocessError, json.JSONDecodeError, OSError,
+            IndexError) as e:   # IndexError: empty stdout on a 0 exit
+        return {"skipped": f"4-device subprocess failed: {e}"}
+
+
 def bench_autotune() -> Dict:
     from repro.core.sync import SyncConfig
 
@@ -346,6 +454,32 @@ def bench_autotune() -> Dict:
         round(reached[best_static] / t_adapt, 3)
         if best_static and t_adapt else None)
 
+    # measured-feedback scenario: same controller knobs, same link, but
+    # the ONLY bandwidth input is transport-billed transfer times
+    report["measured"] = {
+        "wan": dict(MEASURED_WAN),
+        "probe": dict(MEASURED_PROBE),
+        "band": MEASURED_BAND,
+        "variant": run_variant(base, measured=True),
+    }
+    m = report["measured"]["variant"]
+    report["measured"]["trace_adaptive_s"] = t_adapt
+    report["measured"]["measured_s"] = m["time_to_target_s"]
+    # measured feedback is sync-cadence-bound: a bandwidth cliff is
+    # discovered only by PAYING one transfer on it (the trace-driven
+    # baseline probes every step and reacts before paying).  The decision
+    # band therefore grants exactly that structural cost — one worst-case
+    # stale transfer: the base config's payload at the trace's trough —
+    # on top of the ordinary percentage band.  Anything beyond it would
+    # mean the control law (not the observability) degraded.
+    trough = min(bw for _, bw in TRACE_SEGMENTS)
+    allowance = base.payload_mb(MODEL_MB) * 8.0 / trough * (1.0 - OVERLAP)
+    report["measured"]["stale_transfer_allowance_s"] = round(allowance, 2)
+    report["measured"]["bound_s"] = (
+        round((1.0 + MEASURED_BAND) * t_adapt + allowance, 2)
+        if t_adapt is not None else None)
+    report["mesh_overlap"] = bench_mesh_overlap()
+
     report["bucketed"] = bench_bucketed()
     b = report["bucketed"]
     sv, bv = b["variants"]["single"], b["variants"]["bucketed"]
@@ -363,7 +497,20 @@ def bench_autotune() -> Dict:
         "bucketed_ef_guard_never_violated":
             bv["max_ef_ratio"] <= EF_GUARD
             and sv["max_ef_ratio"] <= EF_GUARD,
+        # the transport-seam acceptance: measured transfer times alone
+        # land the autotuner within the decision band of the trace-driven
+        # run on the same fluctuating link, guard clean
+        "measured_converges_within_band":
+            bool(m["time_to_target_s"] is not None
+                 and report["measured"]["bound_s"] is not None
+                 and m["time_to_target_s"]
+                 <= report["measured"]["bound_s"]),
+        "measured_ef_guard_never_violated":
+            m["max_ef_ratio"] <= EF_GUARD,
     }
+    if "overlap_speedup" in report["mesh_overlap"]:
+        report["acceptance"]["mesh_overlap_speedup_measured"] = \
+            report["mesh_overlap"]["overlap_speedup"] > 1.0
     os.makedirs(OUT_DIR, exist_ok=True)
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=1)
@@ -383,6 +530,23 @@ def _print_report(r: Dict) -> None:
           f"{a['final_config']}")
     print(f"speedup vs best static ({r['best_static']}): "
           f"{r['speedup_vs_best_static']}x")
+    m = r["measured"]["variant"]
+    print(f"\nmeasured-feedback (no trace wired to the controller): "
+          f"t_target {m['time_to_target_s']}s vs trace-driven "
+          f"{r['measured']['trace_adaptive_s']}s, bound "
+          f"{r['measured']['bound_s']}s (band {r['measured']['band']:.0%} "
+          f"+ one stale transfer "
+          f"{r['measured']['stale_transfer_allowance_s']}s), "
+          f"{m['n_retunes']} retunes, max_ef {m['max_ef_ratio']}, "
+          f"final {m['final_config']}")
+    mo = r["mesh_overlap"]
+    if "overlap_speedup" in mo:
+        print(f"mesh overlap ({mo['n_devices']} devices, {mo['chunks']} "
+              f"chunks @ {mo['emulate_mbps']} Mbps emulated): "
+              f"{mo['overlap_speedup']}x (serial {mo['t_serialized_s']}s "
+              f"-> pipelined {mo['t_pipelined_s']}s)")
+    else:
+        print(f"mesh overlap: {mo['skipped']}")
     b = r["bucketed"]
     print(f"\nbucketed scenario ({b['model']}, target "
           f"{b['target_loss']}): bucket_mb "
@@ -417,7 +581,17 @@ def main(argv: Sequence[str] = None) -> Dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--compare", nargs=2, metavar=("A", "B"),
                     help="diff two BENCH_autotune.json files instead")
+    ap.add_argument("--mesh-overlap", action="store_true",
+                    help="run ONLY the mesh overlap measurement and print "
+                         "its JSON (used by the 4-device subprocess hop)")
     args = ap.parse_args(argv)
+    if args.mesh_overlap:
+        import jax
+        rep = (_mesh_overlap_here() if jax.device_count() >= 4
+               else {"skipped": f"needs >= 4 devices, have "
+                                f"{jax.device_count()}"})
+        print(json.dumps(rep))
+        return rep
     if args.compare:
         _compare(*args.compare)
         return {}

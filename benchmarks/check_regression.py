@@ -102,22 +102,39 @@ def check_payload_math(gate: Gate, base: Dict) -> None:
 # ----------------------------------------------------------- replay checks
 
 
+def _tuner_parts(tuner_rec: Dict, base_sync: Dict, **sync_extra):
+    """Rebuild the exact (controller knobs, guard, base SyncConfig) a
+    baseline recorded — shared by all three replay gates so a change to
+    how the bench records its controller cannot drift between them.  The
+    baseline records the exact controller the bench ran; knobs are NOT
+    duplicated here, so retuning the bench without refreshing the
+    baseline fails loudly instead of replaying a different controller."""
+    from repro.core.sync import SyncConfig
+
+    knobs = dict(tuner_rec)
+    knobs.pop("base_sync", None)
+    knobs["topk_ladder"] = tuple(knobs["topk_ladder"])
+    sync = SyncConfig(base_sync["strategy"], base_sync["interval"],
+                      compress_topk=base_sync["compress_topk"],
+                      quantize_int8=True, error_feedback=True, **sync_extra)
+    return knobs, knobs["ef_guard"], sync
+
+
+def _check_decisions(gate: Gate, name: str, replayed, recorded) -> None:
+    gate.check(name, replayed == recorded,
+               f"{len(replayed)} replayed vs {len(recorded)} recorded"
+               + ("" if replayed == recorded
+                  else f"; first diff at "
+                       f"{next((i for i, (a, b) in enumerate(zip(replayed, recorded)) if a != b), min(len(replayed), len(recorded)))}"))
+
+
 def check_controller_replay(gate: Gate, base: Dict) -> None:
     from repro.core.autotune import AdaptiveSyncController, BucketStats
-    from repro.core.sync import SyncConfig
 
     adaptive = base["variants"]["adaptive"]
     scen = base["scenario"]
-    # the baseline records the exact controller the bench ran — knobs are
-    # NOT duplicated here, so retuning the bench without refreshing the
-    # baseline fails loudly instead of replaying a different controller
-    knobs = dict(scen["tuner"])
-    base_sync = knobs.pop("base_sync")
-    knobs["topk_ladder"] = tuple(knobs["topk_ladder"])
-    guard = knobs["ef_guard"]
-    sync = SyncConfig(base_sync["strategy"], base_sync["interval"],
-                      compress_topk=base_sync["compress_topk"],
-                      quantize_int8=True, error_feedback=True)
+    knobs, guard, sync = _tuner_parts(scen["tuner"],
+                                      scen["tuner"]["base_sync"])
     tuner = AdaptiveSyncController(
         sync, scen["model_mb"], scen["compute_step_s"], **knobs)
     tuner.observe_wan(scen["trace"][0][1])
@@ -134,15 +151,54 @@ def check_controller_replay(gate: Gate, base: Dict) -> None:
             replayed.append((step, upd.rung, upd.sync.interval, upd.reason))
     recorded = [(d["step"], d["rung"], d["interval"], d["reason"])
                 for d in adaptive["decisions"]]
-    gate.check("autotune.replay.decisions",
-               replayed == recorded,
-               f"{len(replayed)} replayed vs {len(recorded)} recorded"
-               + ("" if replayed == recorded
-                  else f"; first diff at "
-                       f"{next((i for i, (a, b) in enumerate(zip(replayed, recorded)) if a != b), min(len(replayed), len(recorded)))}"))
+    _check_decisions(gate, "autotune.replay.decisions", replayed, recorded)
     gate.check("autotune.replay.max_ef_ratio_under_guard",
                tuner.max_ef_ratio <= guard,
                f"replayed max {round(tuner.max_ef_ratio, 6)} vs guard {guard}")
+
+
+def check_measured_replay(gate: Gate, base: Dict) -> None:
+    """Replay the measured-feedback (transport-seam) scenario: the
+    recorded per-step (billed transfer, EF stats) stream through a fresh
+    MeasuredWanProbe + probe_est-injected AdaptiveSyncController must
+    reproduce the recorded decisions exactly — the controller's ONLY
+    bandwidth input is the transfer observations, so this pins the whole
+    measured data path (transfer time -> achieved mbps -> estimator ->
+    control law) deterministically."""
+    from repro.core.autotune import AdaptiveSyncController, BucketStats
+    from repro.core.transport import MeasuredWanProbe
+
+    scen = base["scenario"]
+    meas = base["measured"]
+    run = meas["variant"]
+    knobs, guard, sync = _tuner_parts(scen["tuner"],
+                                      scen["tuner"]["base_sync"])
+    probe = MeasuredWanProbe(**meas["probe"])
+    tuner = AdaptiveSyncController(
+        sync, scen["model_mb"], scen["compute_step_s"],
+        probe_est=probe.estimator, **knobs)
+    replayed = []
+    for step, (sim_t, transfer, msg_norm, resid_norm) in \
+            enumerate(run["signals"]):
+        if transfer is not None:
+            probe.observe_transfer(transfer[0], transfer[1])
+        upd = tuner.update(step, BucketStats(msg_norm=msg_norm,
+                                             resid_norm=resid_norm))
+        if upd is not None:
+            replayed.append((step, upd.rung, upd.sync.interval, upd.reason))
+    recorded = [(d["step"], d["rung"], d["interval"], d["reason"])
+                for d in run["decisions"]]
+    _check_decisions(gate, "autotune.measured_replay.decisions",
+                     replayed, recorded)
+    gate.check("autotune.measured_replay.guard",
+               tuner.max_ef_ratio <= guard,
+               f"replayed max {round(tuner.max_ef_ratio, 6)} vs guard "
+               f"{guard}")
+    gate.check("autotune.measured_replay.probe_fed_from_transfers_only",
+               probe.n_observations == sum(
+                   1 for s in run["signals"] if s[1] is not None)
+               and probe.n_observations > 0,
+               f"{probe.n_observations} transfer observations")
 
 
 def check_bucketed_replay(gate: Gate, base: Dict) -> None:
@@ -150,21 +206,15 @@ def check_bucketed_replay(gate: Gate, base: Dict) -> None:
     per-bucket signal stream through a fresh BucketedSyncController must
     reproduce every decision — rungs, interval and reasons — exactly."""
     from repro.core.autotune import BucketStats, BucketedSyncController
-    from repro.core.sync import SyncConfig
 
     scen = base["scenario"]
     bucketed = base["bucketed"]
     run = bucketed["variants"]["bucketed"]
     # the bucketed scenario records its own knob set (wider escalation
     # margin for the undiluted per-bucket ratios) — replay exactly those
-    knobs = dict(bucketed["tuner"])
-    base_sync = scen["tuner"]["base_sync"]
-    knobs["topk_ladder"] = tuple(knobs["topk_ladder"])
-    guard = knobs["ef_guard"]
-    sync = SyncConfig(base_sync["strategy"], base_sync["interval"],
-                      compress_topk=base_sync["compress_topk"],
-                      quantize_int8=True, error_feedback=True,
-                      bucket_policy="layer-class")
+    knobs, guard, sync = _tuner_parts(bucketed["tuner"],
+                                      scen["tuner"]["base_sync"],
+                                      bucket_policy="layer-class")
     tuner = BucketedSyncController(
         sync, bucketed["bucket_mb"], scen["compute_step_s"], **knobs)
     tuner.observe_wan(scen["trace"][0][1])
@@ -179,12 +229,8 @@ def check_bucketed_replay(gate: Gate, base: Dict) -> None:
                              upd.sync.interval, list(upd.reasons)))
     recorded = [(d["step"], d["rungs"], d["interval"], d["reasons"])
                 for d in run["decisions"]]
-    gate.check("autotune.bucketed_replay.decisions",
-               replayed == recorded,
-               f"{len(replayed)} replayed vs {len(recorded)} recorded"
-               + ("" if replayed == recorded
-                  else f"; first diff at "
-                       f"{next((i for i, (a, b) in enumerate(zip(replayed, recorded)) if a != b), min(len(replayed), len(recorded)))}"))
+    _check_decisions(gate, "autotune.bucketed_replay.decisions",
+                     replayed, recorded)
     gate.check("autotune.bucketed_replay.guard_on_every_bucket",
                all(r <= guard
                    for r in tuner.max_ef_ratio_by_bucket.values()),
@@ -266,6 +312,7 @@ def main(argv: Sequence[str] = None) -> int:
     check_acceptance_flags(gate, baselines)
     check_payload_math(gate, baselines["wan_codec"])
     check_controller_replay(gate, baselines["autotune"])
+    check_measured_replay(gate, baselines["autotune"])
     check_bucketed_replay(gate, baselines["autotune"])
     check_elasticity_sim(gate, baselines["elasticity"])
     check_encode_speedup(gate, baselines["wan_codec"])

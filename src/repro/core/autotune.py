@@ -15,8 +15,12 @@ calls for ("per-bucket adaptive compress_topk from gradient statistics"):
   WanProbe (achieved bandwidth   by wire bytes) under a        residual carries
   EMA + fluctuation, from the    user-set convergence guard,   over — dense
   simulator / --wan-trace /      and sizes ``interval`` so     bucket coords
-  EventBus bandwidth_changed)    per-step blocking comm        are tier-free)
-                                 stays on target
+  EventBus bandwidth_changed —   per-step blocking comm        are tier-free)
+  or, in measured mode, from     stays on target
+  transport-reported transfer
+  times via repro.core.transport
+  .MeasuredWanProbe feeding an
+  injected ``probe_est``)
 
 Control law (deterministic, hysteresis-damped):
 
@@ -579,6 +583,7 @@ class BucketedSyncController:
                  hysteresis: int = 2, probe_alpha: float = 0.5,
                  trend_window: int = 4, trend_rise: float = 0.02,
                  cliff_snap: float = 4.0,
+                 probe_est: Optional[WanProbeEstimator] = None,
                  bus=None):
         if base_sync.bucket_policy != "layer-class":
             raise ValueError(
@@ -625,8 +630,14 @@ class BucketedSyncController:
             raise ValueError("bucket_mb holds no positive-size bucket group")
 
         self.interval = base_sync.interval
-        self._probe_est = WanProbeEstimator(alpha=probe_alpha,
-                                            cliff_snap=cliff_snap)
+        # an injected estimator (probe_est) is how measured-feedback mode
+        # works: a transport's MeasuredWanProbe owns the estimator and
+        # feeds it achieved-bandwidth samples derived from transfer times,
+        # and this controller just reads the shared belief — no trace, no
+        # bus events, same control law (mirrors AdaptiveSyncController)
+        self._probe_est = (probe_est if probe_est is not None
+                           else WanProbeEstimator(alpha=probe_alpha,
+                                                  cliff_snap=cliff_snap))
         self._pressure_streak = 0
         self._calm_streak = 0
         self.decisions: List[BucketPlanUpdate] = []

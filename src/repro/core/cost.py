@@ -88,6 +88,10 @@ def bucket_payload_table(cfg: SyncConfig, bucket_mb: Mapping[str, float]
             "model_mb": round(mb, 4),
             "compress_topk": eff.compress_topk,
             "tier": CODEC_TIERS[eff.tier],
+            # the per-bucket block override changes the wire bytes (one
+            # fp32 scale per block — the 1/block payload term), so the
+            # price list shows it next to the payload it produced
+            "codec_block": eff.codec_block,
             "payload_mb": round(payload, 6),
             "reduction_vs_dense": round(mb / payload, 2) if payload else 0.0,
         }

@@ -120,7 +120,14 @@ class BucketSpec:
     per-pod tensors (biases, norm scales, per-feature vectors) go to
     ``vector_bucket``, everything else to ``fallback``.  The default
     patterns are the same path vocabulary ``sharding/rules.py`` keys its
-    logical axes on (vocab/embed, experts/router, heads/d_ff dense)."""
+    logical axes on (vocab/embed, experts/router, heads/d_ff dense).
+
+    The table is user-definable: a ``SyncConfig`` carries its spec
+    (``bucket_spec``), the launcher parses one from ``--bucket-patterns``
+    (:meth:`parse`), and every downstream consumer — layout, validation,
+    per-bucket knobs, the adaptive controllers — follows the spec's
+    ``names``.  The spec is frozen/hashable so it rides inside the
+    jit-static ``SyncConfig`` without disturbing the compiled-sync cache."""
 
     names: Tuple[str, ...] = BUCKET_CLASSES
     patterns: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
@@ -132,6 +139,25 @@ class BucketSpec:
     vector_bucket: str = "norm"
     fallback: str = "dense"
 
+    def __post_init__(self):
+        if not self.names or len(set(self.names)) != len(self.names):
+            raise ValueError("bucket spec needs non-empty, unique names, "
+                             f"got {self.names}")
+        for name, subs in self.patterns:
+            if name not in self.names:
+                raise ValueError(
+                    f"bucket spec pattern group {name!r} is not one of its "
+                    f"names {self.names}")
+            if not subs:
+                raise ValueError(f"bucket spec group {name!r} has an empty "
+                                 f"pattern list")
+        for role, name in (("vector_bucket", self.vector_bucket),
+                           ("fallback", self.fallback)):
+            if name not in self.names:
+                raise ValueError(
+                    f"bucket spec {role} {name!r} is not one of its names "
+                    f"{self.names}")
+
     def classify(self, path: str, inner_ndim: int) -> str:
         """Bucket name for one leaf (``inner_ndim`` excludes the pod dim)."""
         low = path.lower()
@@ -140,8 +166,98 @@ class BucketSpec:
                 return name
         return self.vector_bucket if inner_ndim <= 1 else self.fallback
 
+    @classmethod
+    def parse(cls, spec: str) -> "BucketSpec":
+        """Build a spec from the launcher's ``--bucket-patterns`` string.
+
+        Named presets: ``default`` (the four-class table) and
+        ``moe-router`` (:data:`MOE_ROUTER_BUCKET_SPEC` — routers split out
+        of the expert group).  Otherwise, semicolon-separated
+        ``name=sub1|sub2`` pattern groups in precedence order, plus the
+        optional directives ``vector=name`` / ``fallback=name`` (defaults:
+        ``norm`` / ``dense`` if those names exist, else the last group /
+        the first pattern-less group)::
+
+            router=router;moe=moe|expert;embed=embed|vocab;norm=norm|bias;dense=
+
+        Groups may be declared pattern-less (``dense=``) just to exist as
+        a fallback target."""
+        key = spec.strip().lower()
+        if key in ("", "default"):
+            return DEFAULT_BUCKET_SPEC
+        if key == "moe-router":
+            return MOE_ROUTER_BUCKET_SPEC
+        names: list = []
+        patterns: list = []
+        vector = fallback = None
+        for entry in spec.split(";"):
+            entry = entry.strip()
+            if not entry:
+                continue
+            name, eq, subs = entry.partition("=")
+            name = name.strip()
+            if not eq:
+                raise ValueError(
+                    f"--bucket-patterns entry {entry!r} is not "
+                    f"'name=sub1|sub2' (or 'vector=name'/'fallback=name')")
+            if name == "vector":
+                vector = subs.strip()
+                continue
+            if name == "fallback":
+                fallback = subs.strip()
+                continue
+            if name not in names:
+                names.append(name)
+            pats = tuple(s.strip().lower() for s in subs.split("|")
+                         if s.strip())
+            if pats:
+                patterns.append((name, pats))
+        if not names:
+            raise ValueError(f"--bucket-patterns {spec!r} defines no bucket "
+                             f"groups")
+        for role, target in (("vector", vector), ("fallback", fallback)):
+            if target is not None and target not in names:
+                # refusing (not creating) catches a typoed group name —
+                # a phantom group would silently swallow every fallthrough
+                # leaf while the declared group stays empty
+                raise ValueError(
+                    f"--bucket-patterns {role}={target!r} names an "
+                    f"undeclared bucket group (declared: {tuple(names)}); "
+                    f"declare it, e.g. '{target}='")
+        vector = vector or ("norm" if "norm" in names else names[-1])
+        # fallback default: 'dense' if declared, else the first
+        # pattern-LESS group (declaring 'name=' with no patterns is the
+        # documented way to create a catch-all), else the last group —
+        # NEVER the first: groups are listed most-specific-first, and a
+        # fallback into the most specific group would silently give every
+        # unmatched dense matrix e.g. router-grade treatment
+        if fallback is None:
+            pattern_names = {n for n, _ in patterns}
+            patternless = [n for n in names if n not in pattern_names]
+            fallback = ("dense" if "dense" in names
+                        else (patternless[0] if patternless else names[-1]))
+        return cls(names=tuple(names), patterns=tuple(patterns),
+                   vector_bucket=vector, fallback=fallback)
+
 
 DEFAULT_BUCKET_SPEC = BucketSpec()
+
+# the MoE recipe's spec: routers in their OWN group instead of riding the
+# expert group.  Router gradients are dense and convergence-critical (they
+# steer token routing; quantization error there mis-routes tokens), while
+# expert blocks see token-routed sparsity that tolerates aggressive top-k —
+# one (top-k, dtype) rung cannot serve both, which is why this table exists.
+# Precedence: router patterns FIRST, so ``moe/router`` no longer falls to
+# the ``moe`` group's broader patterns.
+MOE_ROUTER_BUCKET_SPEC = BucketSpec(
+    names=("embed", "norm", "dense", "moe", "router"),
+    patterns=(
+        ("router", ("router", "gating")),
+        ("moe", ("moe", "expert")),
+        ("embed", ("embed", "emb", "vocab", "wte", "wpe", "lm_head",
+                   "tok_", "token")),
+        ("norm", ("norm", "ln1", "ln2", "rms", "bias", "scale")),
+    ))
 
 
 @dataclass(frozen=True)
@@ -178,11 +294,14 @@ class BucketLayout:
 
 
 def bucket_layout(cfg: "SyncConfig", stacked_tree: Pytree,
-                  spec: BucketSpec = DEFAULT_BUCKET_SPEC) -> BucketLayout:
+                  spec: Optional[BucketSpec] = None) -> BucketLayout:
     """Partition ``stacked_tree`` (leading pod dim) per ``cfg.bucket_policy``.
 
-    Host-side and shape-only: safe to call while tracing (it runs once per
-    compile inside the jitted sync step)."""
+    The pattern table defaults to the config's own ``bucket_spec`` (which
+    the launcher's ``--bucket-patterns`` sets).  Host-side and shape-only:
+    safe to call while tracing (it runs once per compile inside the jitted
+    sync step)."""
+    spec = spec if spec is not None else cfg.bucket_spec
     flat, _ = jax.tree_util.tree_flatten_with_path(stacked_tree)
     leaf_sizes = tuple(int(np_prod(x.shape[1:])) for _, x in flat)
     if cfg.bucket_policy == "single":
@@ -206,7 +325,7 @@ def bucket_layout(cfg: "SyncConfig", stacked_tree: Pytree,
 
 
 def bucket_weights_of(cfg: "SyncConfig", stacked_tree: Pytree,
-                      spec: BucketSpec = DEFAULT_BUCKET_SPEC
+                      spec: Optional[BucketSpec] = None
                       ) -> Dict[str, float]:
     """Fraction of model elements per bucket group (sums to 1.0) — the
     weights :meth:`SyncConfig.payload_mb` uses for per-bucket accounting."""
@@ -218,11 +337,18 @@ def bucket_weights_of(cfg: "SyncConfig", stacked_tree: Pytree,
 @dataclass(frozen=True)
 class BucketOverride:
     """Per-bucket codec knobs; ``None`` inherits the global SyncConfig
-    value.  Carried in ``SyncConfig.buckets`` (hashable, jit-static)."""
+    value.  Carried in ``SyncConfig.buckets`` (hashable, jit-static).
+
+    ``codec_block`` tunes the block-local top-k granularity per bucket:
+    embedding-class gradients are token-sparse (their mass clusters, so a
+    *small* block keeps selection local and the per-block scale tight)
+    while the dense bulk amortizes better under large blocks (fewer fp32
+    scales on the wire — the ``1/block`` payload term)."""
 
     name: str
     compress_topk: Optional[float] = None
     value_dtype: Optional[str] = None
+    codec_block: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -246,6 +372,10 @@ class SyncConfig:
     #   with its own (top-k, dtype) knobs and EF telemetry
     buckets: Tuple[BucketOverride, ...] = ()   # per-bucket knob overrides
     #   (layer-class only); unnamed buckets inherit the global knobs
+    bucket_spec: BucketSpec = DEFAULT_BUCKET_SPEC   # the layer-class
+    #   pattern table (user-definable via --bucket-patterns); frozen and
+    #   hashable, so it is part of the jit-static config like every other
+    #   codec knob
 
     def __post_init__(self):
         self._validate()
@@ -324,10 +454,10 @@ class SyncConfig:
         seen = set()
         for ov in self.buckets:
             where = f"bucket {ov.name!r}: "
-            if ov.name not in BUCKET_CLASSES:
+            if ov.name not in self.bucket_spec.names:
                 raise ValueError(
                     where + f"unknown bucket group; the layer-class groups "
-                    f"are {BUCKET_CLASSES}")
+                    f"are {self.bucket_spec.names}")
             if ov.name in seen:
                 raise ValueError(where + "duplicate override — each bucket "
                                          "group may be overridden once")
@@ -343,30 +473,40 @@ class SyncConfig:
                 raise ValueError(
                     where + f"unknown value_dtype {ov.value_dtype!r}: the "
                     f"codec's payload tiers are {VALUE_DTYPES}")
+            if ov.codec_block is not None and \
+                    not 128 <= ov.codec_block <= (1 << 16):
+                raise ValueError(
+                    where + f"codec_block must be in [128, 65536] (local "
+                    f"indices ship as u16), got {ov.codec_block}")
 
     # ------------------------------------------------------ bucket groups
     @property
     def bucket_names(self) -> Tuple[str, ...]:
         """Bucket group names in segment order (one unnamed group when the
         policy is ``"single"``)."""
-        return ("all",) if self.bucket_policy == "single" else BUCKET_CLASSES
+        return (("all",) if self.bucket_policy == "single"
+                else self.bucket_spec.names)
 
-    def bucket_knobs(self, name: str) -> Tuple[float, str]:
-        """Effective (compress_topk, value_dtype) for one bucket group."""
+    def bucket_knobs(self, name: str) -> Tuple[float, str, int]:
+        """Effective (compress_topk, value_dtype, codec_block) for one
+        bucket group."""
         for ov in self.buckets:
             if ov.name == name:
                 return (ov.compress_topk if ov.compress_topk is not None
                         else self.compress_topk,
                         ov.value_dtype if ov.value_dtype is not None
-                        else self.value_dtype)
-        return self.compress_topk, self.value_dtype
+                        else self.value_dtype,
+                        ov.codec_block if ov.codec_block is not None
+                        else self.codec_block)
+        return self.compress_topk, self.value_dtype, self.codec_block
 
     def for_bucket(self, name: str) -> "SyncConfig":
         """The effective single-bucket config governing one group's segment
         — what the codec dispatch and the payload math run with."""
-        frac, dtype = self.bucket_knobs(name)
+        frac, dtype, block = self.bucket_knobs(name)
         return _dc_replace(self, compress_topk=frac, value_dtype=dtype,
-                           bucket_policy="single", buckets=())
+                           codec_block=block, bucket_policy="single",
+                           buckets=())
 
     @property
     def bucket_tiers(self) -> Tuple[int, ...]:
@@ -547,88 +687,202 @@ def _unpack_stacked(flat: jnp.ndarray, like: Pytree,
     return jax.tree.unflatten(treedef, out)
 
 
-def _codec_ship_flat(cfg: SyncConfig, flat: jnp.ndarray,
-                     want_local: bool) -> Tuple[jnp.ndarray,
-                                                Optional[jnp.ndarray]]:
-    """Encode -> ring-permute the compact payload -> decode, chunk-pipelined.
+class ChunkPayload(NamedTuple):
+    """One overlap chunk's compact wire triple — exactly what crosses the
+    pod axis: quantized values (tier dtype; int4 already nibble-packed),
+    u16 block-local indices, and per-block fp32 scales."""
 
-    ``flat``: (n_pods, N).  Returns (peer dense, local dense or None); the
-    local decode is what this pod's peer will reconstruct — needed for the
-    error-feedback residual.
+    q: jnp.ndarray
+    idx: jnp.ndarray       # uint16 on the wire (block-local, < 65536)
+    scales: jnp.ndarray
+
+
+class SyncPayloads(NamedTuple):
+    """Output of the codec's *decide/pack* stage (jit-transparent pytree):
+    the dense pre-compression message, its local reconstruction (what this
+    pod's peer will decode — needed for the EF residual), and the
+    per-bucket wire chunks a :class:`~repro.core.transport.WanTransport`
+    ships.  Empty bucket groups are absent from ``chunks``."""
+
+    flat: jnp.ndarray                               # (n_pods, N) message
+    local: Optional[jnp.ndarray]                    # decode-at-sender (EF)
+    chunks: Dict[str, Tuple[ChunkPayload, ...]]     # non-empty buckets
+
+
+def _chunk_widths(cfg: SyncConfig, n_total: int) -> Tuple[int, ...]:
+    """Static per-chunk dense widths of one bucket segment.
 
     Chunks split on codec-block boundaries, so the chunked selection is
-    bit-identical to the unchunked one.  Within the trace, the permute of
-    chunk i has no data dependence on the encode of chunk i+1 — on a real
-    multi-pod mesh the XLA latency-hiding scheduler overlaps the WAN
-    transfer of one chunk with the compression of the next (and with the
-    tail of local compute), which is what ``SyncConfig.overlap_chunks``
-    models in the WAN simulator.
-    """
+    bit-identical to the unchunked one; host-side and shape-only, shared
+    by encode and decode so both sides agree without shipping widths."""
+    block = min(cfg.codec_block, max(1, n_total))
+    nb = -(-n_total // block)
+    n_chunks = max(1, min(cfg.overlap_chunks, nb))
+    step = -(-nb // n_chunks) * block
+    return tuple(min(step, n_total - lo) for lo in range(0, n_total, step))
+
+
+def _encode_bucket(cfg: SyncConfig, flat: jnp.ndarray, want_local: bool
+                   ) -> Tuple[Tuple[ChunkPayload, ...],
+                              Optional[jnp.ndarray]]:
+    """Encode one bucket segment into wire chunks (+ local reconstruction).
+
+    ``flat``: (n_pods, N_g).  One encode/decode pair is bound to this
+    bucket's (block, tier) knobs — the per-bucket codec dispatch point.
+    The permute of chunk i is data-independent of the encode of chunk i+1
+    (``SyncConfig.overlap_chunks``): on a real mesh the transfer of one
+    chunk hides behind the compression of the next, which is what
+    ``MeshTransport.measure_overlap`` measures and the WAN simulator
+    models."""
     from repro.kernels import ops as kops
     from repro.kernels.wan_codec import k_per_block
 
-    n_pods, n_total = flat.shape
+    n_total = flat.shape[1]
     block = min(cfg.codec_block, max(1, n_total))
     k_block = k_per_block(block, cfg.compress_topk)
-    # one encode/decode pair bound to this bucket's (block, tier) knobs —
-    # the per-bucket codec dispatch point (each bucket group of a
-    # layer-class config gets its own pair)
     encode, decode = kops.wan_codec_fns(block=block,
                                         value_dtype=cfg.value_dtype)
-    nb = -(-n_total // block)
-    n_chunks = max(1, min(cfg.overlap_chunks, nb))
-    blocks_per_chunk = -(-nb // n_chunks)
-    step = blocks_per_chunk * block
-
-    peer_parts, local_parts = [], []
-    for lo in range(0, n_total, step):
-        seg = flat[:, lo:lo + step]
-        m = seg.shape[1]
+    chunks, local_parts, off = [], [], 0
+    for m in _chunk_widths(cfg, n_total):
+        seg = flat[:, off:off + m]
+        off += m
         q, idx, scales = jax.vmap(lambda f: encode(f, k_block))(seg)
         if want_local:
             local_parts.append(jax.vmap(
                 lambda a, i, s: decode(a, i, s, m))(q, idx, scales))
-        # only the compact triple crosses the pod axis (collective-permute);
-        # indices travel as u16 — they are block-local (< codec_block <=
-        # 65536), and this is the wire format payload_mb bills for (the
-        # int4 tier's values are already nibble-packed bytes here)
-        q = jnp.roll(q, cfg.peer_shift, axis=0)
-        idx16 = jnp.roll(idx.astype(jnp.uint16), cfg.peer_shift, axis=0)
-        scales = jnp.roll(scales, cfg.peer_shift, axis=0)
-        peer_parts.append(jax.vmap(
-            lambda a, i, s: decode(a, i, s, m)
-        )(q, idx16.astype(jnp.int32), scales))
-    peer = jnp.concatenate(peer_parts, axis=1)
+        chunks.append(ChunkPayload(q=q, idx=idx.astype(jnp.uint16),
+                                   scales=scales))
     local = jnp.concatenate(local_parts, axis=1) if want_local else None
-    return peer, local
+    return tuple(chunks), local
 
 
-def _codec_ship_buckets(cfg: SyncConfig, flat: jnp.ndarray,
-                        layout: BucketLayout, want_local: bool
-                        ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
-    """Per-bucket encode -> ring -> decode over a bucket-grouped buffer.
+def _decode_bucket(cfg: SyncConfig, chunks: Sequence[ChunkPayload],
+                   n_total: int) -> jnp.ndarray:
+    """Decode one bucket's (shipped) wire chunks back to dense."""
+    from repro.kernels import ops as kops
 
-    Each bucket group's contiguous segment runs :func:`_codec_ship_flat`
-    under its *own* effective config (top-k fraction, payload tier) — the
-    layer-class partition's whole point: aggressive compression where the
-    gradient statistics make it free, conservative where it hurts.  Empty
-    groups (a model family without that layer class) pass through."""
-    peer_parts, local_parts = [], []
+    block = min(cfg.codec_block, max(1, n_total))
+    _, decode = kops.wan_codec_fns(block=block, value_dtype=cfg.value_dtype)
+    parts = [jax.vmap(lambda a, i, s: decode(a, i, s, m))(
+        c.q, c.idx.astype(jnp.int32), c.scales)
+        for c, m in zip(chunks, _chunk_widths(cfg, n_total))]
+    return jnp.concatenate(parts, axis=1)
+
+
+class InlineRingShip:
+    """The default transport: ring-permute each wire part in place, traced
+    into the enclosing jit (-> one collective-permute per part under SPMD).
+    Real transports (:mod:`repro.core.transport`) implement the same
+    ``ship_bucket`` contract; this degenerate one is why ``transport=None``
+    is bit-identical to the pre-seam inline path."""
+
+    in_graph = True
+
+    def ship_bucket(self, name: str, chunks: Sequence[ChunkPayload],
+                    shift: int, payload_mb: float = 0.0
+                    ) -> Tuple[ChunkPayload, ...]:
+        del name, payload_mb
+        return tuple(ChunkPayload(*(jnp.roll(p, shift, axis=0) for p in c))
+                     for c in chunks)
+
+
+_INLINE_RING = InlineRingShip()
+
+
+def bucket_wire_mb(cfg: SyncConfig, layout: BucketLayout
+                   ) -> Dict[str, float]:
+    """Per-pod wire megabytes per non-empty bucket group for one sync round
+    (host-side, static) — what transports bill/record per transfer."""
+    return {name: cfg.for_bucket(name).payload_mb(
+        layout.sizes[g] * 4 / 1e6)
+        for g, name in enumerate(layout.names) if layout.sizes[g]}
+
+
+def prepare_codec_sync(cfg: SyncConfig, state: SyncState) -> SyncPayloads:
+    """The codec round's *decide/pack* stage (jit-able): average the
+    accumulated gradient, fold in the EF residual, pack the bucket-grouped
+    buffer and encode every non-empty bucket segment at its own (top-k,
+    tier, block) knobs.  What comes out is exactly what a transport ships —
+    ``apply_sync`` composes this with a ship and :func:`finish_codec_sync`,
+    and the trainer's host-seam path runs the three stages as separate
+    dispatches so a real transport can time each bucket's transfer."""
+    denom = jnp.maximum(state.steps_since_sync, 1).astype(jnp.float32)
+    avg = jax.tree.map(lambda b: b / denom, state.ga_buffer)
+    layout = bucket_layout(cfg, avg)
+    flat = _pack_stacked(avg, layout)
+    if cfg.error_feedback:
+        flat = flat + state.ef_residual
+    chunks: Dict[str, Tuple[ChunkPayload, ...]] = {}
+    local_parts = []
     for g, name in enumerate(layout.names):
         off, size = layout.offsets[g], layout.sizes[g]
-        seg = flat[:, off:off + size]
         if size == 0:
-            peer_parts.append(seg)
-            local_parts.append(seg)
             continue
-        p, l = _codec_ship_flat(cfg.for_bucket(name), seg,
-                                want_local=want_local)
-        peer_parts.append(p)
-        if want_local:
-            local_parts.append(l)
-    peer = jnp.concatenate(peer_parts, axis=1)
-    local = jnp.concatenate(local_parts, axis=1) if want_local else None
-    return peer, local
+        bchunks, local = _encode_bucket(cfg.for_bucket(name),
+                                        flat[:, off:off + size],
+                                        want_local=cfg.error_feedback)
+        chunks[name] = bchunks
+        if cfg.error_feedback:
+            local_parts.append(local)
+    local = (jnp.concatenate(local_parts, axis=1) if local_parts
+             else (flat[:, :0] if cfg.error_feedback else None))
+    return SyncPayloads(flat=flat, local=local, chunks=chunks)
+
+
+def ship_sync_payloads(cfg: SyncConfig,
+                       chunks: Mapping[str, Tuple[ChunkPayload, ...]],
+                       transport=None,
+                       wire_mb: Optional[Mapping[str, float]] = None
+                       ) -> Dict[str, Tuple[ChunkPayload, ...]]:
+    """Emit every bucket's wire chunks to the transport's one-peer ring
+    send.  ``transport=None`` is the in-graph inline ring (bit-exact
+    legacy path); a host-seam transport executes + times each bucket's
+    transfer here."""
+    ship = transport if transport is not None else _INLINE_RING
+    wire_mb = wire_mb or {}
+    return {name: ship.ship_bucket(name, bchunks, cfg.peer_shift,
+                                   wire_mb.get(name, 0.0))
+            for name, bchunks in chunks.items()}
+
+
+def finish_codec_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
+                      payloads: SyncPayloads,
+                      shipped: Mapping[str, Tuple[ChunkPayload, ...]],
+                      lr: Union[jnp.ndarray, float] = 1.0
+                      ) -> Tuple[Pytree, SyncState]:
+    """The codec round's tail (jit-able): decode the shipped chunks, apply
+    the receiver-side SGD update, and roll the EF residual + per-bucket
+    telemetry into the new :class:`SyncState`."""
+    layout = bucket_layout(cfg, state.ga_buffer)
+    peer_parts = []
+    for g, name in enumerate(layout.names):
+        size = layout.sizes[g]
+        if size == 0:
+            peer_parts.append(payloads.flat[:, :0])
+            continue
+        peer_parts.append(_decode_bucket(cfg.for_bucket(name),
+                                         shipped[name], size))
+    peer_flat = jnp.concatenate(peer_parts, axis=1)
+    peer = _unpack_stacked(peer_flat, state.ga_buffer, layout)
+    # per-pod, per-bucket message norms — with EF also the residual norms;
+    # their ratio is the convergence signal the adaptive controllers guard
+    # on (a bucket's residual growing toward its message norm means that
+    # bucket's tier is dropping more than EF can recover per interval)
+    msg_norm = _bucket_norms(payloads.flat, layout)
+    new_resid, resid_norm = state.ef_residual, state.resid_norm
+    if cfg.error_feedback:
+        new_resid = payloads.flat - payloads.local
+        resid_norm = _bucket_norms(new_resid, layout)
+    scale = jnp.asarray(lr, jnp.float32) * cfg.ga_lr_scale
+    params = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - scale * g).astype(p.dtype),
+        params, peer)
+    buf = jax.tree.map(jnp.zeros_like, state.ga_buffer)
+    zero = state._replace(steps_since_sync=jnp.zeros((), jnp.int32))
+    return params, zero._replace(ga_buffer=buf, ef_residual=new_resid,
+                                 tier=jnp.asarray(cfg.bucket_tiers,
+                                                  jnp.int32),
+                                 msg_norm=msg_norm, resid_norm=resid_norm)
 
 
 def _bucket_norms(flat: jnp.ndarray, layout: BucketLayout) -> jnp.ndarray:
@@ -676,12 +930,20 @@ def _ship_ring(cfg: SyncConfig, tree: Pytree) -> Pytree:
 
 
 def apply_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
-               lr: Union[jnp.ndarray, float] = 1.0
+               lr: Union[jnp.ndarray, float] = 1.0, transport=None
                ) -> Tuple[Pytree, SyncState]:
     """One inter-pod synchronization round (paper §III.C steps 3-5).
 
     ``params`` leaves have the leading pod dim.  ``lr`` drives the
-    receiver-side SGD update of ASGD-GA.
+    receiver-side SGD update of ASGD-GA.  On the codec path the round is
+    three stages — :func:`prepare_codec_sync` (decide/pack/encode),
+    :func:`ship_sync_payloads` (the transport seam), and
+    :func:`finish_codec_sync` (decode/update/EF) — and ``transport``
+    selects who ships: ``None`` means the in-graph inline ring (bit-exact
+    legacy behaviour, traceable); a host-seam transport
+    (:class:`~repro.core.transport.MeshTransport`) executes and times each
+    bucket's transfer, in which case this function must run OUTSIDE jit
+    (the trainer's split path jits the prepare/finish stages separately).
     """
     n_pods = jax.tree.leaves(params)[0].shape[0]
     zero = state._replace(steps_since_sync=jnp.zeros((), jnp.int32))
@@ -689,42 +951,27 @@ def apply_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
         return params, zero
 
     if cfg.strategy == "asgd_ga":
-        denom = jnp.maximum(state.steps_since_sync, 1).astype(jnp.float32)
-        avg = jax.tree.map(lambda b: b / denom, state.ga_buffer)
-        new_resid = state.ef_residual
-        msg_norm, resid_norm = state.msg_norm, state.resid_norm
         if cfg.uses_codec:
             # fused codec: bucket -> (+ EF residual) -> per-bucket top-k ->
-            # quantize -> ring -> decode; the residual keeps everything the
+            # quantize -> ship -> decode; the residual keeps everything the
             # codec dropped for re-injection at the next sync (EF-SGD)
-            layout = bucket_layout(cfg, avg)
-            flat = _pack_stacked(avg, layout)
-            if cfg.error_feedback:
-                flat = flat + state.ef_residual
-            peer_flat, local_flat = _codec_ship_buckets(
-                cfg, flat, layout, want_local=cfg.error_feedback)
-            peer = _unpack_stacked(peer_flat, avg, layout)
-            # per-pod, per-bucket message norms — with EF also the residual
-            # norms; their ratio is the convergence signal the adaptive
-            # controllers guard on (a bucket's residual growing toward its
-            # message norm means that bucket's tier is dropping more than
-            # EF can recover per interval)
-            msg_norm = _bucket_norms(flat, layout)
-            if cfg.error_feedback:
-                new_resid = flat - local_flat
-                resid_norm = _bucket_norms(new_resid, layout)
-        else:
-            peer = _ship_ring(cfg, avg)
+            payloads = prepare_codec_sync(cfg, state)
+            wire = bucket_wire_mb(cfg, bucket_layout(cfg, state.ga_buffer))
+            shipped = ship_sync_payloads(cfg, payloads.chunks, transport,
+                                         wire)
+            return finish_codec_sync(cfg, params, state, payloads, shipped,
+                                     lr)
+        denom = jnp.maximum(state.steps_since_sync, 1).astype(jnp.float32)
+        avg = jax.tree.map(lambda b: b / denom, state.ga_buffer)
+        peer = _ship_ring(cfg, avg)
         scale = jnp.asarray(lr, jnp.float32) * cfg.ga_lr_scale
         params = jax.tree.map(
             lambda p, g: (p.astype(jnp.float32) - scale * g).astype(p.dtype),
             params, peer)
         buf = jax.tree.map(jnp.zeros_like, state.ga_buffer)
-        return params, zero._replace(ga_buffer=buf, ef_residual=new_resid,
+        return params, zero._replace(ga_buffer=buf,
                                      tier=jnp.asarray(cfg.bucket_tiers,
-                                                      jnp.int32),
-                                     msg_norm=msg_norm,
-                                     resid_norm=resid_norm)
+                                                      jnp.int32))
 
     if cfg.strategy == "asp":
         # Gaia-style Approximate Synchronous Parallel: ship only parameter

@@ -1,0 +1,409 @@
+"""Pluggable WAN transport layer — one seam from sim to real mesh.
+
+The sync layer (``repro.core.sync``) produces *wire payloads* (per-bucket
+:class:`~repro.core.sync.ChunkPayload` triples) and consumes them back; who
+actually moves the bytes to the ring peer — and how long that took — is
+this module's job.  One protocol, three implementations:
+
+- the **inline ring** (``transport=None`` /
+  :class:`~repro.core.sync.InlineRingShip`): the ring permute traced
+  straight into the jitted sync step, exactly the pre-seam behaviour —
+  bit-exact legacy path, no timing.
+- :class:`SimTransport`: the same in-graph shipping, but every sync round
+  is *billed* against a :class:`~repro.core.wan.BandwidthTrace` +
+  :class:`~repro.core.wan.WANConfig` with the discrete-event simulator's
+  own ``transfer_time`` law (lognormal fluctuation, latency, seeded rng).
+  The billed transfer times feed a :class:`MeasuredWanProbe` — so the
+  adaptive controllers can be driven by *measured* transfer times on an
+  emulated link, with **no trace wired to the controller**.
+- :class:`MeshTransport`: real jitted collectives on a device mesh (on
+  CPU: ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` virtual
+  devices).  Each bucket's transfer is executed as its own dispatch and
+  timed **on-host** (``block_until_ready`` around the permute), and
+  :meth:`MeshTransport.measure_overlap` measures what
+  ``SyncConfig.overlap_chunks`` pipelining actually buys on the mesh —
+  the two oldest ROADMAP items ("feed the WAN probe from measured
+  transfer times", "measure overlap_chunks on a real mesh") both live
+  here.
+
+The measured-feedback data path::
+
+    transport.ship_bucket -> TransferRecord (wire MB, seconds)
+        -> transport.on_sync -> MeasuredWanProbe.observe_transfer
+        -> WanProbeEstimator (EMA + fluctuation + cliff-snap)
+        -> Adaptive/BucketedSyncController(probe_est=...)
+
+Layering: ``sync`` does not import this module (transports are duck-typed
+at the seam); this module sits above ``sync``/``wan``/``autotune`` and
+below ``training``/``launch``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.autotune import WanProbe, WanProbeEstimator
+from repro.core.sync import (_INLINE_RING, ChunkPayload, SyncConfig,
+                             _chunk_widths, _decode_bucket, _encode_bucket)
+from repro.core.wan import BandwidthTrace, WANConfig, transfer_time
+
+_EPS = 1e-9
+
+
+@dataclass
+class TransferRecord:
+    """One bucket's shipped transfer: wire bytes and how long they took.
+
+    ``seconds`` is measured wall-clock for :class:`MeshTransport` and the
+    simulator-billed time for :class:`SimTransport` — downstream consumers
+    (the probe, telemetry, benchmarks) cannot tell the difference, which
+    is the point of the seam."""
+
+    bucket: str
+    payload_mb: float
+    seconds: float
+    step: Optional[int] = None
+
+    @property
+    def mbps(self) -> float:
+        """Achieved bandwidth of this transfer (megabits/second)."""
+        return self.payload_mb * 8.0 / max(self.seconds, _EPS)
+
+
+class MeasuredWanProbe:
+    """Feeds a :class:`~repro.core.autotune.WanProbeEstimator` from
+    transport-reported transfer times instead of declared trace events.
+
+    One observation per sync round (the round's total wire MB over its
+    total seconds): achieved bandwidth = ``payload_mb * 8 / seconds``.
+    The estimator's cliff-snap still applies — one observation of a
+    collapsed link reprices the belief before the next transfer is paid.
+    Hand ``estimator`` to a controller's ``probe_est`` to close the loop
+    with no trace wired to the controller."""
+
+    def __init__(self, alpha: float = 0.5, cliff_snap: float = 4.0,
+                 estimator: Optional[WanProbeEstimator] = None):
+        self.estimator = (estimator if estimator is not None
+                          else WanProbeEstimator(alpha=alpha,
+                                                 cliff_snap=cliff_snap))
+        self.n_observations = 0
+        self.last_mbps: Optional[float] = None
+
+    def observe_transfer(self, payload_mb: float, seconds: float) -> WanProbe:
+        """Fold one (wire MB, seconds) sample into the bandwidth belief."""
+        mbps = payload_mb * 8.0 / max(seconds, _EPS)
+        self.last_mbps = mbps
+        self.n_observations += 1
+        return self.estimator.observe(mbps)
+
+    @property
+    def probe(self) -> WanProbe:
+        return self.estimator.probe
+
+
+class WanTransport:
+    """The transport protocol ``sync.ship_sync_payloads`` emits payloads to.
+
+    ``in_graph=True`` transports ship with traceable ops (the whole sync
+    round stays one jitted dispatch — the trainer's fast path);
+    ``in_graph=False`` transports require the trainer's host-seam path
+    (jitted prepare -> host-timed ship per bucket -> jitted finish).
+    ``on_sync`` is the round barrier: called host-side once per sync round
+    with the per-bucket wire MB, it bills (sim) or flushes (mesh) the
+    round's transfers into ``records`` and the probe, returning the
+    round's transfer seconds."""
+
+    in_graph: bool = True
+    probe: Optional[MeasuredWanProbe] = None
+
+    def __init__(self):
+        self.records: List[TransferRecord] = []
+
+    def ship_bucket(self, name: str, chunks: Sequence[ChunkPayload],
+                    shift: int, payload_mb: float = 0.0
+                    ) -> Tuple[ChunkPayload, ...]:
+        raise NotImplementedError
+
+    def on_sync(self, wire_mb: Mapping[str, float],
+                step: Optional[int] = None) -> float:
+        return 0.0
+
+
+class SimTransport(WanTransport):
+    """The WAN simulator rehosted behind the transport seam.
+
+    Shipping is the same traceable ring permute as the legacy inline path
+    (results are bit-exact); *billing* replays the discrete-event
+    simulator's transfer law: at each sync round the trace's bandwidth at
+    the transport's sim clock prices the round's total wire bytes through
+    ``wan.transfer_time`` (latency + lognormal fluctuation, seeded rng —
+    deterministic, so benchmark CI can replay the resulting decision
+    stream).  The caller owns the clock: ``tick(dt)`` advances it by
+    emulated compute time, ``on_sync`` bills at the current clock.
+    """
+
+    in_graph = True
+
+    def __init__(self, trace: BandwidthTrace,
+                 wan: Optional[WANConfig] = None,
+                 probe: Optional[MeasuredWanProbe] = None):
+        super().__init__()
+        self.trace = trace
+        self.wan = wan if wan is not None else WANConfig()
+        self.probe = probe
+        self.clock_s = 0.0
+        self._rng = np.random.default_rng(self.wan.seed)
+
+    def tick(self, dt_s: float) -> None:
+        """Advance the sim clock by ``dt_s`` emulated seconds."""
+        self.clock_s += dt_s
+
+    def ship_bucket(self, name: str, chunks: Sequence[ChunkPayload],
+                    shift: int, payload_mb: float = 0.0
+                    ) -> Tuple[ChunkPayload, ...]:
+        # traceable (may run at jit-trace time, once per compile) — billing
+        # therefore lives in on_sync, where sizes are static host values.
+        # Delegating to the inline ring is the bit-exactness guarantee:
+        # sim ships THE code path the legacy jit traces, not a copy of it.
+        return _INLINE_RING.ship_bucket(name, chunks, shift, payload_mb)
+
+    def on_sync(self, wire_mb: Mapping[str, float],
+                step: Optional[int] = None) -> float:
+        """Bill one sync round: one ``transfer_time`` draw on the round's
+        total payload (exactly the simulator's law), split across buckets
+        proportionally for the per-bucket records."""
+        bw = self.trace.at(self.clock_s)
+        total = sum(wire_mb.values())
+        if total <= 0.0:
+            return 0.0
+        t = transfer_time(total, bw, self.wan, self._rng)
+        for name, mb in wire_mb.items():
+            self.records.append(TransferRecord(
+                bucket=name, payload_mb=mb, seconds=t * mb / total,
+                step=step))
+        if self.probe is not None:
+            self.probe.observe_transfer(total, t)
+        return t
+
+
+class MeshTransport(WanTransport):
+    """Real jitted collectives on a device mesh, timed on-host.
+
+    Payload parts are placed sharded over a ``pod`` mesh axis (one pod per
+    device when ``jax.device_count() >= n_pods`` — on CPU, force virtual
+    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    *before* importing jax), so the ring permute lowers to a real
+    cross-device collective-permute.  Each bucket's transfer runs as its
+    own dispatch with ``block_until_ready`` around it and the wall-clock
+    goes into a :class:`TransferRecord` — the measured feedback the
+    adaptive controllers consume via :class:`MeasuredWanProbe`.
+
+    ``in_graph=False``: the trainer's host-seam sync path (jitted prepare
+    -> this ship -> jitted finish) is required; shipping inside one big
+    jit would erase the on-host timing boundary.
+    """
+
+    in_graph = False
+
+    def __init__(self, probe: Optional[MeasuredWanProbe] = None,
+                 devices: Optional[Sequence] = None,
+                 emulate_mbps: Optional[float] = None):
+        super().__init__()
+        self.probe = probe
+        self._devices = devices
+        # a local mesh has no WAN between its (virtual) devices — transfers
+        # complete at memory-fabric speed.  ``emulate_mbps`` adds a real
+        # wall-clock hop (sleep of payload_mb*8/mbps) after each shipped
+        # bucket, so measured transfer times — and everything downstream:
+        # the probe, the controllers, the overlap measurement — are
+        # WAN-scale.  ``None`` reports the raw mesh fabric.
+        self.emulate_mbps = emulate_mbps
+        self._round: List[TransferRecord] = []
+        self._roll = jax.jit(jnp.roll, static_argnames=("shift", "axis"))
+
+    # ------------------------------------------------------------ placement
+    def sharding(self, n_pods: int):
+        """Pod-sharded placement when the mesh has enough devices, else
+        ``None`` (single-device arrays; the permute is then a local roll —
+        same numerics, no cross-device traffic to time)."""
+        devs = list(self._devices if self._devices is not None
+                    else jax.devices())
+        if len(devs) < n_pods:
+            return None
+        mesh = jax.sharding.Mesh(np.array(devs[:n_pods]), ("pod",))
+        return jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec("pod"))
+
+    @property
+    def sharded(self) -> bool:
+        return self.sharding(2) is not None
+
+    def _place(self, chunks: Sequence[ChunkPayload]
+               ) -> List[ChunkPayload]:
+        sh = self.sharding(chunks[0].q.shape[0])
+        if sh is None:
+            return list(chunks)
+        return [ChunkPayload(*(jax.device_put(p, sh) for p in c))
+                for c in chunks]
+
+    # -------------------------------------------------------------- shipping
+    def ship_bucket(self, name: str, chunks: Sequence[ChunkPayload],
+                    shift: int, payload_mb: float = 0.0
+                    ) -> Tuple[ChunkPayload, ...]:
+        placed = self._place(chunks)
+        jax.block_until_ready(placed)   # placement is not transfer time
+        t0 = time.perf_counter()
+        out = tuple(ChunkPayload(*(self._roll(p, shift=shift, axis=0)
+                                   for p in c)) for c in placed)
+        jax.block_until_ready(out)
+        if self.emulate_mbps:
+            time.sleep(payload_mb * 8.0 / self.emulate_mbps)
+        rec = TransferRecord(bucket=name, payload_mb=payload_mb,
+                             seconds=time.perf_counter() - t0)
+        self.records.append(rec)
+        self._round.append(rec)
+        return out
+
+    def on_sync(self, wire_mb: Mapping[str, float],
+                step: Optional[int] = None) -> float:
+        """Round barrier: flush this round's measured transfers into the
+        probe (one aggregate observation — total wire MB over total
+        measured seconds)."""
+        del wire_mb
+        if not self._round:
+            return 0.0
+        mb = sum(r.payload_mb for r in self._round)
+        secs = sum(r.seconds for r in self._round)
+        for r in self._round:
+            r.step = step
+        self._round = []
+        if self.probe is not None and mb > 0.0:
+            self.probe.observe_transfer(mb, secs)
+        return secs
+
+    # ------------------------------------------------- overlap measurement
+    def measure_overlap(self, cfg: SyncConfig, n_pods: int, n_elems: int,
+                        *, seed: int = 0, reps: int = 3) -> Dict:
+        """Measure what ``overlap_chunks`` pipelining actually buys on this
+        mesh — the realized version of the WAN simulator's
+        ``1/overlap_chunks`` blocking model.
+
+        Two schedules over the *same* chunk boundaries and codec knobs,
+        each wall-clock timed end to end (best of ``reps`` after a
+        compile/warmup pass):
+
+        - **serialized** — encode chunk i on the mesh, then ship it
+          (permute + the emulated WAN hop when ``emulate_mbps`` is set)
+          to completion, then encode chunk i+1: transfer and compression
+          never coexist.  This is what a transport without the chunk seam
+          pays.
+        - **pipelined** — the permute of chunk i is data-independent of
+          the encode of chunk i+1 (``SyncConfig.overlap_chunks``'s whole
+          premise), so chunk i's transfer runs on a background thread
+          while the mesh encodes chunk i+1; only the final chunk's
+          transfer tail stays unhidden.
+
+        Decodes run after all transfers in both schedules (receiver-side
+        work, identical cost) and both schedules produce the same decoded
+        buffer.  With ``emulate_mbps=None`` the transfer is the raw mesh
+        fabric permute — on CPU virtual devices that is microseconds, so
+        the speedup degenerates to ~1; set an emulated WAN bandwidth to
+        measure the regime the paper's link actually lives in."""
+        if not cfg.uses_codec:
+            raise ValueError("measure_overlap times the codec path: cfg "
+                             "must have the fused codec enabled "
+                             "(asgd_ga + compress_topk + quantize_int8)")
+        import threading
+
+        rng = np.random.default_rng(seed)
+        flat = jnp.asarray(rng.normal(size=(n_pods, n_elems)), jnp.float32)
+        sh = self.sharding(n_pods)
+        if sh is not None:
+            flat = jax.device_put(flat, sh)
+        shift = cfg.peer_shift
+        widths = _chunk_widths(cfg, n_elems)
+        chunk_mb = [cfg.payload_mb(4 * m / 1e6) for m in widths]
+
+        import dataclasses
+        one = dataclasses.replace(cfg, overlap_chunks=1)
+        # one jitted encode serves every width (jit caches per input
+        # shape); decode is genuinely width-specialized (n_total is a
+        # static argument of the reconstruction)
+        enc = jax.jit(lambda seg: _encode_bucket(one, seg,
+                                                 want_local=False)[0])
+        dec_fns = {m: jax.jit(
+            lambda ch, _m=m: _decode_bucket(one, ch, _m))
+            for m in set(widths)}
+        offs = [sum(widths[:i]) for i in range(len(widths))]
+        # pre-slice the chunk segments OUTSIDE the timed region (identical
+        # cost to both schedules; on a sharded buffer an eager slice is
+        # itself a collective program)
+        segs = [flat[:, off:off + m] for m, off in zip(widths, offs)]
+        jax.block_until_ready(segs)
+
+        # CONCURRENCY CONTRACT: every XLA program — encode, permute,
+        # decode — is dispatched from THIS thread, so each device's queue
+        # sees collectives in one total order (two threads racing
+        # collective dispatches can rendezvous-deadlock XLA:CPU).  Worker
+        # threads only *wait* for the shipped chunk and pay the emulated
+        # WAN hop; that wait+hop is what overlaps the next chunk's encode.
+        def run(pipelined: bool) -> Tuple[float, jnp.ndarray]:
+            shipped: List = [None] * len(widths)
+            prev: Optional[threading.Thread] = None
+            t0 = time.perf_counter()
+            for i, m in enumerate(widths):
+                ch = enc(segs[i])
+                out = tuple(ChunkPayload(*(self._roll(p, shift=shift,
+                                                      axis=0)
+                                           for p in c)) for c in ch)
+                shipped[i] = out
+
+                def hop(out=out, mb=chunk_mb[i]):
+                    jax.block_until_ready(out)
+                    if self.emulate_mbps:
+                        time.sleep(mb * 8.0 / self.emulate_mbps)
+
+                if pipelined:
+                    if prev is not None:
+                        prev.join()  # ONE link: transfers serialize among
+                        #   themselves; only encode overlaps them
+                    prev = threading.Thread(target=hop)
+                    prev.start()     # transfer overlaps the next encode
+                else:
+                    hop()            # transfer to completion, then encode
+            if prev is not None:
+                prev.join()
+            parts = [dec_fns[m](shipped[i])
+                     for i, m in enumerate(widths)]
+            out = jnp.concatenate(parts, axis=1)
+            jax.block_until_ready(out)
+            return time.perf_counter() - t0, out
+
+        def timeit(pipelined: bool) -> Tuple[float, jnp.ndarray]:
+            _, out = run(pipelined)   # warmup / compile
+            best = float("inf")
+            for _ in range(reps):
+                dt, out = run(pipelined)
+                best = min(best, dt)
+            return best, out
+
+        t_serial, out_serial = timeit(pipelined=False)
+        t_pipe, out_pipe = timeit(pipelined=True)
+        assert np.array_equal(np.asarray(out_serial), np.asarray(out_pipe))
+        return {
+            "n_devices": jax.device_count(),
+            "sharded": sh is not None,
+            "n_pods": n_pods,
+            "n_elems": n_elems,
+            "chunks": len(widths),
+            "emulate_mbps": self.emulate_mbps,
+            "wire_mb": round(sum(chunk_mb), 4),
+            "t_pipelined_s": round(t_pipe, 6),
+            "t_serialized_s": round(t_serial, 6),
+            "overlap_speedup": round(t_serial / max(t_pipe, _EPS), 3),
+        }

@@ -187,10 +187,19 @@ class SimResult:
 
 def _transfer_time(size_mb: float, bandwidth_mbps: float, wan: WANConfig,
                    rng: np.random.Generator) -> float:
+    """One WAN transfer's wall-clock: bytes/bandwidth + latency, inflated
+    by a lognormal fluctuation draw.  This is the simulator's *only*
+    notion of transfer physics, shared verbatim by
+    ``repro.core.transport.SimTransport`` (the simulator rehosted behind
+    the transport seam) so sim-billed and DES-billed times agree."""
     base = size_mb * 8.0 / bandwidth_mbps + wan.latency_s
     if wan.fluctuation > 0:
         base *= float(rng.lognormal(mean=0.0, sigma=wan.fluctuation))
     return base
+
+
+#: public alias — the transport layer bills with the simulator's law
+transfer_time = _transfer_time
 
 
 def _schedule(sync: SyncConfig, model_mb: float, wan: WANConfig):
@@ -199,7 +208,7 @@ def _schedule(sync: SyncConfig, model_mb: float, wan: WANConfig):
         payload *= wan.baseline_roundtrip   # PS push + pull every iteration
     sync_every = 1 if sync.strategy == "asgd" else sync.interval
     # codec chunk-pipelining factor, capped at the number of codec blocks
-    # exactly like the real path (sync._codec_ship_flat): a model smaller
+    # exactly like the real path (sync._chunk_widths): a model smaller
     # than overlap_chunks blocks cannot pipeline more than nb ways
     chunks = 1
     if sync.uses_codec:

@@ -43,9 +43,12 @@ from repro.core.control_plane import (CloudEvent, ElasticityController,
                                       TrainingRequest, build_training_plan)
 from repro.core.scheduler import CloudResources, diff_plans
 from repro.core.sync import (BUCKET_CLASSES, BUCKET_POLICIES, VALUE_DTYPES,
-                             BucketOverride, SyncConfig, bucket_weights_of,
-                             is_sync_step, traffic_per_step_mb)
-from repro.core.wan import BandwidthTrace
+                             BucketOverride, BucketSpec, SyncConfig,
+                             bucket_weights_of, is_sync_step,
+                             traffic_per_step_mb)
+from repro.core.transport import (MeasuredWanProbe, MeshTransport,
+                                  SimTransport)
+from repro.core.wan import BandwidthTrace, WANConfig
 from repro.data.pipeline import TokenStream
 from repro.models.registry import get_model_fns
 from repro.training.trainer import Trainer, TrainerConfig, apply_reconfig
@@ -121,8 +124,9 @@ def parse_bucket_overrides(spec: str) -> tuple:
     """Parse ``--bucket-override`` into :class:`BucketOverride` entries.
 
     Comma-separated per-bucket entries, colon-separated ``key=value``
-    knobs:  ``embed:topk=0.02:dtype=int4,norm:dtype=int8``.
-    Keys: ``topk`` (compress fraction) and ``dtype`` (codec tier)."""
+    knobs:  ``embed:topk=0.02:dtype=int4:block=1024,norm:dtype=int8``.
+    Keys: ``topk`` (compress fraction), ``dtype`` (codec tier) and
+    ``block`` (per-bucket top-k block size)."""
     out = []
     if not spec:
         return ()
@@ -137,12 +141,63 @@ def parse_bucket_overrides(spec: str) -> tuple:
                 kw["compress_topk"] = float(v)
             elif k == "dtype":
                 kw["value_dtype"] = v
+            elif k == "block":
+                kw["codec_block"] = int(v)
             else:
                 raise ValueError(
                     f"bucket {name!r}: unknown override key {k!r} in "
-                    f"{entry!r} (keys: topk, dtype)")
+                    f"{entry!r} (keys: topk, dtype, block)")
         out.append(BucketOverride(name=name, **kw))
     return tuple(out)
+
+
+def parse_transport(spec: str, trace: Optional[BandwidthTrace],
+                    sync_cfg: SyncConfig):
+    """Parse ``--transport`` into a WAN transport (or ``None`` = inline).
+
+    Forms: ``inline`` (legacy in-jit ring, no timing), ``sim`` /
+    ``sim:fluct=0.2,latency=0.05,seed=3`` (trace-driven billing — needs
+    ``--wan-trace``), ``mesh`` / ``mesh:mbps=5`` (host-timed collectives
+    on the device mesh; ``mbps`` adds an emulated WAN hop so measured
+    times are WAN-scale).  Sim and mesh both feed a
+    :class:`~repro.core.transport.MeasuredWanProbe` — under
+    ``--adaptive-sync`` the controller then runs from measured transfer
+    times only, with no trace wired to it."""
+    kind, _, rest = spec.partition(":")
+    known = {"sim": ("fluct", "latency", "seed"), "mesh": ("mbps",),
+             "inline": (), "": ()}
+    if kind not in known:
+        raise ValueError(f"unknown --transport {spec!r} (inline, sim, mesh)")
+    kw = {}
+    for part in rest.split(","):
+        if part:
+            k, _, v = part.partition("=")
+            k = k.strip()
+            if k not in known.get(kind, ()):
+                raise ValueError(
+                    f"--transport {kind}: unknown option {k!r} in {spec!r} "
+                    f"(options: {known.get(kind, ())}) — a dropped knob "
+                    f"would run with its default silently")
+            kw[k] = float(v)
+    if kind in ("", "inline"):
+        return None
+    if kind == "sim":
+        if trace is None:
+            raise ValueError("--transport sim needs --wan-trace: the sim "
+                             "transport bills transfers against a "
+                             "bandwidth trace")
+        wan = WANConfig(bandwidth_mbps=trace.mbps[0],
+                        fluctuation=kw.get("fluct", 0.25),
+                        latency_s=kw.get("latency", 0.05),
+                        seed=int(kw.get("seed", 0)))
+        return SimTransport(trace, wan, probe=MeasuredWanProbe())
+    # kind == "mesh" (kind membership was validated above)
+    if not sync_cfg.uses_codec:
+        raise ValueError(
+            "--transport mesh requires the fused codec (the host-seam "
+            "ship times codec payloads): add --compress-topk F --int8")
+    return MeshTransport(probe=MeasuredWanProbe(),
+                         emulate_mbps=kw.get("mbps"))
 
 
 def preset_100m():
@@ -201,8 +256,14 @@ def main(argv=None):
     ap.add_argument("--bucket-override", default="",
                     help="per-bucket knob overrides (with --bucket-policy "
                          "layer-class), e.g. "
-                         "'embed:topk=0.02:dtype=int4,norm:dtype=int8'; "
-                         "unnamed groups inherit the global knobs")
+                         "'embed:topk=0.02:dtype=int4:block=1024,"
+                         "norm:dtype=int8'; unnamed groups inherit the "
+                         "global knobs")
+    ap.add_argument("--bucket-patterns", default="default",
+                    help="layer-class pattern table: 'default' (four-class),"
+                         " 'moe-router' (routers get their own group), or a"
+                         " custom 'name=sub1|sub2;...' table "
+                         "(see BucketSpec.parse)")
     ap.add_argument("--optimizer", default="sgd")
     ap.add_argument("--lr", type=float, default=0.02)
     ap.add_argument("--data-ratio", default="1:1",
@@ -230,6 +291,15 @@ def main(argv=None):
     ap.add_argument("--ef-guard", type=float, default=0.9,
                     help="adaptive sync: EF-residual ratio bound the "
                          "controller must never trade away")
+    ap.add_argument("--transport", default="inline",
+                    help="who ships sync payloads: 'inline' (legacy in-jit "
+                         "ring), 'sim[:fluct=F,latency=L,seed=S]' (billed "
+                         "against --wan-trace; feeds the measured probe), "
+                         "'mesh[:mbps=B]' (host-timed collectives on the "
+                         "device mesh, optional emulated WAN hop).  With "
+                         "--adaptive-sync + sim/mesh the controller runs "
+                         "from measured transfer times only — no trace is "
+                         "wired to it")
     args = ap.parse_args(argv)
 
     # ----------------------------------------------------------- model
@@ -252,6 +322,12 @@ def main(argv=None):
         CloudResources(region=f"pod{i}", devices=(("v5e", 4),),
                        data_size=ratio[i])
         for i in range(args.pods))
+    bucket_spec = BucketSpec.parse(args.bucket_patterns)
+    if args.bucket_policy == "single" and \
+            args.bucket_patterns.strip().lower() not in ("", "default"):
+        raise SystemExit(
+            "--bucket-patterns is inert without --bucket-policy "
+            "layer-class: the single policy packs one unnamed bucket")
     sync_cfg = SyncConfig(args.sync, args.interval,
                           compress_topk=args.compress_topk,
                           quantize_int8=args.int8,
@@ -260,7 +336,8 @@ def main(argv=None):
                           codec_block=args.codec_block,
                           overlap_chunks=args.overlap_chunks,
                           bucket_policy=args.bucket_policy,
-                          buckets=parse_bucket_overrides(args.bucket_override))
+                          buckets=parse_bucket_overrides(args.bucket_override),
+                          bucket_spec=bucket_spec)
     request = TrainingRequest(model=name, clouds=clouds, sync=sync_cfg,
                               n_iters=args.steps, global_batch=args.batch)
     plan = build_training_plan(request)
@@ -295,10 +372,18 @@ def main(argv=None):
     batches = make_batches(plan)
 
     # ---------------------------------------------------------- trainer
+    trace = parse_wan_trace(args.wan_trace, args.steps, args.step_time)
+    transport = parse_transport(args.transport, trace, sync_cfg)
+    if transport is not None:
+        print(f"[transport] {args.transport}: "
+              f"{type(transport).__name__}"
+              + (f", {jax.device_count()} devices"
+                 if isinstance(transport, MeshTransport) else ""))
     tcfg = TrainerConfig(n_pods=args.pods, optimizer=args.optimizer,
                          lr=args.lr, sync=sync_cfg)
     trainer = Trainer(lambda p, b: fns.loss_fn(p, cfg, b),
-                      lambda k: fns.init_params(k, cfg), tcfg)
+                      lambda k: fns.init_params(k, cfg), tcfg,
+                      transport=transport)
     state = trainer.init_state(jax.random.key(0))
     n_params = sum(x.size for x in jax.tree.leaves(state.params)) // args.pods
     model_mb = sum(x.size * x.dtype.itemsize
@@ -320,8 +405,8 @@ def main(argv=None):
                      for n in sync_cfg.bucket_names if bweights.get(n, 0) > 0}
             print(f"[train] bucket groups: "
                   + ", ".join(f"{n} {bweights[n] * model_mb:.1f} MB "
-                              f"(topk {f}, {d})"
-                              for n, (f, d) in knobs.items()))
+                              f"(topk {f}, {d}, block {blk})"
+                              for n, (f, d, blk) in knobs.items()))
 
     # -------------------------------------------------------- elasticity
     # one control plane: the EventBus carries bandwidth/cloud churn to BOTH
@@ -330,18 +415,22 @@ def main(argv=None):
     bus = EventBus()
     events = parse_events(args.events)
     controller = ElasticityController(plan, bus=bus) if events else None
-    trace = parse_wan_trace(args.wan_trace, args.steps, args.step_time)
     tuner = None
+    # measured mode: the transport's probe owns the bandwidth belief —
+    # the controller reads it and nothing else (no trace, no bus events)
+    measured = transport is not None and transport.probe is not None
     if args.adaptive_sync:
         if not (sync_cfg.uses_codec and sync_cfg.error_feedback):
             raise SystemExit(
                 "--adaptive-sync requires the fused codec with error "
                 "feedback: add --compress-topk F --int8 --error-feedback")
+        probe_kw = (dict(probe_est=transport.probe.estimator, bus=None)
+                    if measured else dict(bus=bus))
         if sync_cfg.bucket_policy == "layer-class":
             bucket_mb = {n: w * model_mb for n, w in bweights.items()}
             tuner = BucketedSyncController(
                 sync_cfg, bucket_mb, args.step_time, ef_guard=args.ef_guard,
-                bus=bus)
+                **probe_kw)
             print(f"[autotune] per-bucket rungs: "
                   + ", ".join(f"{n} ({b.model_mb:.1f} MB, "
                               f"{len(b.ladder)} rungs)"
@@ -351,11 +440,14 @@ def main(argv=None):
         else:
             tuner = AdaptiveSyncController(
                 sync_cfg, model_mb, args.step_time, ef_guard=args.ef_guard,
-                bus=bus)
+                **probe_kw)
             print(f"[autotune] ladder: "
                   f"{[f'{c.value_dtype}@{c.compress_topk}' for c in tuner.ladder]}"
                   f", ef_guard {args.ef_guard}, budget {tuner.interval_budget}")
-        if trace is not None:
+        if measured:
+            print("[autotune] probe: measured transfer times from the "
+                  "transport (no trace wired to the controller)")
+        elif trace is not None:
             tuner.observe_wan(trace.at(0.0))
     last_bw = trace.at(0.0) if trace is not None else None
     # several events may fire between two barriers: the reconfig applied at
@@ -421,6 +513,10 @@ def main(argv=None):
         state, metrics = trainer.train_step(state, batches(step))
         state = trainer.maybe_sync(state, step, model_mb)
         losses.append(float(metrics["loss"]))
+        if transport is not None and hasattr(transport, "tick"):
+            # the sim transport's clock advances by emulated compute time;
+            # its sync-round billing (and the measured probe) read it
+            transport.tick(args.step_time)
 
         # control-plane events fire now; the reconfiguration they produce is
         # applied at the next sync barrier via checkpointed pod re-stacking
@@ -489,15 +585,23 @@ def main(argv=None):
         "final_value_dtype": trainer.cfg.sync.value_dtype,
         "bucket_policy": args.bucket_policy,
         "final_buckets": {
-            n: {"compress_topk": f, "value_dtype": d}
+            n: {"compress_topk": f, "value_dtype": d, "codec_block": blk}
             for n in trainer.cfg.sync.bucket_names
-            for f, d in [trainer.cfg.sync.bucket_knobs(n)]
+            for f, d, blk in [trainer.cfg.sync.bucket_knobs(n)]
         } if args.bucket_policy != "single" else None,
         "max_ef_ratio": round(tuner.max_ef_ratio, 4) if tuner else None,
         "max_ef_ratio_by_bucket": (
             {n: round(r, 4)
              for n, r in tuner.max_ef_ratio_by_bucket.items()}
             if isinstance(tuner, BucketedSyncController) else None),
+        "transport": args.transport,
+        "transfers": len(transport.records) if transport else None,
+        "measured_bandwidth_mbps": (
+            round(transport.probe.estimator.bandwidth_mbps, 3)
+            if transport is not None and transport.probe is not None
+            and transport.probe.estimator.bandwidth_mbps is not None
+            else None),
+        "bucket_patterns": args.bucket_patterns,
         "wall_s": round(time.time() - t0, 1),
     }
     print(json.dumps(summary, indent=1))

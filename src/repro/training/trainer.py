@@ -29,10 +29,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sync import (SyncConfig, SyncState, apply_sync,
-                             bucket_weights_of, grow_pods, init_sync_state,
-                             is_sync_step, on_step_gradients,
+                             bucket_layout, bucket_weights_of,
+                             bucket_wire_mb, finish_codec_sync, grow_pods,
+                             init_sync_state, is_sync_step,
+                             on_step_gradients, prepare_codec_sync,
                              resize_sync_state, retune_sync_state,
-                             shrink_pods, traffic_per_step_mb)
+                             ship_sync_payloads, shrink_pods,
+                             traffic_per_step_mb)
 from repro.optim.optimizers import (Optimizer, clip_by_global_norm,
                                     constant_schedule, get_optimizer,
                                     global_norm)
@@ -66,23 +69,43 @@ class TrainerConfig:
 
 class Trainer:
     def __init__(self, loss_fn: Callable, init_fn: Callable,
-                 cfg: TrainerConfig):
+                 cfg: TrainerConfig, transport=None):
         """loss_fn(params, batch) -> (loss, metrics dict);
-        init_fn(key) -> params (single-pod, unstacked)."""
+        init_fn(key) -> params (single-pod, unstacked).
+
+        ``transport`` selects who ships sync payloads
+        (:mod:`repro.core.transport`): ``None`` keeps the legacy inline
+        ring traced into the jitted sync step (bit-exact).  An in-graph
+        transport (``SimTransport``) also ships inside that one jit and is
+        billed host-side at the round barrier; a host-seam transport
+        (``MeshTransport``) switches the codec sync to the split path —
+        jitted prepare, host-timed per-bucket ship, jitted finish — so
+        each bucket's transfer time is measured on-host."""
         self.loss_fn = loss_fn
         self.init_fn = init_fn
         self.cfg = cfg
+        self.transport = transport
+        self._host_seam = (transport is not None
+                           and not getattr(transport, "in_graph", True))
         self.optimizer = cfg.make_optimizer()
         self.schedule = cfg.make_schedule()
         self._train_step = jax.jit(self._train_step_impl)
         self._sync_step = jax.jit(self._sync_step_impl)
+        self._prepare_sync = jax.jit(self._prepare_sync_impl)
+        self._finish_sync = jax.jit(self._finish_sync_impl)
         # compiled-sync-step cache across retunes, keyed by the codec
         # shape of the config (interval is host-side scheduling only and
         # never forces a re-jit); carried from trainer to trainer so an
-        # adaptive controller revisiting a rung reuses the old executable
+        # adaptive controller revisiting a rung reuses the old executable.
+        # The host-seam split path caches its (prepare, finish) pair under
+        # the same key discipline.
         self._sync_cache: Dict[SyncConfig, Any] = {self._sync_key(cfg.sync):
                                                    self._sync_step}
+        self._split_cache: Dict[SyncConfig, Any] = {
+            self._sync_key(cfg.sync): (self._prepare_sync,
+                                       self._finish_sync)}
         self._bucket_weights: Optional[Dict[str, float]] = None
+        self._wire_mb: Optional[Dict[str, float]] = None
         self.traffic_mb = 0.0
 
     @staticmethod
@@ -151,9 +174,45 @@ class Trainer:
 
     def _sync_step_impl(self, state: TrainState) -> TrainState:
         lr = self.schedule(state.step)
+        transport = (self.transport if (self.transport is not None
+                                        and self.transport.in_graph)
+                     else None)
         params, sync_state = apply_sync(self.cfg.sync, state.params,
-                                        state.sync_state, lr)
+                                        state.sync_state, lr,
+                                        transport=transport)
         return state._replace(params=params, sync_state=sync_state)
+
+    # ------------------------------------------ host-seam (split) sync path
+    def _prepare_sync_impl(self, state: TrainState):
+        return prepare_codec_sync(self.cfg.sync, state.sync_state)
+
+    def _finish_sync_impl(self, state: TrainState, payloads, shipped
+                          ) -> TrainState:
+        lr = self.schedule(state.step)
+        params, sync_state = finish_codec_sync(
+            self.cfg.sync, state.params, state.sync_state, payloads,
+            shipped, lr)
+        return state._replace(params=params, sync_state=sync_state)
+
+    def wire_mb(self, state: TrainState) -> Dict[str, float]:
+        """Per-bucket per-pod wire MB of one sync round (memoized per
+        config; shape-only host arithmetic) — what transports bill."""
+        if self._wire_mb is None:
+            layout = bucket_layout(self.cfg.sync,
+                                   state.sync_state.ga_buffer)
+            self._wire_mb = bucket_wire_mb(self.cfg.sync, layout)
+        return self._wire_mb
+
+    def _host_sync(self, state: TrainState) -> TrainState:
+        """Codec sync as three dispatches with the transport at the seam:
+        the ship runs host-side so the transport can execute and time each
+        bucket's transfer (the measured feedback MeshTransport reports).
+        Numerically identical to the monolithic jitted sync step — the
+        three stages are the same functions apply_sync composes."""
+        payloads = self._prepare_sync(state)
+        shipped = ship_sync_payloads(self.cfg.sync, payloads.chunks,
+                                     self.transport, self.wire_mb(state))
+        return self._finish_sync(state, payloads, shipped)
 
     def train_step(self, state, batch):
         return self._train_step(state, batch)
@@ -172,7 +231,8 @@ class Trainer:
         new_cfg = dataclasses.replace(self.cfg, n_pods=n_pods,
                                       sync=sync or self.cfg.sync)
         new_state = resize_train_state(new_cfg.sync, state, n_pods, keep=keep)
-        trainer = Trainer(self.loss_fn, self.init_fn, new_cfg)
+        trainer = Trainer(self.loss_fn, self.init_fn, new_cfg,
+                          transport=self.transport)
         trainer.traffic_mb = self.traffic_mb
         return trainer, new_state
 
@@ -188,22 +248,31 @@ class Trainer:
         new_cfg = dataclasses.replace(self.cfg, sync=sync)
         sync_state = retune_sync_state(sync, self.cfg.sync, state.sync_state,
                                        state.params)
-        trainer = Trainer(self.loss_fn, self.init_fn, new_cfg)
+        trainer = Trainer(self.loss_fn, self.init_fn, new_cfg,
+                          transport=self.transport)
         # the per-step path depends on the sync *strategy* (which a retune
         # cannot change), not the codec knobs — reuse the compiled train
         # step so a retune recompiles only the sync step.  And only when a
         # bucket's tier/top-k actually changed: the shared sync-step cache
         # (keyed on the interval-normalized config) means an interval-only
         # retune, or a return to a previously compiled rung combination,
-        # re-jits nothing at all
+        # re-jits nothing at all.  The host-seam (prepare, finish) pair
+        # follows the same cache discipline.
         trainer._train_step = self._train_step
         trainer._sync_cache = self._sync_cache
+        trainer._split_cache = self._split_cache
         key = self._sync_key(sync)
         cached = self._sync_cache.get(key)
         if cached is not None:
             trainer._sync_step = cached
         else:
             self._sync_cache[key] = trainer._sync_step
+        split_cached = self._split_cache.get(key)
+        if split_cached is not None:
+            trainer._prepare_sync, trainer._finish_sync = split_cached
+        else:
+            self._split_cache[key] = (trainer._prepare_sync,
+                                      trainer._finish_sync)
         if sync.bucket_policy == self.cfg.sync.bucket_policy:
             trainer._bucket_weights = self._bucket_weights
         trainer.traffic_mb = self.traffic_mb
@@ -216,7 +285,14 @@ class Trainer:
                 self.cfg.sync, model_mb,
                 bucket_weights=self.bucket_weights(state)) * self.cfg.n_pods
         if is_sync_step(self.cfg.sync, host_step) and self.cfg.n_pods > 1:
-            state = self._sync_step(state)
+            if self._host_seam and self.cfg.sync.uses_codec:
+                state = self._host_sync(state)
+            else:
+                state = self._sync_step(state)
+            if self.transport is not None:
+                # round barrier: bill (sim) or flush (mesh) this round's
+                # transfers into the transport's records + measured probe
+                self.transport.on_sync(self.wire_mb(state), step=host_step)
         return state
 
     # --------------------------------------------------------------- loop

@@ -89,9 +89,9 @@ def test_bucket_override_knobs_and_payload():
         buckets=(BucketOverride("moe", compress_topk=0.01,
                                 value_dtype="int4"),
                  BucketOverride("norm", compress_topk=0.5)))
-    assert cfg.bucket_knobs("moe") == (0.01, "int4")
-    assert cfg.bucket_knobs("norm") == (0.5, "int8")
-    assert cfg.bucket_knobs("dense") == (0.05, "int8")   # inherits global
+    assert cfg.bucket_knobs("moe") == (0.01, "int4", 4096)
+    assert cfg.bucket_knobs("norm") == (0.5, "int8", 4096)
+    assert cfg.bucket_knobs("dense") == (0.05, "int8", 4096)  # inherits global
     assert cfg.for_bucket("moe").uses_codec
     assert cfg.bucket_tiers == (1, 1, 1, 3)
     # weighted payload equals the sum of per-bucket payloads
@@ -494,6 +494,159 @@ def test_bucketed_guard_never_violated_on_random_streams():
             assert c.min_interval <= c.interval <= c.max_interval
 
 
+# -------------------------------------------- user-defined pattern tables
+
+
+def test_bucket_spec_parse_presets_and_custom():
+    from repro.core.sync import (DEFAULT_BUCKET_SPEC, MOE_ROUTER_BUCKET_SPEC,
+                                 BucketSpec)
+
+    assert BucketSpec.parse("default") is DEFAULT_BUCKET_SPEC
+    assert BucketSpec.parse("") is DEFAULT_BUCKET_SPEC
+    assert BucketSpec.parse("moe-router") is MOE_ROUTER_BUCKET_SPEC
+    spec = BucketSpec.parse(
+        "router=router;moe=moe|expert;embed=embed|vocab;norm=norm|bias;"
+        "dense=;vector=norm;fallback=dense")
+    assert spec.names == ("router", "moe", "embed", "norm", "dense")
+    assert spec.patterns[0] == ("router", ("router",))
+    assert spec.vector_bucket == "norm" and spec.fallback == "dense"
+    # precedence: first entry wins
+    assert spec.classify("moe/router", 2) == "router"
+    assert spec.classify("moe/wg", 3) == "moe"
+    with pytest.raises(ValueError, match="no bucket groups"):
+        BucketSpec.parse("vector=norm")
+    with pytest.raises(ValueError, match="name=sub1"):
+        BucketSpec.parse("router")
+    # a typoed directive target is refused, not silently created as a
+    # phantom group that would swallow every fallthrough leaf
+    with pytest.raises(ValueError, match="undeclared bucket group"):
+        BucketSpec.parse("embed=embed;dense=;fallback=dens")
+    # fallback default prefers the declared pattern-less catch-all —
+    # never the most-specific FIRST group
+    moe = BucketSpec.parse("router=router;moe=moe|expert;norm=norm;rest=")
+    assert moe.fallback == "rest"
+    assert moe.classify("mlp/w_up", 2) == "rest"
+    # spec-level validation: pattern groups must be declared names
+    with pytest.raises(ValueError, match="not one of its names"):
+        from repro.core.sync import BucketSpec as BS
+        BS(names=("a",), patterns=(("b", ("x",)),), vector_bucket="a",
+           fallback="a")
+
+
+def test_moe_router_preset_splits_routers_from_experts():
+    """The ROADMAP item: under the moe-router table the router matrix gets
+    its OWN group (own knobs, own EF telemetry) instead of riding the
+    expert group — while the default table keeps today's behaviour."""
+    from repro.core.sync import MOE_ROUTER_BUCKET_SPEC
+
+    t = {"moe": {"router": jnp.zeros((2, 16, 4)),
+                 "wg": jnp.zeros((2, 4, 16, 8))},
+         "mlp": {"w": jnp.zeros((2, 16, 16))}}
+    # default: router rides the expert group (leaves flatten in sorted
+    # key order: mlp/w, moe/router, moe/wg)
+    lay = bucket_layout(MULTI, t)
+    names = [lay.names[b] for b in lay.leaf_bucket]
+    assert names == ["dense", "moe", "moe"]
+    # moe-router: routers split out
+    routed = SyncConfig(
+        "asgd_ga", 1, compress_topk=0.1, quantize_int8=True,
+        error_feedback=True, codec_block=256, bucket_policy="layer-class",
+        bucket_spec=MOE_ROUTER_BUCKET_SPEC)
+    lay2 = bucket_layout(routed, t)
+    names2 = [lay2.names[b] for b in lay2.leaf_bucket]
+    assert names2 == ["dense", "router", "moe"]
+    # ...and the split group takes its own override, validated by name
+    cfg = SyncConfig(
+        "asgd_ga", 1, compress_topk=0.1, quantize_int8=True,
+        error_feedback=True, codec_block=256, bucket_policy="layer-class",
+        bucket_spec=MOE_ROUTER_BUCKET_SPEC,
+        buckets=(BucketOverride("router", compress_topk=0.5),))
+    assert cfg.bucket_knobs("router")[0] == 0.5
+    assert cfg.bucket_knobs("moe")[0] == 0.1
+    with pytest.raises(ValueError, match="bucket 'router'"):
+        SyncConfig("asgd_ga", 1, compress_topk=0.1, quantize_int8=True,
+                   error_feedback=True, bucket_policy="layer-class",
+                   buckets=(BucketOverride("router", compress_topk=0.5),))
+
+
+def test_custom_spec_runs_a_sync_round_end_to_end():
+    """A custom table flows through layout, telemetry widths, knobs and an
+    actual codec sync round (per-group EF segments)."""
+    from repro.core.sync import BucketSpec
+
+    spec = BucketSpec.parse("emb=embed;rest=")
+    assert spec.fallback == "rest"      # the pattern-less catch-all
+    cfg = SyncConfig("asgd_ga", 1, compress_topk=0.2, quantize_int8=True,
+                     error_feedback=True, codec_block=128,
+                     bucket_policy="layer-class", bucket_spec=spec,
+                     buckets=(BucketOverride("emb", compress_topk=0.5),))
+    assert cfg.bucket_names == ("emb", "rest")
+    g = _tree(seed=11)
+    p = jax.tree.map(jnp.zeros_like, g)
+    st = init_sync_state(cfg, p)
+    assert st.msg_norm.shape == (2, 2)
+    _, st = on_step_gradients(cfg, g, st)
+    out, st2 = apply_sync(cfg, p, st, lr=1.0)
+    assert float(jnp.linalg.norm(st2.ef_residual)) > 0
+    assert np.all(np.asarray(st2.msg_norm) > 0)
+    stats = bucket_stats_from_sync_state(st2, cfg.bucket_names)
+    # emb@0.5 captures more energy than the 0.2-topk rest bucket
+    assert stats["emb"].ef_ratio < stats["rest"].ef_ratio
+
+
+# ------------------------------------------- per-bucket codec_block override
+
+
+def test_per_bucket_codec_block_is_billed_and_validated():
+    base = dict(compress_topk=0.05, quantize_int8=True, error_feedback=True,
+                bucket_policy="layer-class")
+    cfg = SyncConfig("asgd_ga", 4, **base,
+                     buckets=(BucketOverride("embed", codec_block=256),))
+    assert cfg.bucket_knobs("embed") == (0.05, "int8", 256)
+    assert cfg.bucket_knobs("dense") == (0.05, "int8", 4096)
+    # the 1/block scale term is billed per bucket: smaller block, more
+    # scales, strictly more wire bytes for the overridden group
+    w = {"embed": 0.25, "norm": 0.05, "dense": 0.5, "moe": 0.2}
+    plain = SyncConfig("asgd_ga", 4, **base)
+    assert cfg.payload_mb(100.0, bucket_weights=w) > \
+        plain.payload_mb(100.0, bucket_weights=w)
+    expect = sum(cfg.for_bucket(n).payload_mb(100.0 * w[n])
+                 for n in cfg.bucket_names)
+    assert cfg.payload_mb(100.0, bucket_weights=w) == pytest.approx(expect)
+    # the cost table shows the block next to the payload it produced
+    from repro.core.cost import bucket_payload_table
+    table = bucket_payload_table(cfg, {n: 100.0 * w[n]
+                                       for n in cfg.bucket_names})
+    assert table["embed"]["codec_block"] == 256
+    assert table["dense"]["codec_block"] == 4096
+    # validation names the offending group
+    with pytest.raises(ValueError, match="bucket 'embed'.*codec_block"):
+        SyncConfig("asgd_ga", 4, **base,
+                   buckets=(BucketOverride("embed", codec_block=64),))
+
+
+def test_per_bucket_codec_block_sync_round_is_exact():
+    """A per-bucket block override changes the selection granularity but
+    the EF residual is still exactly message - decode(encode(message))
+    per segment."""
+    g = _tree(seed=13)
+    cfg = SyncConfig(
+        "asgd_ga", 1, compress_topk=0.1, quantize_int8=True,
+        error_feedback=True, codec_block=256, bucket_policy="layer-class",
+        buckets=(BucketOverride("dense", codec_block=512),
+                 BucketOverride("embed", codec_block=128)))
+    p = jax.tree.map(jnp.zeros_like, g)
+    st = init_sync_state(cfg, p)
+    _, st = on_step_gradients(cfg, g, st)
+    out, st2 = apply_sync(cfg, p, st, lr=1.0)
+    lay = bucket_layout(cfg, p)
+    msg = np.asarray(_pack_stacked(st.ga_buffer, lay))
+    received = -np.asarray(_pack_stacked(out, lay))
+    local = np.roll(received, -cfg.peer_shift, axis=0)
+    np.testing.assert_allclose(np.asarray(st2.ef_residual), msg - local,
+                               atol=1e-6)
+
+
 # ------------------------------------------------------------ launcher glue
 
 
@@ -505,5 +658,8 @@ def test_parse_bucket_overrides():
                                   value_dtype="int4"),
                    BucketOverride("norm", value_dtype="int8"))
     assert parse_bucket_overrides("") == ()
+    # per-bucket codec_block override rides the same syntax
+    assert parse_bucket_overrides("embed:block=1024") == (
+        BucketOverride("embed", codec_block=1024),)
     with pytest.raises(ValueError, match="unknown override key"):
-        parse_bucket_overrides("embed:block=4096")
+        parse_bucket_overrides("embed:threshold=0.5")

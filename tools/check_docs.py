@@ -42,8 +42,9 @@ FLAG_PAGES = ("docs/sync-tuning.md", "docs/control-loops.md")
 SYNC_FLAGS = (
     "--sync", "--interval", "--compress-topk", "--int8", "--value-dtype",
     "--error-feedback", "--overlap-chunks", "--codec-block",
-    "--bucket-policy", "--bucket-override", "--adaptive-sync", "--ef-guard",
-    "--wan-trace", "--step-time",
+    "--bucket-policy", "--bucket-override", "--bucket-patterns",
+    "--adaptive-sync", "--ef-guard", "--wan-trace", "--step-time",
+    "--transport",
 )
 LAUNCHER = "src/repro/launch/train.py"
 
