@@ -107,6 +107,28 @@ MEASURED_BAND = 0.15   # time-to-target band vs the trace-driven run
 # MeshTransport.measure_overlap)
 MESH_OVERLAP = dict(n_pods=4, n_elems=1 << 21, emulate_mbps=1.0, chunks=8)
 
+# hierarchical-topology scenario (the third actuator): 3 pods, one per
+# region, all links calm at 100 Mbps except gz<->sh, which collapses to
+# 2 Mbps at t=10s and stays down.  This is the asymmetric regime where the
+# shape matters: a 3-region ring crosses EVERY link every round (no
+# reordering can dodge the bad one), while a tree re-roots at cq and
+# aggregates over the two healthy links — one slow round to discover the
+# cliff, then fast forever.  Shipping is bit-exact either way
+# (HierarchicalTransport delegates to the inline ring), so the fixed
+# ``ring`` and ``tree`` variants — static codec config — share ONE loss
+# trajectory step for step (acceptance-flagged), and their time-to-target
+# difference is purely what each shape pays the collapsed link.  ``auto``
+# is the full composition: the measured-feedback adaptive codec
+# controller with a TopologyPlanner wired in as the third actuator,
+# starting on the ring and switching shapes from measured link beliefs.
+TOPOLOGY_REGIONS = ("sh", "cq", "gz")
+TOPOLOGY_CALM_MBPS = 100.0
+TOPOLOGY_BAD_LINK = ("gz", "sh")
+TOPOLOGY_BAD_SEGMENTS = ((0.0, 100.0), (10.0, 2.0))
+TOPOLOGY_PLANNER = dict(hysteresis=2, switch_margin=0.85)   # recorded into
+#   the baseline so check_regression replays EXACTLY this planner (same
+#   discipline as the controller/probe knobs)
+
 
 def _trace():
     from repro.core.wan import BandwidthTrace
@@ -374,6 +396,180 @@ def bench_bucketed() -> Dict:
     return out
 
 
+def run_topology_variant(kind: str) -> Dict:
+    """One topology-scenario run: 3 pods / 3 regions aggregating through a
+    ``HierarchicalTransport`` whose gz<->sh link collapses mid-run.
+
+    ``ring`` / ``tree`` fix the shape AND the codec config for the whole
+    run: shipping is bit-exact across shapes, so these two share one loss
+    trajectory step for step (an acceptance flag pins it) and their
+    time-to-target difference is *purely* what each shape pays the
+    collapsed link — the clean ablation.  ``auto`` is the full
+    three-actuator composition: the measured-feedback adaptive controller
+    (probe fed by billed round times, as in the transport-seam scenario)
+    with a ``TopologyPlanner`` wired in (``topology=``), switching shapes
+    from the measured link beliefs — the production path of
+    ``launch.train --topology auto --adaptive-sync``.  The ``auto`` run
+    additionally records the exact interleaved (link observation, planner
+    decide) event stream so ``check_regression`` can replay the topology
+    control law deterministically."""
+    from repro.core.autotune import AdaptiveSyncController, BucketStats
+    from repro.core.sync import SyncConfig, is_sync_step
+    from repro.core.topology import (HierarchicalTransport, LinkBeliefs,
+                                     TopologyPlanner, TopologySpec, link_key)
+    from repro.core.transport import MeasuredWanProbe
+    from repro.core.wan import BandwidthTrace, WANConfig
+    from repro.data.pipeline import GeoDataset, synthetic_classification
+    from repro.models.reference import PAPER_MODELS
+    from repro.training.trainer import (Trainer, TrainerConfig,
+                                        stack_pod_batches)
+
+    events: List[list] = []   # interleaved, in exact occurrence order
+
+    class RecordingBeliefs(LinkBeliefs):
+        def observe(self, a, b, mbps):
+            events.append(["obs", a, b, float(mbps)])
+            super().observe(a, b, mbps)
+
+    class RecordingPlanner(TopologyPlanner):
+        def decide(self, step, payload_mb):
+            events.append(["decide", step, float(payload_mb)])
+            return super().decide(step, payload_mb)
+
+    spec = TopologySpec.from_regions(
+        list(TOPOLOGY_REGIONS), kind=("ring" if kind == "auto" else kind))
+    # the link beliefs reuse the measured probe's estimator knobs: same
+    # cliff-snap scale, per link instead of pooled
+    beliefs = RecordingBeliefs(default_mbps=TOPOLOGY_CALM_MBPS,
+                               **MEASURED_PROBE)
+    transport = HierarchicalTransport(
+        spec, BandwidthTrace((0.0,), (TOPOLOGY_CALM_MBPS,)),
+        wan=WANConfig(bandwidth_mbps=TOPOLOGY_CALM_MBPS, **MEASURED_WAN),
+        link_traces={link_key(*TOPOLOGY_BAD_LINK): BandwidthTrace(
+            times_s=tuple(t for t, _ in TOPOLOGY_BAD_SEGMENTS),
+            mbps=tuple(b for _, b in TOPOLOGY_BAD_SEGMENTS))},
+        probe=MeasuredWanProbe(**MEASURED_PROBE), beliefs=beliefs)
+    planner = (RecordingPlanner(transport.spec, beliefs,
+                                apply=transport.set_kind, **TOPOLOGY_PLANNER)
+               if kind == "auto" else None)
+
+    m = PAPER_MODELS["lenet"]
+    data = synthetic_classification(1500, m["input_shape"], m["n_classes"],
+                                    seed=SEED)
+    geo = GeoDataset.partition(data, list(TOPOLOGY_REGIONS), [1, 1, 1])
+    loaders = [geo.loader(r, 32, seed=i)
+               for i, r in enumerate(TOPOLOGY_REGIONS)]
+    sync = SyncConfig(BASE_SYNC["strategy"], BASE_SYNC["interval"],
+                      compress_topk=BASE_SYNC["compress_topk"],
+                      quantize_int8=True, error_feedback=True)
+    trainer = Trainer(lambda p, b: (m["loss"](p, b), {}), m["init"],
+                      TrainerConfig(n_pods=len(TOPOLOGY_REGIONS),
+                                    optimizer="sgd", lr=0.05, sync=sync),
+                      transport=transport)
+    tuner = (AdaptiveSyncController(
+                 sync, MODEL_MB, COMPUTE_STEP_S,
+                 probe_est=transport.probe.estimator, topology=planner,
+                 **TUNER_KW)
+             if kind == "auto" else None)
+    state = trainer.init_state(jax.random.key(SEED))
+
+    sim_t = 0.0
+    losses: List[float] = []
+    decisions: List[Dict] = []
+    traffic_mb = 0.0
+    max_ratio = 0.0
+    time_to_target: Optional[float] = None
+    stats = BucketStats(0.0, 0.0)
+    for step in range(STEPS):
+        if tuner is not None:
+            upd = tuner.update(step, stats)
+            if upd is not None:
+                trainer, state = trainer.retune(state, upd.sync)
+                decisions.append({
+                    "step": step, "sim_t": round(sim_t, 2),
+                    "rung": upd.rung, "tier": upd.tier,
+                    "interval": upd.sync.interval, "reason": upd.reason,
+                    "topology": upd.topology})
+        state, metrics = trainer.train_step(
+            state, stack_pod_batches([next(ld) for ld in loaders]))
+        losses.append(float(metrics["loss"]))
+        sim_t += COMPUTE_STEP_S
+        if is_sync_step(trainer.cfg.sync, step):
+            payload = trainer.cfg.sync.payload_mb(MODEL_MB)
+            # this round ships under the schedule compiled BEFORE billing
+            # (on_sync recompiles at the end) — bill traffic at its count
+            legs = transport.wan_transfers_per_round
+            transport.clock_s = sim_t
+            t = transport.on_sync({"all": payload}, step=step)
+            sim_t += t * (1.0 - OVERLAP)
+            traffic_mb += payload * legs
+            state = trainer._sync_step(state)
+            stats = BucketStats.from_sync_state(state.sync_state)
+            max_ratio = max(max_ratio, stats.ef_ratio)
+        if (time_to_target is None and len(losses) >= 5
+                and float(np.mean(losses[-5:])) <= TARGET_LOSS):
+            time_to_target = round(sim_t, 2)
+
+    out = {
+        "time_to_target_s": time_to_target,
+        "final_loss": round(float(np.mean(losses[-5:])), 6),
+        "total_sim_s": round(sim_t, 2),
+        "traffic_mb": round(traffic_mb, 2),
+        "max_ef_ratio": round(max_ratio, 6),
+        "n_retunes": len(decisions),
+        "decisions": decisions,
+        "final_kind": transport.spec.kind,
+        "wan_transfers_per_round": transport.wan_transfers_per_round,
+        "switches": [list(s) for s in transport.switches],
+        "reroutes": [list(r) for r in transport.reroutes],
+        "final_beliefs": transport.beliefs.snapshot(),
+        "final_config": {
+            "value_dtype": trainer.cfg.sync.value_dtype,
+            "compress_topk": trainer.cfg.sync.compress_topk,
+            "interval": trainer.cfg.sync.interval},
+    }
+    if planner is not None:
+        # full precision (observations AND decide payloads): the replay
+        # gate feeds these verbatim into fresh LinkBeliefs/TopologyPlanner
+        # and the estimator EMA + estimate comparison are both
+        # discontinuous in them
+        out["events"] = events
+        out["planner_decisions"] = [list(d) for d in planner.decisions]
+    return out
+
+
+def bench_topology() -> Dict:
+    """Fixed-ring vs fixed-tree vs planner-driven shape on the collapsing
+    asymmetric link — the third-actuator scenario."""
+    from repro.core.topology import LinkBeliefs, TopologySpec
+
+    out: Dict = {
+        "regions": list(TOPOLOGY_REGIONS),
+        "initial_kind": "ring",
+        "default_mbps": TOPOLOGY_CALM_MBPS,
+        "bad_link": list(TOPOLOGY_BAD_LINK),
+        "bad_link_trace": [list(seg) for seg in TOPOLOGY_BAD_SEGMENTS],
+        "beliefs": dict(MEASURED_PROBE),
+        "planner": dict(TOPOLOGY_PLANNER),
+        "wan": dict(MEASURED_WAN),
+        "variants": {k: run_topology_variant(k)
+                     for k in ("ring", "tree", "auto")},
+    }
+    # the schedule-shape arithmetic the traffic accounting bills
+    # (check_regression recomputes these against a fresh compile)
+    spec = TopologySpec.from_regions(list(TOPOLOGY_REGIONS), kind="ring")
+    fresh = LinkBeliefs(default_mbps=TOPOLOGY_CALM_MBPS)
+    out["wan_transfers"] = {
+        k: spec.with_kind(k).compile(fresh).wan_transfers
+        for k in ("ring", "tree")}
+    for k in ("ring", "tree", "auto"):
+        out[f"{k}_s"] = out["variants"][k]["time_to_target_s"]
+    out["tree_speedup_vs_ring"] = (
+        round(out["ring_s"] / out["tree_s"], 3)
+        if out["ring_s"] and out["tree_s"] else None)
+    return out
+
+
 def _mesh_overlap_here() -> Dict:
     """The measurement itself — requires >= 4 devices in THIS process."""
     from repro.core.sync import SyncConfig
@@ -479,6 +675,7 @@ def bench_autotune() -> Dict:
         round((1.0 + MEASURED_BAND) * t_adapt + allowance, 2)
         if t_adapt is not None else None)
     report["mesh_overlap"] = bench_mesh_overlap()
+    report["topology"] = bench_topology()
 
     report["bucketed"] = bench_bucketed()
     b = report["bucketed"]
@@ -508,6 +705,33 @@ def bench_autotune() -> Dict:
         "measured_ef_guard_never_violated":
             m["max_ef_ratio"] <= EF_GUARD,
     }
+    topo = report["topology"]
+    tv = topo["variants"]
+    report["acceptance"].update({
+        # the third-actuator headline: on the asymmetric collapsing link,
+        # the tree's shape (re-rooted around the dead link) reaches the
+        # target loss sooner than the flat 3-region ring, which crosses
+        # every link every round
+        "topology_tree_beats_ring":
+            bool(topo["tree_s"] is not None and topo["ring_s"] is not None
+                 and topo["tree_s"] < topo["ring_s"]),
+        # the planner discovers the same answer from measured beliefs:
+        # starts on the ring, ends on the tree, and pays no more than
+        # staying on the ring would have
+        "topology_auto_switches_to_tree":
+            tv["auto"]["final_kind"] == "tree"
+            and len(tv["auto"]["switches"]) >= 1,
+        "topology_auto_not_worse_than_ring":
+            bool(topo["auto_s"] is not None and topo["ring_s"] is not None
+                 and topo["auto_s"] <= topo["ring_s"]),
+        "topology_ef_guard_never_violated":
+            all(v["max_ef_ratio"] <= EF_GUARD for v in tv.values()),
+        # the parity guarantee, visible in the bench itself: shape changes
+        # billing only, never bytes — the fixed-shape variants (identical
+        # static codec config) must end at the exact same loss
+        "topology_shapes_share_numerics":
+            tv["ring"]["final_loss"] == tv["tree"]["final_loss"],
+    })
     if "overlap_speedup" in report["mesh_overlap"]:
         report["acceptance"]["mesh_overlap_speedup_measured"] = \
             report["mesh_overlap"]["overlap_speedup"] > 1.0
@@ -547,6 +771,19 @@ def _print_report(r: Dict) -> None:
               f"-> pipelined {mo['t_pipelined_s']}s)")
     else:
         print(f"mesh overlap: {mo['skipped']}")
+    topo = r["topology"]
+    print(f"\ntopology scenario ({'/'.join(topo['regions'])}, "
+          f"{topo['bad_link'][0]}<->{topo['bad_link'][1]} collapses "
+          f"{topo['bad_link_trace'][0][1]} -> "
+          f"{topo['bad_link_trace'][-1][1]} Mbps):")
+    for name in ("ring", "tree", "auto"):
+        v = topo["variants"][name]
+        print(f"  {name:5s} t_target {v['time_to_target_s']}s  traffic "
+              f"{v['traffic_mb']} MB  final {v['final_kind']} "
+              f"(legs {v['wan_transfers_per_round']})  retunes "
+              f"{v['n_retunes']}  max_ef {v['max_ef_ratio']}  "
+              f"switches {v['switches']}")
+    print(f"  tree speedup vs ring: {topo['tree_speedup_vs_ring']}x")
     b = r["bucketed"]
     print(f"\nbucketed scenario ({b['model']}, target "
           f"{b['target_loss']}): bucket_mb "

@@ -14,7 +14,11 @@ checker makes them a *gate*, not a log.  Checks, cheapest first:
   per-bucket stream through a fresh ``BucketedSyncController``) must
   reproduce the recorded decisions rung-for-rung — a deterministic
   regression check of both control laws without re-training — and must
-  never escalate past the EF guard on any bucket.
+  never escalate past the EF guard on any bucket.  The topology scenario
+  records the planner's interleaved (per-link observation, decide) event
+  stream the same way; a fresh ``LinkBeliefs`` + ``TopologyPlanner`` must
+  reproduce its shape decisions exactly, reason strings (with embedded
+  cost estimates) included.
 - **Banded** (deterministic sims, 5%): the elasticity benchmark's
   speedup / cost-reduction / traffic-reduction (discrete-event simulator,
   seeded RNG).
@@ -239,6 +243,52 @@ def check_bucketed_replay(gate: Gate, base: Dict) -> None:
                f"vs guard {guard}")
 
 
+def check_topology_replay(gate: Gate, base: Dict) -> None:
+    """Replay the topology planner's decisions: the baseline records the
+    auto variant's exact interleaved event stream — per-link bandwidth
+    observations (as billed by the HierarchicalTransport) and planner
+    decide calls (step, payload) in occurrence order.  Feeding it through
+    a fresh LinkBeliefs + TopologyPlanner must reproduce the recorded
+    decision tuples exactly, reason strings included — the reasons embed
+    both candidates' cost estimates to 4 decimals, so this pins the whole
+    topology cost model (belief EMA + cliff-snap -> schedule compilation
+    -> round-cost estimate -> hysteresis/margin switch law)
+    deterministically, without re-training."""
+    from repro.core.topology import LinkBeliefs, TopologyPlanner, TopologySpec
+
+    topo = base["topology"]
+    auto = topo["variants"]["auto"]
+    spec = TopologySpec.from_regions(topo["regions"],
+                                     kind=topo["initial_kind"])
+    beliefs = LinkBeliefs(default_mbps=topo["default_mbps"],
+                          **topo["beliefs"])
+    planner = TopologyPlanner(spec, beliefs, **topo["planner"])
+    n_obs = 0
+    for ev in auto["events"]:
+        if ev[0] == "obs":
+            beliefs.observe(ev[1], ev[2], float(ev[3]))
+            n_obs += 1
+        elif ev[0] == "decide":
+            planner.decide(int(ev[1]), float(ev[2]))
+    replayed = [list(d) for d in planner.decisions]
+    recorded = [list(d) for d in auto["planner_decisions"]]
+    _check_decisions(gate, "topology.replay.planner_decisions",
+                     replayed, recorded)
+    gate.check("topology.replay.final_kind",
+               planner.kind == auto["final_kind"] and n_obs > 0,
+               f"replayed {planner.kind} vs recorded {auto['final_kind']} "
+               f"({n_obs} link observations)")
+    # the schedule-shape arithmetic the traffic accounting bills: a fresh
+    # compile at default beliefs must make the recorded number of
+    # payload-sized WAN transfers per round (ring over R singleton
+    # regions: R; tree: 2(R-1))
+    fresh = LinkBeliefs(default_mbps=topo["default_mbps"])
+    for kind, want in topo["wan_transfers"].items():
+        got = spec.with_kind(kind).compile(fresh).wan_transfers
+        gate.check(f"topology.wan_transfers.{kind}", got == want,
+                   f"baseline {want} vs recomputed {got}")
+
+
 # ----------------------------------------------------------- banded checks
 
 
@@ -314,6 +364,7 @@ def main(argv: Sequence[str] = None) -> int:
     check_controller_replay(gate, baselines["autotune"])
     check_measured_replay(gate, baselines["autotune"])
     check_bucketed_replay(gate, baselines["autotune"])
+    check_topology_replay(gate, baselines["autotune"])
     check_elasticity_sim(gate, baselines["elasticity"])
     check_encode_speedup(gate, baselines["wan_codec"])
 

@@ -222,12 +222,17 @@ class SyncPlanUpdate:
     reason: str
     probe: Optional[WanProbe] = None
     stats: Optional[BucketStats] = None
+    topology: Optional[str] = None  # active aggregation shape, when a
+    #   TopologyPlanner is wired in (the third actuator)
 
     def summary(self) -> str:
         s = self.sync
-        return (f"rung {self.rung} ({CODEC_TIERS[self.tier]}"
-                f"@topk={s.compress_topk}), interval {s.interval} "
-                f"[{self.reason}]")
+        out = (f"rung {self.rung} ({CODEC_TIERS[self.tier]}"
+               f"@topk={s.compress_topk}), interval {s.interval} "
+               f"[{self.reason}]")
+        if self.topology is not None:
+            out += f" topo={self.topology}"
+        return out
 
 
 def build_ladder(base: SyncConfig,
@@ -266,7 +271,7 @@ class AdaptiveSyncController:
                  hysteresis: int = 2, probe_alpha: float = 0.5,
                  trend_window: int = 4, trend_rise: float = 0.02,
                  probe_est: Optional[WanProbeEstimator] = None,
-                 bus=None):
+                 topology=None, bus=None):
         if not base_sync.uses_codec:
             raise ValueError(
                 "AdaptiveSyncController tunes the fused codec: base_sync "
@@ -311,6 +316,11 @@ class AdaptiveSyncController:
 
         self._probe_est = (probe_est if probe_est is not None
                            else WanProbeEstimator(alpha=probe_alpha))
+        # third actuator (duck-typed to avoid a core.topology import
+        # cycle): anything with .kind and .decide(step, payload_mb) — in
+        # practice a topology.TopologyPlanner sharing the transport's
+        # LinkBeliefs
+        self.topology = topology
         self._pressure_streak = 0
         self._calm_streak = 0
         self._last_stats: Optional[Tuple[float, float]] = None
@@ -456,6 +466,16 @@ class AdaptiveSyncController:
                 rung, reason = self.rung - 1, "wan-headroom"
                 self._calm_streak = 0
 
+        # third actuator: consult the topology planner on fresh readings
+        # only, and never while a guard is de-escalating — a tripped EF
+        # guard means fidelity is the problem, and reshaping the network
+        # in the same breath would blur which actuator fixed it
+        topo = None
+        if (self.topology is not None and fresh
+                and reason not in ("ef-guard", "ef-trend")):
+            topo = self.topology.decide(
+                step, self.ladder[rung].payload_mb(self.model_mb))
+
         cfg = self.ladder[rung]
         # the staleness budget caps the interval at every rung but the
         # last, where it is the escape valve for a link no tier can absorb
@@ -469,9 +489,12 @@ class AdaptiveSyncController:
                     not reason
                     and abs(interval - self.interval)
                     < max(1.0, 0.25 * self.interval)):
-                return None
+                if topo is None:
+                    return None
+                # topology-only move: the codec knobs stand as they are
+                interval = self.interval
         if not reason:
-            reason = "interval-fit"
+            reason = f"topo-{topo}" if topo is not None else "interval-fit"
         if rung != self.rung:
             self._trend.clear()   # new rung, new drift regime
         self.rung = rung
@@ -480,7 +503,9 @@ class AdaptiveSyncController:
         update = SyncPlanUpdate(
             sync=self.current, step=step, rung=rung,
             tier=self.current.tier, reason=reason,
-            probe=self.probe, stats=stats if have_reading else None)
+            probe=self.probe, stats=stats if have_reading else None,
+            topology=(self.topology.kind if self.topology is not None
+                      else None))
         self.decisions.append(update)
         return update
 

@@ -68,14 +68,21 @@ def tier_payload_table(model_mb: float, frac: float,
     return rows
 
 
-def bucket_payload_table(cfg: SyncConfig, bucket_mb: Mapping[str, float]
+def bucket_payload_table(cfg: SyncConfig, bucket_mb: Mapping[str, float],
+                         wan_legs: Optional[int] = None
                          ) -> Dict[str, Dict[str, float]]:
     """Per-bucket traffic table for a layer-class config: each bucket
     group's model bytes, effective (top-k, tier) knobs, per-sync payload
     and reduction vs its dense share — the per-bucket price list the
     :class:`~repro.core.autotune.BucketedSyncController` walks, and what
     the bench reports next to its decisions.  A ``total`` row sums the
-    groups (equals ``cfg.payload_mb(model_mb, bucket_weights=...)``)."""
+    groups (equals ``cfg.payload_mb(model_mb, bucket_weights=...)``).
+
+    ``wan_legs`` — payload-sized WAN transfers per sync round under the
+    live aggregation schedule (``AggregationSchedule.wan_transfers``; the
+    flat ring's value is ``n_pods``) — adds a ``wire_mb`` column per row:
+    what one sync round actually puts on the WAN, not just what one pod
+    encodes."""
     rows: Dict[str, Dict[str, float]] = {}
     total_mb = sum(bucket_mb.values())
     total_payload = 0.0
@@ -101,23 +108,37 @@ def bucket_payload_table(cfg: SyncConfig, bucket_mb: Mapping[str, float]
         "reduction_vs_dense": (round(total_mb / total_payload, 2)
                                if total_payload else 0.0),
     }
+    if wan_legs is not None:
+        for row in rows.values():
+            row["wire_mb"] = round(row["payload_mb"] * wan_legs, 6)
     return rows
 
 
 def adaptive_traffic_mb(decisions: Sequence, n_syncs_per_decision: Sequence[int],
                         model_mb: float, n_pods: int = 1,
-                        bucket_weights: Optional[Mapping[str, float]] = None
-                        ) -> float:
+                        bucket_weights: Optional[Mapping[str, float]] = None,
+                        wan_legs: Optional[int] = None) -> float:
     """Bytes-on-wire of an adaptive run: each controller decision's config
     billed for the sync rounds it was live (``SyncPlanUpdate.sync`` carries
     the payload math; the launcher's traffic accounting uses the same
     ``payload_mb`` per active config, so simulator and emulation agree).
     Pass ``bucket_weights`` for a multi-bucket decision stream — each
-    decision's per-bucket overrides are then billed at their own tier."""
+    decision's per-bucket overrides are then billed at their own tier.
+
+    The per-round multiplier is the number of payload-sized WAN transfers
+    one sync round makes.  The historical default, ``n_pods``, is exact
+    for the flat ring only (every pod ships to one peer).  Under a
+    hierarchical schedule pass ``wan_legs``
+    (``AggregationSchedule.wan_transfers`` / the transport's
+    ``wan_transfers_per_round``): a tree over R regions makes ``2(R-1)``
+    transfers, not ``n_pods``, and auxiliary routes pay two hops — the
+    same count the DES bills (exact-accounting-tested against
+    ``wan.simulate``)."""
+    legs = wan_legs if wan_legs is not None else n_pods
     total = 0.0
     for update, n in zip(decisions, n_syncs_per_decision):
         total += update.sync.payload_mb(
-            model_mb, bucket_weights=bucket_weights) * n * n_pods
+            model_mb, bucket_weights=bucket_weights) * n * legs
     return total
 
 

@@ -71,12 +71,14 @@ tests reproduce the paper's Figs 7/9/10 accuracy results for real.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, replace as _dc_replace
 from typing import (Any, Dict, Mapping, NamedTuple, Optional, Sequence,
                     Tuple, Union)
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from math import prod as np_prod
 
 Pytree = Any
@@ -1014,6 +1016,60 @@ def apply_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
             p.shape).astype(p.dtype),
         params)
     return params, zero
+
+
+def hierarchical_average(tree: Pytree, groups: Sequence[Sequence[int]],
+                         inter: str = "ama", shift: int = 1) -> Pytree:
+    """Two-level averaging: the existing strategies mapped onto hierarchy
+    levels (paper §III.C's inter-PS model averaging across regions).
+
+    ``groups`` partitions the pod axis into regions.  The intra level is a
+    barrier mean within each region (``sma`` semantics over the region's
+    fast fabric); the inter level exchanges the *region means*: ``ama``
+    gossips them one ring step (MA between region parameter servers),
+    ``sma`` takes their global mean.  The result is broadcast back to
+    every member.
+
+    Degenerate shapes recover the flat strategies exactly (property-tested
+    in ``tests/test_topology.py``): all-singleton groups in pod order with
+    ``inter="ama"`` reproduce flat ``ama`` bit-for-bit (a size-one mean is
+    the identity, and the region ring is then the pod ring), and a single
+    group reproduces flat ``sma`` (the inter level collapses to the
+    identity on the one region mean)."""
+    groups = tuple(tuple(int(i) for i in g) for g in groups)
+    if not groups or any(not g for g in groups):
+        raise ValueError("groups must be non-empty and cover every pod")
+    members = [i for g in groups for i in g]
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return tree
+    n_pods = leaves[0].shape[0]
+    if sorted(members) != list(range(n_pods)):
+        raise ValueError(f"groups {groups} do not partition pods "
+                         f"0..{n_pods - 1}")
+    n_groups = len(groups)
+    if inter not in ("ama", "sma"):
+        raise ValueError(f"inter level must be 'ama' or 'sma', got {inter!r}")
+    if inter == "ama" and n_groups > 1 and math.gcd(shift, n_groups) != 1:
+        raise ValueError(f"inter-ring shift {shift} must be coprime with "
+                         f"the number of regions {n_groups}")
+    # pod i receives the aggregate of the group it belongs to
+    assign = np.empty(n_pods, dtype=np.int32)
+    for gi, g in enumerate(groups):
+        assign[list(g)] = gi
+    assign = jnp.asarray(assign)
+    gathers = [jnp.asarray(g, dtype=jnp.int32) for g in groups]
+
+    def avg(p):
+        x = p.astype(jnp.float32)
+        m = jnp.stack([jnp.mean(x[idx], axis=0) for idx in gathers])
+        if inter == "ama":
+            m = (m + jnp.roll(m, shift, axis=0)) * 0.5
+        else:
+            m = jnp.broadcast_to(jnp.mean(m, axis=0, keepdims=True), m.shape)
+        return m[assign].astype(p.dtype)
+
+    return jax.tree.map(avg, tree)
 
 
 # ---------------------------------------------------------------------------

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -226,6 +226,8 @@ def simulate(
     wan: WANConfig = WANConfig(),
     events: Sequence[SimEvent] = (),
     trace: Optional[BandwidthTrace] = None,
+    topology=None,
+    topology_links: Optional[Mapping[Tuple[str, str], float]] = None,
 ) -> SimResult:
     """Run the discrete-event timeline and return per-cloud accounting.
 
@@ -236,6 +238,17 @@ def simulate(
     to the static simulator.  ``trace`` is sugar for a fluctuating link: its
     segments merge into ``events`` as ``bandwidth_changed`` (its t=0 segment
     overrides ``wan.bandwidth_mbps`` as the starting bandwidth).
+
+    ``topology`` (a ``repro.core.topology.TopologySpec``, duck-typed to
+    avoid an import cycle) replaces the flat per-cloud billing with the
+    compiled hierarchical schedule: each sync round costs the schedule's
+    phases — intra legs at ``topology.intra_mbps`` fabric speed, every WAN
+    hop one :func:`transfer_time` draw at that link's bandwidth (the global
+    ``bandwidth``, scaled per link by ``topology_links`` — a mapping from
+    sorted ``(region_a, region_b)`` pairs to multipliers, links absent
+    defaulting to 1.0; asymmetric inter-region networks in one dict).
+    Traffic bills ``payload`` per WAN hop to the originating region — the
+    exact accounting ``cost.adaptive_traffic_mb(wan_legs=...)`` mirrors.
     """
     rng = np.random.default_rng(wan.seed)
     if trace is not None:
@@ -256,6 +269,22 @@ def simulate(
 
     bandwidth = wan.bandwidth_mbps
     payload, sync_every, barrier, chunks = _schedule(sync, model_mb, wan)
+
+    topo_links = {tuple(sorted(k)): float(v)
+                  for k, v in (topology_links or {}).items()}
+
+    def _link_bw(a: str, b: str) -> float:
+        key = (a, b) if a < b else (b, a)
+        return bandwidth * topo_links.get(key, 1.0)
+
+    class _LinkView:
+        """Duck-typed LinkBeliefs over the DES link state, so
+        ``topology.compile`` sees the simulated network (recompiled each
+        sync round — bandwidth events reroute the schedule here exactly
+        like measured beliefs do in HierarchicalTransport)."""
+        mbps = staticmethod(_link_bw)
+
+    link_view = _LinkView()
     pending = sorted(events, key=lambda e: e.time_s)
     ev_i = 0
     n_reconfigs = 0
@@ -361,6 +390,46 @@ def simulate(
             for c in active:
                 tl[c.region].wait_s += t_bar - clock[c.region]
                 clock[c.region] = t_bar
+
+        if topology is not None:
+            # hierarchical round: the compiled schedule is the billing —
+            # phases in sequence, legs within a phase in parallel (the
+            # phase costs its slowest leg), every WAN hop one transfer
+            # draw at its own link's bandwidth
+            sched = topology.compile(link_view)
+            t_round = 0.0
+            for phase in sched.phases:
+                if not phase.legs:
+                    continue
+                if not phase.wan:
+                    t_round += payload * 8.0 / topology.intra_mbps
+                    continue
+                t_round += max(
+                    sum(_transfer_time(payload, _link_bw(a, b), wan, rng)
+                        for a, b in leg.hops)
+                    for leg in phase.legs)
+            # traffic: one payload per WAN hop, billed to the leg's
+            # originating region (aux routes pay both hops); legs from
+            # topology regions with no simulated cloud spread evenly
+            share = {c.region: 0.0 for c in active}
+            for ph in sched.phases:
+                if not ph.wan:
+                    continue
+                for leg in ph.legs:
+                    mb = payload * len(leg.hops)
+                    if leg.src in share:
+                        share[leg.src] += mb
+                    else:
+                        for c in active:
+                            share[c.region] += mb / len(active)
+            for c in active:
+                tl[c.region].comm_s += t_round
+                tl[c.region].traffic_mb += share[c.region]
+                blocking = t_round if (barrier or sync.strategy == "asgd") \
+                    else t_round * max(0.0, 1.0 - wan.overlap) / chunks
+                tl[c.region].comm_blocking_s += blocking
+                clock[c.region] += blocking
+            continue
 
         for c in active:
             t = _transfer_time(payload, bandwidth, wan, rng)

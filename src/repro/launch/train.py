@@ -46,6 +46,8 @@ from repro.core.sync import (BUCKET_CLASSES, BUCKET_POLICIES, VALUE_DTYPES,
                              BucketOverride, BucketSpec, SyncConfig,
                              bucket_weights_of, is_sync_step,
                              traffic_per_step_mb)
+from repro.core.topology import (HierarchicalTransport, TopologyPlanner,
+                                 TopologySpec)
 from repro.core.transport import (MeasuredWanProbe, MeshTransport,
                                   SimTransport)
 from repro.core.wan import BandwidthTrace, WANConfig
@@ -300,6 +302,18 @@ def main(argv=None):
                          "--adaptive-sync + sim/mesh the controller runs "
                          "from measured transfer times only — no trace is "
                          "wired to it")
+    ap.add_argument("--topology", default="ring",
+                    choices=["ring", "tree", "auto"],
+                    help="aggregation topology over the plan's regions: "
+                         "'ring' (flat pod ring, legacy billing), 'tree' "
+                         "(hierarchical transport: intra-region reduce + "
+                         "gather/broadcast through the best-connected "
+                         "root, auxiliary routes around collapsed links; "
+                         "needs --wan-trace), 'auto' (tree/ring chosen by "
+                         "the TopologyPlanner from measured link beliefs "
+                         "— the third actuator; needs --adaptive-sync).  "
+                         "Numerics are identical either way; topology "
+                         "changes the billing and the traffic accounting")
     args = ap.parse_args(argv)
 
     # ----------------------------------------------------------- model
@@ -374,6 +388,24 @@ def main(argv=None):
     # ---------------------------------------------------------- trainer
     trace = parse_wan_trace(args.wan_trace, args.steps, args.step_time)
     transport = parse_transport(args.transport, trace, sync_cfg)
+    if args.topology != "ring":
+        if transport is not None:
+            raise SystemExit(
+                "--topology tree/auto builds its own hierarchical "
+                "transport; it composes with --transport inline only")
+        if trace is None:
+            raise SystemExit(
+                "--topology tree/auto needs --wan-trace: the hierarchical "
+                "transport bills the schedule against per-link bandwidth")
+        topo_spec = TopologySpec.from_plan(
+            plan, kind="tree" if args.topology == "tree" else "ring")
+        transport = HierarchicalTransport(
+            topo_spec, trace,
+            wan=WANConfig(bandwidth_mbps=trace.mbps[0]),
+            probe=MeasuredWanProbe())
+        print(f"[topology] {args.topology}: regions "
+              f"{list(topo_spec.regions)}, start kind {topo_spec.kind}, "
+              f"{transport.wan_transfers_per_round} WAN transfers/round")
     if transport is not None:
         print(f"[transport] {args.transport}: "
               f"{type(transport).__name__}"
@@ -419,6 +451,10 @@ def main(argv=None):
     # measured mode: the transport's probe owns the bandwidth belief —
     # the controller reads it and nothing else (no trace, no bus events)
     measured = transport is not None and transport.probe is not None
+    if args.topology == "auto" and not args.adaptive_sync:
+        raise SystemExit(
+            "--topology auto is the controller's third actuator: it needs "
+            "--adaptive-sync (use --topology tree for a fixed hierarchy)")
     if args.adaptive_sync:
         if not (sync_cfg.uses_codec and sync_cfg.error_feedback):
             raise SystemExit(
@@ -426,6 +462,16 @@ def main(argv=None):
                 "feedback: add --compress-topk F --int8 --error-feedback")
         probe_kw = (dict(probe_est=transport.probe.estimator, bus=None)
                     if measured else dict(bus=bus))
+        if args.topology == "auto":
+            if sync_cfg.bucket_policy == "layer-class":
+                raise SystemExit(
+                    "--topology auto composes with the single-bucket "
+                    "controller; the per-bucket controller does not carry "
+                    "the topology actuator yet")
+            # the planner shares the transport's link beliefs and actuates
+            # through its set_kind — controller decides, transport reshapes
+            probe_kw["topology"] = TopologyPlanner(
+                transport.spec, transport.beliefs, apply=transport.set_kind)
         if sync_cfg.bucket_policy == "layer-class":
             bucket_mb = {n: w * model_mb for n, w in bweights.items()}
             tuner = BucketedSyncController(
@@ -595,6 +641,18 @@ def main(argv=None):
              for n, r in tuner.max_ef_ratio_by_bucket.items()}
             if isinstance(tuner, BucketedSyncController) else None),
         "transport": args.transport,
+        "topology": args.topology,
+        "final_topology": (transport.spec.kind
+                           if isinstance(transport, HierarchicalTransport)
+                           else None),
+        "topology_switches": (len(transport.switches)
+                              if isinstance(transport, HierarchicalTransport)
+                              else None),
+        "topology_reroutes": (len(transport.reroutes)
+                              if isinstance(transport, HierarchicalTransport)
+                              else None),
+        "wan_transfers_per_round": getattr(
+            transport, "wan_transfers_per_round", None),
         "transfers": len(transport.records) if transport else None,
         "measured_bandwidth_mbps": (
             round(transport.probe.estimator.bandwidth_mbps, 3)

@@ -281,9 +281,16 @@ class Trainer:
     def maybe_sync(self, state: TrainState, host_step: int,
                    model_mb: float = 0.0) -> TrainState:
         if self.cfg.n_pods > 1:
+            # WAN transfers per sync round: the flat ring's count is one
+            # per pod; a hierarchical transport exposes its compiled
+            # schedule's count (tree over R regions: 2(R-1); auxiliary
+            # routes pay both hops) — same multiplier cost.adaptive_traffic_mb
+            # bills and the DES charges
+            legs = getattr(self.transport, "wan_transfers_per_round", None)
             self.traffic_mb += traffic_per_step_mb(
                 self.cfg.sync, model_mb,
-                bucket_weights=self.bucket_weights(state)) * self.cfg.n_pods
+                bucket_weights=self.bucket_weights(state)) * (
+                    legs if legs is not None else self.cfg.n_pods)
         if is_sync_step(self.cfg.sync, host_step) and self.cfg.n_pods > 1:
             if self._host_seam and self.cfg.sync.uses_codec:
                 state = self._host_sync(state)

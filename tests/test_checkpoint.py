@@ -1,0 +1,263 @@
+"""Direct coverage for ``repro.checkpoint.checkpoint`` (previously only
+exercised indirectly through test_elasticity): save/restore round-trips,
+manifest contents, bf16 handling, and — the elasticity-engine surface —
+``pod_resize`` restore paths: grow (mean / clone seeding), shrink
+(mean-preserving shift / plain drop), same-size no-op, restore into a
+different aggregation topology, and every refusal path.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core.sync import SyncConfig
+from repro.core.topology import HierarchicalTransport, TopologySpec
+from repro.core.wan import BandwidthTrace, WANConfig
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def _tree(n_pods, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(n_pods, 6, 3)), jnp.float32),
+        "opt": {"m": jnp.asarray(rng.normal(size=(n_pods, 6, 3)),
+                                 jnp.float32)},
+        "bias": jnp.asarray(rng.normal(size=(n_pods, 3)), jnp.float32),
+    }
+
+
+# ------------------------------------------------------------- round trips
+
+
+def test_save_restore_roundtrip_same_size(tmp_path):
+    tree = _tree(3)
+    ckpt.save(str(tmp_path), tree, step=17, metadata={"model": "t"})
+    like = jax.tree.map(jnp.zeros_like, tree)
+    out, step = ckpt.restore(str(tmp_path), like)
+    assert step == 17
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_manifest_contents(tmp_path):
+    tree = _tree(2)
+    ckpt.save(str(tmp_path), tree, step=5, metadata={"pods": 2})
+    m = ckpt.load_manifest(str(tmp_path))
+    assert m["step"] == 5
+    assert m["metadata"] == {"pods": 2}
+    assert set(m["keys"]) == {"w", "opt/m", "bias"}
+    assert all(d == "float32" for d in m["dtypes"])
+
+
+def test_bf16_leaves_roundtrip_via_fp32(tmp_path):
+    """bf16 stores upcast (lossless) and restores back to bf16 exactly."""
+    tree = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(2, 8)),
+                             jnp.bfloat16)}
+    ckpt.save(str(tmp_path), tree, step=1)
+    out, _ = ckpt.restore(str(tmp_path), jax.tree.map(jnp.zeros_like, tree))
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(tree["w"], np.float32),
+                                  np.asarray(out["w"], np.float32))
+
+
+def test_same_size_roundtrip_with_pod_resize_flag(tmp_path):
+    """pod_resize on a matching-size restore is a no-op, any mode."""
+    tree = _tree(3)
+    ckpt.save(str(tmp_path), tree, step=2)
+    like = jax.tree.map(jnp.zeros_like, tree)
+    for mode in ("mean", "clone", "drop"):
+        out, _ = ckpt.restore(str(tmp_path), like, pod_resize=mode)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------- grow paths
+
+
+def test_grow_mean_seeds_joiners_with_mean_replica(tmp_path):
+    tree = _tree(2)
+    ckpt.save(str(tmp_path), tree, step=3)
+    like = jax.tree.map(
+        lambda x: jnp.zeros((4,) + x.shape[1:], x.dtype), tree)
+    out, _ = ckpt.restore(str(tmp_path), like, pod_resize="mean")
+    for old, new in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        old, new = np.asarray(old), np.asarray(new)
+        assert new.shape[0] == 4
+        np.testing.assert_array_equal(new[:2], old)       # survivors exact
+        want = old.astype(np.float32).mean(axis=0)
+        np.testing.assert_allclose(new[2], want, rtol=1e-6)
+        np.testing.assert_array_equal(new[2], new[3])     # all joiners alike
+        # the global parameter mean is preserved by mean-seeding
+        np.testing.assert_allclose(new.mean(axis=0), want, rtol=1e-6)
+
+
+def test_grow_clone_seeds_joiners_with_pod0(tmp_path):
+    tree = _tree(2)
+    ckpt.save(str(tmp_path), tree, step=3)
+    like = jax.tree.map(
+        lambda x: jnp.zeros((3,) + x.shape[1:], x.dtype), tree)
+    out, _ = ckpt.restore(str(tmp_path), like, pod_resize="clone")
+    for old, new in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(new)[2],
+                                      np.asarray(old)[0])
+
+
+def test_grow_drop_refuses(tmp_path):
+    tree = _tree(2)
+    ckpt.save(str(tmp_path), tree, step=0)
+    like = jax.tree.map(
+        lambda x: jnp.zeros((4,) + x.shape[1:], x.dtype), tree)
+    with pytest.raises(ValueError, match="cannot grow"):
+        ckpt.restore(str(tmp_path), like, pod_resize="drop")
+
+
+# ----------------------------------------------------------- shrink paths
+
+
+def test_shrink_mean_preserves_global_mean(tmp_path):
+    tree = _tree(4)
+    ckpt.save(str(tmp_path), tree, step=9)
+    like = jax.tree.map(
+        lambda x: jnp.zeros((2,) + x.shape[1:], x.dtype), tree)
+    out, step = ckpt.restore(str(tmp_path), like, pod_resize="mean")
+    assert step == 9
+    for old, new in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        old, new = np.asarray(old, np.float32), np.asarray(new, np.float32)
+        assert new.shape[0] == 2
+        # survivors shifted so their mean equals the old global mean:
+        # departed pods' progress is re-averaged in, not discarded
+        np.testing.assert_allclose(new.mean(axis=0), old.mean(axis=0),
+                                   rtol=1e-5, atol=1e-6)
+        # and the shift is rigid (pairwise differences survive exactly)
+        np.testing.assert_allclose(new[0] - new[1], old[0] - old[1],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_shrink_drop_keeps_first_pods_verbatim(tmp_path):
+    tree = _tree(4)
+    ckpt.save(str(tmp_path), tree, step=0)
+    like = jax.tree.map(
+        lambda x: jnp.zeros((2,) + x.shape[1:], x.dtype), tree)
+    for mode in ("drop", "clone"):   # both shrink by plain truncation
+        out, _ = ckpt.restore(str(tmp_path), like, pod_resize=mode)
+        for old, new in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(new),
+                                          np.asarray(old)[:2])
+
+
+# ---------------------------------------------------------- refusal paths
+
+
+def test_restore_without_pod_resize_refuses_mismatch(tmp_path):
+    tree = _tree(2)
+    ckpt.save(str(tmp_path), tree, step=0)
+    like = jax.tree.map(
+        lambda x: jnp.zeros((3,) + x.shape[1:], x.dtype), tree)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore(str(tmp_path), like)
+
+
+def test_restore_refuses_trailing_dim_mismatch(tmp_path):
+    """pod_resize covers ONLY the leading dim: a trailing-dim change is a
+    different model and must refuse, not silently resize."""
+    tree = {"w": jnp.zeros((2, 6, 3))}
+    ckpt.save(str(tmp_path), tree, step=0)
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore(str(tmp_path), {"w": jnp.zeros((4, 6, 5))},
+                     pod_resize="mean")
+
+
+def test_restore_refuses_unknown_mode_and_missing_leaf(tmp_path):
+    tree = _tree(2)
+    ckpt.save(str(tmp_path), tree, step=0)
+    with pytest.raises(ValueError, match="unknown pod_resize"):
+        ckpt.restore(str(tmp_path), tree, pod_resize="median")
+    like = dict(tree)
+    like["extra"] = jnp.zeros((2, 3))
+    with pytest.raises(KeyError, match="extra"):
+        ckpt.restore(str(tmp_path), like)
+
+
+# ------------------------------------- restore into a different topology
+
+
+def _loss(params, batch):
+    pred = batch["x"] @ params["w"] + params["bias"]
+    return jnp.mean((pred - batch["y"]) ** 2), {}
+
+
+def _init(key):
+    return {"w": jax.random.normal(key, (8, 4)) * 0.1,
+            "bias": jnp.zeros((4,))}
+
+
+def _drive(tr, st, n_steps, n_pods, seed=3):
+    rng = np.random.default_rng(seed)
+    for step in range(n_steps):
+        x = rng.normal(size=(n_pods, 16, 8)).astype(np.float32)
+        y = (x[..., :4] * 0.5).astype(np.float32)
+        st, _ = tr.train_step(st, {"x": jnp.asarray(x),
+                                   "y": jnp.asarray(y)})
+        st = tr.maybe_sync(st, step, model_mb=0.001)
+    return st
+
+
+def test_restore_into_different_topology(tmp_path):
+    """The elasticity path end-to-end: params trained and checkpointed
+    under a flat 2-pod ring restore into a 3-pod run aggregating through
+    a hierarchical (2-region tree) transport — pod_resize grows the
+    stack, the new topology's transport ships it, and training proceeds
+    with the restored values."""
+    sync = SyncConfig("asgd_ga", 2, compress_topk=0.2, quantize_int8=True,
+                      error_feedback=True, codec_block=128)
+    tr2 = Trainer(_loss, _init,
+                  TrainerConfig(n_pods=2, optimizer="sgd", lr=0.05,
+                                sync=sync))
+    st2 = _drive(tr2, tr2.init_state(jax.random.key(0)), 4, 2)
+    ckpt.save(str(tmp_path), st2.params, step=4,
+              metadata={"pods": 2, "topology": "ring"})
+
+    spec = TopologySpec.from_regions(["sh", "sh", "cq"], kind="tree")
+    hier = HierarchicalTransport(
+        spec, BandwidthTrace((0.0,), (100.0,)), wan=WANConfig(seed=0))
+    tr3 = Trainer(_loss, _init,
+                  TrainerConfig(n_pods=3, optimizer="sgd", lr=0.05,
+                                sync=sync),
+                  transport=hier)
+    st3 = tr3.init_state(jax.random.key(1))
+    restored, step = ckpt.restore(str(tmp_path), st3.params,
+                                  pod_resize="mean")
+    assert step == 4
+    old = np.asarray(st2.params["w"], np.float32)
+    new = np.asarray(restored["w"], np.float32)
+    assert new.shape[0] == 3
+    np.testing.assert_array_equal(new[:2], old)
+    np.testing.assert_allclose(new.mean(axis=0), old.mean(axis=0),
+                               rtol=1e-5, atol=1e-6)
+    # training continues through the hierarchical transport from the
+    # restored values
+    st3 = st3._replace(params=restored)
+    st3 = _drive(tr3, st3, 4, 3)
+    assert np.isfinite(np.asarray(st3.params["w"])).all()
+    assert len(hier.records) > 0
+
+
+def test_restore_same_values_across_topologies(tmp_path):
+    """A checkpoint is topology-agnostic by construction: restoring the
+    same file under flat and hierarchical trainers yields bit-identical
+    parameter stacks (topology lives in the transport, not the state)."""
+    sync = SyncConfig("asgd_ga", 2, compress_topk=0.2, quantize_int8=True,
+                      error_feedback=True, codec_block=128)
+    tr = Trainer(_loss, _init,
+                 TrainerConfig(n_pods=3, optimizer="sgd", lr=0.05,
+                               sync=sync))
+    st = _drive(tr, tr.init_state(jax.random.key(0)), 4, 3)
+    ckpt.save(str(tmp_path), st.params, step=4)
+    like = jax.tree.map(jnp.zeros_like, st.params)
+    flat, _ = ckpt.restore(str(tmp_path), like)
+    hier, _ = ckpt.restore(str(tmp_path), like, pod_resize="mean")
+    for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(hier)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -44,7 +44,7 @@ SYNC_FLAGS = (
     "--error-feedback", "--overlap-chunks", "--codec-block",
     "--bucket-policy", "--bucket-override", "--bucket-patterns",
     "--adaptive-sync", "--ef-guard", "--wan-trace", "--step-time",
-    "--transport",
+    "--transport", "--topology",
 )
 LAUNCHER = "src/repro/launch/train.py"
 
