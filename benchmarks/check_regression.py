@@ -18,7 +18,11 @@ checker makes them a *gate*, not a log.  Checks, cheapest first:
   records the planner's interleaved (per-link observation, decide) event
   stream the same way; a fresh ``LinkBeliefs`` + ``TopologyPlanner`` must
   reproduce its shape decisions exactly, reason strings (with embedded
-  cost estimates) included.
+  cost estimates) included.  ``BENCH_faults.json`` records every faulted
+  sync round's (step, expected transfer time) inputs and resolved
+  outcome; re-running the committed FaultPlan + RetryPolicy through
+  ``resolve_round`` must reproduce the retry/degrade/crash decision
+  stream float-for-float.
 - **Banded** (deterministic sims, 5%): the elasticity benchmark's
   speedup / cost-reduction / traffic-reduction (discrete-event simulator,
   seeded RNG).
@@ -289,6 +293,43 @@ def check_topology_replay(gate: Gate, base: Dict) -> None:
                    f"baseline {want} vs recomputed {got}")
 
 
+def check_faults_replay(gate: Gate, base: Dict) -> None:
+    """Replay the chaos transport's fault decisions: the baseline records
+    every faulted round's inputs (step, expected transfer time at the
+    then-current belief) and its resolved outcome.  Re-running the same
+    committed FaultPlan + RetryPolicy through ``resolve_round`` — the one
+    pure law the live ChaosTransport, the fault bench and this gate share
+    — must reproduce every recorded (kinds, attempts, retry bill,
+    slowdown, crashed set) exactly, floats included, after the JSON
+    round-trip.  This pins the whole fault decision path (event schedule
+    -> retry/backoff law -> degraded-membership call) deterministically,
+    without re-training."""
+    from repro.core.faults import FaultEvent, FaultPlan, resolve_round
+    from repro.core.wan import RetryPolicy
+
+    scen = base["scenario"]
+    plan = FaultPlan(events=tuple(FaultEvent(**e)
+                                  for e in scen["fault_events"]),
+                     seed=scen["seed"])
+    policy = RetryPolicy(**scen["retry_policy"])
+    for name, run in base["variants"].items():
+        replayed, recorded = [], []
+        for o in run["outcomes"]:
+            out = resolve_round(plan, policy, o["step"], o["expected_s"])
+            replayed.append([o["step"], list(out.kinds), out.attempts,
+                             out.extra_s, out.slowdown, list(out.crashed)])
+            recorded.append([o["step"], o["kinds"], o["attempts"],
+                             o["extra_s"], o["slowdown"], o["crashed"]])
+        _check_decisions(gate, f"faults.replay.{name}", replayed, recorded)
+    tol, ntl = base["variants"]["tolerant"], base["variants"]["no_tolerance"]
+    gate.check("faults.tolerant_reaches_no_tolerance_fails",
+               bool(tol["reached_target"]
+                    and (ntl["diverged"] or not ntl["reached_target"])),
+               f"tolerant t_target {tol['time_to_target_s']}s vs "
+               f"no-tolerance reached={ntl['reached_target']} "
+               f"diverged={ntl['diverged']}")
+
+
 # ----------------------------------------------------------- banded checks
 
 
@@ -357,6 +398,7 @@ def main(argv: Sequence[str] = None) -> int:
         "wan_codec": _load("BENCH_wan_codec.json"),
         "elasticity": _load("BENCH_elasticity.json"),
         "autotune": _load("BENCH_autotune.json"),
+        "faults": _load("BENCH_faults.json"),
     }
     gate = Gate()
     check_acceptance_flags(gate, baselines)
@@ -365,6 +407,7 @@ def main(argv: Sequence[str] = None) -> int:
     check_measured_replay(gate, baselines["autotune"])
     check_bucketed_replay(gate, baselines["autotune"])
     check_topology_replay(gate, baselines["autotune"])
+    check_faults_replay(gate, baselines["faults"])
     check_elasticity_sim(gate, baselines["elasticity"])
     check_encode_speedup(gate, baselines["wan_codec"])
 

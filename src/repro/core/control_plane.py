@@ -287,7 +287,7 @@ def reschedule(plan: TrainingPlan,
 
 
 EVENT_KINDS = ("cloud_joined", "cloud_left", "bandwidth_changed",
-               "straggler_detected")
+               "straggler_detected", "pod_crashed")
 
 
 @dataclass(frozen=True)
@@ -306,6 +306,20 @@ class CloudEvent:
             raise ValueError(f"unknown event kind {self.kind!r}")
 
 
+class EventDeliveryError(RuntimeError):
+    """One or more subscribers raised during ``EventBus.publish``; every
+    subscriber still saw the event first.  ``errors`` holds the
+    ``(subscriber, exception)`` pairs in delivery order."""
+
+    def __init__(self, event: "CloudEvent", errors: List[Tuple[Callable,
+                                                               Exception]]):
+        self.event = event
+        self.errors = errors
+        super().__init__(
+            f"{len(errors)} subscriber(s) failed on {event.kind!r}: "
+            + "; ".join(repr(e) for _, e in errors))
+
+
 class EventBus:
     """Tiny in-process pub/sub: the WAN monitor / health checker side of the
     paper's communicator publishes, the ElasticityController subscribes."""
@@ -320,10 +334,25 @@ class EventBus:
         self._subs.setdefault(kind, []).append(fn)
 
     def publish(self, event: CloudEvent) -> List:
+        """Deliver ``event`` to every subscriber, then surface errors.
+
+        Delivery is isolated: one raising subscriber no longer aborts
+        delivery to every later one (on a ``pod_crashed`` that would mean
+        part of the control plane never hears about the crash).  A single
+        collected error re-raises as itself after the fan-out completes;
+        multiple raise one :class:`EventDeliveryError` carrying them all."""
         self.history.append(event)
-        out = []
+        out: List = []
+        errors: List[Tuple[Callable, Exception]] = []
         for fn in self._subs.get(event.kind, []) + self._subs.get("*", []):
-            out.append(fn(event))
+            try:
+                out.append(fn(event))
+            except Exception as e:   # noqa: BLE001 — isolation is the point
+                errors.append((fn, e))
+        if errors:
+            if len(errors) == 1:
+                raise errors[0][1]
+            raise EventDeliveryError(event, errors)
         return out
 
 
@@ -401,7 +430,9 @@ class ElasticityController:
             if event.resources is None:
                 raise ValueError("cloud_joined event needs resources")
             self.clouds[event.resources.region] = event.resources
-        elif event.kind == "cloud_left":
+        elif event.kind in ("cloud_left", "pod_crashed"):
+            # a crash is an involuntary departure: same re-matching as a
+            # graceful leave — the region's resources are gone either way
             if event.region not in self.clouds:
                 raise KeyError(f"unknown region {event.region!r}")
             if len(self.clouds) == 1:

@@ -771,6 +771,75 @@ def _decode_bucket(cfg: SyncConfig, chunks: Sequence[ChunkPayload],
     return jnp.concatenate(parts, axis=1)
 
 
+class TransferFailed(RuntimeError):
+    """One bucket's ring transfer failed (timeout, drop, link fault) —
+    retryable: :func:`ship_sync_payloads` re-ships the bucket up to the
+    transport's ``retry_policy.max_retries`` before declaring the peer
+    unreachable."""
+
+    def __init__(self, bucket: str, attempt: int, reason: str = "",
+                 pod: Optional[int] = None):
+        self.bucket, self.attempt = bucket, attempt
+        self.reason, self.pod = reason, pod
+        super().__init__(
+            f"transfer of bucket {bucket!r} failed on attempt {attempt}"
+            + (f": {reason}" if reason else ""))
+
+
+class CorruptPayloadError(TransferFailed):
+    """Shipped wire chunks failed checksum verification — retryable (a
+    re-send re-reads the sender's intact buffer)."""
+
+
+class PodUnreachableError(RuntimeError):
+    """Retries exhausted (or a pod crashed mid-round): the peer missed the
+    sync barrier.  The round either completes degraded over the surviving
+    membership mask (``finish_codec_sync(..., alive=...)``) or rolls back
+    to the last sync barrier checkpoint — the launcher decides."""
+
+    def __init__(self, pod: Optional[int] = None,
+                 step: Optional[int] = None, bucket: str = ""):
+        self.pod, self.step, self.bucket = pod, step, bucket
+        where = f"pod {pod}" if pod is not None else "peer"
+        at = f" at step {step}" if step is not None else ""
+        via = f" (bucket {bucket!r})" if bucket else ""
+        super().__init__(f"{where} unreachable{at}{via}: retries exhausted")
+
+
+def chunk_checksum_rows(chunks: Sequence[ChunkPayload]) -> Tuple[int, ...]:
+    """Per-pod-row CRC32 over one bucket's wire chunks (q ‖ idx ‖ scales
+    bytes, chunk by chunk) — the wire-format integrity word the
+    fault-tolerant ship path verifies after a transfer.  Host-side: pulls
+    device buffers, so it only runs on host-seam transports (never inside
+    a jit trace)."""
+    import zlib
+
+    n_pods = int(chunks[0].q.shape[0])
+    out = []
+    for p in range(n_pods):
+        crc = 0
+        for c in chunks:
+            for part in (c.q, c.idx, c.scales):
+                crc = zlib.crc32(
+                    np.ascontiguousarray(np.asarray(part[p])).tobytes(), crc)
+        out.append(crc)
+    return tuple(out)
+
+
+def verify_shipment(name: str, sent_crc: Sequence[int],
+                    shipped: Sequence[ChunkPayload], shift: int) -> None:
+    """Check a shipped bucket against pre-ship checksums: under the ring
+    permute, shipped row ``p`` must be sender row ``(p - shift) % n``
+    bit-for-bit.  Raises :class:`CorruptPayloadError` naming the first
+    mismatching receiver row."""
+    n = len(sent_crc)
+    got = chunk_checksum_rows(shipped)
+    for p in range(n):
+        if got[p] != sent_crc[(p - shift) % n]:
+            raise CorruptPayloadError(
+                name, 0, f"checksum mismatch on receiver row {p}", pod=p)
+
+
 class InlineRingShip:
     """The default transport: ring-permute each wire part in place, traced
     into the enclosing jit (-> one collective-permute per part under SPMD).
@@ -839,22 +908,65 @@ def ship_sync_payloads(cfg: SyncConfig,
     """Emit every bucket's wire chunks to the transport's one-peer ring
     send.  ``transport=None`` is the in-graph inline ring (bit-exact
     legacy path); a host-seam transport executes + times each bucket's
-    transfer here."""
+    transfer here.
+
+    Fault tolerance rides the transport's optional attributes: a
+    ``retry_policy`` (:class:`repro.core.wan.RetryPolicy`) bounds how many
+    :class:`TransferFailed` raises per bucket are retried before
+    :class:`PodUnreachableError`; ``verify_checksums`` (host-seam only)
+    checksums each bucket pre-ship and verifies the shipped rows, so a
+    corrupted payload is caught and re-shipped instead of decoded into
+    the parameters.  Transports without these attributes get the original
+    single-attempt path unchanged."""
     ship = transport if transport is not None else _INLINE_RING
     wire_mb = wire_mb or {}
-    return {name: ship.ship_bucket(name, bchunks, cfg.peer_shift,
-                                   wire_mb.get(name, 0.0))
-            for name, bchunks in chunks.items()}
+    in_graph = getattr(ship, "in_graph", True)
+    verify = bool(getattr(ship, "verify_checksums", False)) and not in_graph
+    policy = getattr(ship, "retry_policy", None)
+    max_retries = int(policy.max_retries) if policy is not None else 0
+    note_retry = getattr(ship, "note_retry", None)
+    out: Dict[str, Tuple[ChunkPayload, ...]] = {}
+    for name, bchunks in chunks.items():
+        sent_crc = chunk_checksum_rows(bchunks) if verify else None
+        attempt = 0
+        while True:
+            try:
+                shipped = ship.ship_bucket(name, bchunks, cfg.peer_shift,
+                                           wire_mb.get(name, 0.0))
+                if verify:
+                    verify_shipment(name, sent_crc, shipped, cfg.peer_shift)
+                break
+            except TransferFailed as err:
+                attempt += 1
+                if attempt > max_retries:
+                    raise PodUnreachableError(pod=err.pod,
+                                              bucket=name) from err
+                if note_retry is not None:
+                    note_retry(name, attempt, err)
+        out[name] = shipped
+    return out
 
 
 def finish_codec_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
                       payloads: SyncPayloads,
                       shipped: Mapping[str, Tuple[ChunkPayload, ...]],
-                      lr: Union[jnp.ndarray, float] = 1.0
+                      lr: Union[jnp.ndarray, float] = 1.0,
+                      alive: Optional[jnp.ndarray] = None
                       ) -> Tuple[Pytree, SyncState]:
     """The codec round's tail (jit-able): decode the shipped chunks, apply
     the receiver-side SGD update, and roll the EF residual + per-bucket
-    telemetry into the new :class:`SyncState`."""
+    telemetry into the new :class:`SyncState`.
+
+    ``alive`` (``(n_pods,)`` 1/0 mask, default all-alive) is the degraded
+    round: a peer update is applied only where both the receiver and its
+    ring sender are alive; a sender whose message never arrived (it died,
+    or its receiver did) keeps the FULL message as its EF residual, so
+    nothing sent into a dead link is lost — it redelivers next round, and
+    a later pod shrink replay-accumulates it sum-preservingly
+    (:func:`resize_sync_state`).  Undelivered rows' ``msg_norm`` /
+    ``resid_norm`` zero out, which the adaptive controllers already read
+    as "no reading yet" — a degraded round is evidence-free, never a
+    spurious ef-guard trip."""
     layout = bucket_layout(cfg, state.ga_buffer)
     peer_parts = []
     for g, name in enumerate(layout.names):
@@ -865,6 +977,14 @@ def finish_codec_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
         peer_parts.append(_decode_bucket(cfg.for_bucket(name),
                                          shipped[name], size))
     peer_flat = jnp.concatenate(peer_parts, axis=1)
+    applied = delivered = None
+    if alive is not None:
+        alive = jnp.asarray(alive, jnp.float32)
+        # receiver p applies iff p and its ring sender (p - shift) are alive
+        applied = alive * jnp.roll(alive, cfg.peer_shift)
+        # sender p's message arrived iff p and its receiver (p + shift) are
+        delivered = alive * jnp.roll(alive, -cfg.peer_shift)
+        peer_flat = peer_flat * applied[:, None]
     peer = _unpack_stacked(peer_flat, state.ga_buffer, layout)
     # per-pod, per-bucket message norms — with EF also the residual norms;
     # their ratio is the convergence signal the adaptive controllers guard
@@ -874,7 +994,13 @@ def finish_codec_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
     new_resid, resid_norm = state.ef_residual, state.resid_norm
     if cfg.error_feedback:
         new_resid = payloads.flat - payloads.local
+        if delivered is not None:
+            new_resid = jnp.where(delivered[:, None] > 0, new_resid,
+                                  payloads.flat)
         resid_norm = _bucket_norms(new_resid, layout)
+    if delivered is not None:
+        msg_norm = msg_norm * delivered[:, None]
+        resid_norm = resid_norm * delivered[:, None]
     scale = jnp.asarray(lr, jnp.float32) * cfg.ga_lr_scale
     params = jax.tree.map(
         lambda p, g: (p.astype(jnp.float32) - scale * g).astype(p.dtype),

@@ -95,7 +95,16 @@ class MeasuredWanProbe:
         self.last_mbps: Optional[float] = None
 
     def observe_transfer(self, payload_mb: float, seconds: float) -> WanProbe:
-        """Fold one (wire MB, seconds) sample into the bandwidth belief."""
+        """Fold one (wire MB, seconds) sample into the bandwidth belief.
+
+        Degenerate samples — no bytes moved (an empty, skipped or fully
+        degraded round) or a non-positive duration — are dropped, not
+        folded: ``mbps -> ~0`` on them, and the estimator's cliff-snap
+        would read that as a collapsed link and wedge the belief (and the
+        autotuner with it) at the floor over a round that never touched
+        the network."""
+        if payload_mb <= 0.0 or seconds <= 0.0:
+            return self.probe
         mbps = payload_mb * 8.0 / max(seconds, _EPS)
         self.last_mbps = mbps
         self.n_observations += 1

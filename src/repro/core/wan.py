@@ -119,10 +119,16 @@ class SimEvent:
 
     Kinds: ``bandwidth_changed`` (new WAN bandwidth), ``cloud_left`` (region
     departs, resources released), ``cloud_joined`` (``cloud`` payload comes
-    online), ``slowdown`` (region's iter time scaled by ``factor``), and
+    online), ``slowdown`` (region's iter time scaled by ``factor``),
     ``reconfig`` (elasticity engine output: swap in a new cloud set /
     ``SyncConfig`` after a ``pause_s`` reconfiguration stall — checkpoint
-    re-stack + re-plan cost — charged to every active region)."""
+    re-stack + re-plan cost — charged to every active region),
+    ``link_failed`` (the WAN link drops transfers for ``duration_s``: each
+    sync round inside the window pays ``n_failures`` failed attempts of
+    retry/backoff wall-clock per :func:`retry_schedule`, and the retried
+    bytes bill at full cost), and ``pod_crashed`` (region dies mid-run:
+    departs like ``cloud_left``, and every survivor stalls ``pause_s`` for
+    the barrier rollback + re-stack — billed as reconfig time)."""
 
     time_s: float
     kind: str                               # see docstring
@@ -133,9 +139,11 @@ class SimEvent:
     clouds: Optional[Sequence[SimCloud]] = None   # reconfig payload
     sync: Optional[SyncConfig] = None             # reconfig payload
     pause_s: float = 0.0
+    duration_s: float = 0.0                 # link_failed: outage window
+    n_failures: int = 1                     # link_failed: attempts per round
 
     _KINDS = ("bandwidth_changed", "cloud_left", "cloud_joined",
-              "slowdown", "reconfig")
+              "slowdown", "reconfig", "link_failed", "pod_crashed")
 
     def __post_init__(self):
         if self.kind not in self._KINDS:
@@ -202,6 +210,60 @@ def _transfer_time(size_mb: float, bandwidth_mbps: float, wan: WANConfig,
 transfer_time = _transfer_time
 
 
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry with exponential backoff for one WAN transfer.
+
+    The shared law between the fault-tolerant transports
+    (``repro.core.faults.ChaosTransport``), the host-seam ship loop
+    (``sync.ship_sync_payloads``) and the DES failure events, so every
+    layer bills a failed attempt identically.  A transfer running
+    ``timeout_factor``× slower than the current bandwidth belief is
+    declared failed and retried after an exponentially growing backoff;
+    after ``max_retries`` failed retries the peer is declared
+    unreachable and the round degrades to the surviving membership."""
+
+    max_retries: int = 3
+    timeout_factor: float = 4.0       # belief-relative per-link timeout
+    backoff_s: float = 0.5            # first backoff pause
+    backoff_base: float = 2.0         # growth per failed attempt
+    assume_mbps: float = 100.0        # belief fallback before any sample
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.timeout_factor <= 1.0:
+            raise ValueError(
+                f"timeout_factor must be > 1 (a transfer at belief speed must "
+                f"not time out), got {self.timeout_factor}")
+        if self.backoff_s < 0 or self.backoff_base < 1.0:
+            raise ValueError(
+                f"backoff_s must be >= 0 and backoff_base >= 1, got "
+                f"backoff_s={self.backoff_s}, backoff_base={self.backoff_base}")
+        if self.assume_mbps <= 0:
+            raise ValueError(f"assume_mbps must be > 0, got {self.assume_mbps}")
+
+    def timeout_s(self, expected_s: float) -> float:
+        """Per-link timeout budget for a transfer expected to take
+        ``expected_s`` at the current belief."""
+        return expected_s * self.timeout_factor
+
+
+def retry_schedule(expected_s: float, policy: RetryPolicy,
+                   n_failures: int) -> float:
+    """Wall-clock burned by ``n_failures`` failed attempts of one transfer:
+    each attempt hangs to its timeout budget
+    (``expected_s * timeout_factor``) and then backs off exponentially
+    before the next try.  Pure math over its inputs — the DES, the chaos
+    transport and the regression replay all call this one function, so a
+    recorded retry bill replays exactly after a JSON round-trip."""
+    total = 0.0
+    for attempt in range(max(0, int(n_failures))):
+        total += policy.timeout_s(expected_s)
+        total += policy.backoff_s * policy.backoff_base ** attempt
+    return total
+
+
 def _schedule(sync: SyncConfig, model_mb: float, wan: WANConfig):
     payload = sync.payload_mb(model_mb)
     if sync.strategy == "asgd":
@@ -228,6 +290,7 @@ def simulate(
     trace: Optional[BandwidthTrace] = None,
     topology=None,
     topology_links: Optional[Mapping[Tuple[str, str], float]] = None,
+    retry: RetryPolicy = RetryPolicy(),
 ) -> SimResult:
     """Run the discrete-event timeline and return per-cloud accounting.
 
@@ -249,6 +312,15 @@ def simulate(
     defaulting to 1.0; asymmetric inter-region networks in one dict).
     Traffic bills ``payload`` per WAN hop to the originating region — the
     exact accounting ``cost.adaptive_traffic_mb(wan_legs=...)`` mirrors.
+
+    Failure events bill through ``retry`` (the same :class:`RetryPolicy`
+    law the real fault-tolerant transports use): during a ``link_failed``
+    window every flat sync round pays :func:`retry_schedule` of extra
+    wall-clock per cloud and bills the retried bytes at full cost; a
+    ``pod_crashed`` region departs like ``cloud_left`` and every survivor
+    stalls ``pause_s`` (barrier rollback + re-stack), billed as reconfig
+    time.  Failure billing models the flat ring only — hierarchical
+    rounds reroute around dead links via the topology planner instead.
     """
     rng = np.random.default_rng(wan.seed)
     if trace is not None:
@@ -288,6 +360,8 @@ def simulate(
     pending = sorted(events, key=lambda e: e.time_s)
     ev_i = 0
     n_reconfigs = 0
+    fail_until = 0.0          # link_failed outage window end (absolute time)
+    fail_n = 0                # failed attempts each round inside the window
 
     def _register(c: SimCloud) -> None:
         iter_time[c.region] = c.iter_time_s
@@ -321,6 +395,20 @@ def simulate(
                         ended[c.region] = clock[c.region]
                         del active[i]
                         break
+            elif e.kind == "link_failed":
+                fail_until = e.time_s + e.duration_s
+                fail_n = max(1, int(e.n_failures))
+            elif e.kind == "pod_crashed":
+                for i, c in enumerate(active):
+                    if c.region == e.region:
+                        _close_life(c.region, clock[c.region])
+                        ended[c.region] = clock[c.region]
+                        del active[i]
+                        break
+                # survivors stall for the barrier rollback + re-stack
+                for c in active:
+                    tl[c.region].reconfig_s += e.pause_s
+                    clock[c.region] += e.pause_s
             elif e.kind == "cloud_joined":
                 c = e.cloud
                 if any(x.region == c.region for x in active):
@@ -433,6 +521,12 @@ def simulate(
 
         for c in active:
             t = _transfer_time(payload, bandwidth, wan, rng)
+            if clock[c.region] < fail_until and fail_n > 0:
+                # failed attempts hang to the timeout budget and back off;
+                # every retried transfer bills its bytes at full cost
+                expected = payload * 8.0 / bandwidth + wan.latency_s
+                t += retry_schedule(expected, retry, fail_n)
+                tl[c.region].traffic_mb += payload * fail_n
             tl[c.region].comm_s += t
             tl[c.region].traffic_mb += payload
             # asynchronous strategies hide ``overlap`` of the transfer

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import tempfile
 import time
 from typing import Dict, Optional
 
@@ -41,9 +42,12 @@ from repro.core.autotune import (AdaptiveSyncController, BucketStats,
 from repro.core.control_plane import (CloudEvent, ElasticityController,
                                       EventBus, ReconfigPlan,
                                       TrainingRequest, build_training_plan)
+from repro.core.faults import (FAULT_KINDS, ChaosTransport, FaultEvent,
+                               FaultPlan)
 from repro.core.scheduler import CloudResources, diff_plans
 from repro.core.sync import (BUCKET_CLASSES, BUCKET_POLICIES, VALUE_DTYPES,
-                             BucketOverride, BucketSpec, SyncConfig,
+                             BucketOverride, BucketSpec,
+                             PodUnreachableError, SyncConfig,
                              bucket_weights_of, is_sync_step,
                              traffic_per_step_mb)
 from repro.core.topology import (HierarchicalTransport, TopologyPlanner,
@@ -202,6 +206,118 @@ def parse_transport(spec: str, trace: Optional[BandwidthTrace],
                          emulate_mbps=kw.get("mbps"))
 
 
+def parse_faults(spec: str) -> Optional[FaultPlan]:
+    """Parse ``--faults`` into a :class:`FaultPlan` (``None`` when empty).
+
+    Comma-separated fault entries keyed to the sync step they first bite
+    at, plus an optional plan seed:
+      ``fail:x2@39``       — 2 failed attempts, then success (retried)
+      ``timeout:x6@67``    — transfer 6x slower than the bandwidth belief
+                             (>= the retry policy's timeout_factor means
+                             the attempt is declared failed and retried)
+      ``corrupt@95``       — wire bit-flip on the shipped payload (caught
+                             by the per-chunk checksums, then re-shipped)
+      ``flap:x8@119+6``    — link 8x slower for a 6-round window
+      ``crash:pod1@183``   — pod 1 dies; rounds degrade over the
+                             surviving membership until it is removed
+      ``crash:pod1@183:rollback`` — mid-round crash: the run first rolls
+                             back to the last sync-barrier snapshot
+      ``seed=3``           — seed of the plan's deterministic stream
+    """
+    if not spec:
+        return None
+    events, seed = [], 0
+    for entry in spec.split(","):
+        entry = entry.strip()
+        if not entry:
+            continue
+        if entry.startswith("seed="):
+            val = entry.partition("=")[2]
+            try:
+                seed = int(val)
+            except ValueError:
+                raise ValueError(
+                    f"--faults: seed must be an integer, got {val!r}"
+                ) from None
+            continue
+        body, at_sep, tail = entry.partition("@")
+        if not at_sep:
+            raise ValueError(
+                f"--faults entry {entry!r}: missing '@step' — every fault "
+                f"is keyed to the sync step it first bites at")
+        kind, _, arg = body.partition(":")
+        if kind not in FAULT_KINDS:
+            raise ValueError(
+                f"--faults entry {entry!r}: unknown kind {kind!r} "
+                f"(kinds: {', '.join(FAULT_KINDS)})")
+        step_part, _, mode = tail.partition(":")
+        step_s, plus, dur_s = step_part.partition("+")
+        try:
+            step = int(step_s)
+        except ValueError:
+            raise ValueError(
+                f"--faults entry {entry!r}: step must be an integer, "
+                f"got {step_s!r}") from None
+        kw = {}
+        if plus:
+            if kind != "flap":
+                raise ValueError(
+                    f"--faults entry {entry!r}: '+duration' only applies "
+                    f"to flap (a window of slowed rounds)")
+            try:
+                kw["duration"] = int(dur_s)
+            except ValueError:
+                raise ValueError(
+                    f"--faults entry {entry!r}: duration must be an "
+                    f"integer number of rounds, got {dur_s!r}") from None
+        if mode:
+            if kind != "crash":
+                raise ValueError(
+                    f"--faults entry {entry!r}: trailing {':' + mode!r} — "
+                    f"a recovery mode only applies to crash")
+            kw["mode"] = mode       # FaultEvent validates the mode name
+        if kind in ("timeout", "flap"):
+            if not arg.startswith("x"):
+                raise ValueError(
+                    f"--faults entry {entry!r}: {kind} needs a slowdown "
+                    f"factor 'xF' (e.g. {kind}:x6@{step}), got {arg!r}")
+            try:
+                kw["factor"] = float(arg[1:])
+            except ValueError:
+                raise ValueError(
+                    f"--faults entry {entry!r}: factor must be a number, "
+                    f"got {arg[1:]!r}") from None
+        elif kind == "fail":
+            if arg:
+                if not arg.startswith("x"):
+                    raise ValueError(
+                        f"--faults entry {entry!r}: fail takes an attempt "
+                        f"count 'xN' (e.g. fail:x2@{step}), got {arg!r}")
+                try:
+                    kw["attempts"] = int(arg[1:])
+                except ValueError:
+                    raise ValueError(
+                        f"--faults entry {entry!r}: attempts must be an "
+                        f"integer, got {arg[1:]!r}") from None
+        elif kind == "crash":
+            if not arg.startswith("pod"):
+                raise ValueError(
+                    f"--faults entry {entry!r}: crash needs the dying pod "
+                    f"'podP' (e.g. crash:pod1@{step}), got {arg!r}")
+            try:
+                kw["pod"] = int(arg[3:])
+            except ValueError:
+                raise ValueError(
+                    f"--faults entry {entry!r}: pod must be an integer "
+                    f"index, got {arg[3:]!r}") from None
+        elif arg:                   # corrupt takes no argument
+            raise ValueError(
+                f"--faults entry {entry!r}: corrupt takes no argument "
+                f"(the bit-flip lands on the shipped payload itself)")
+        events.append(FaultEvent(kind=kind, step=step, **kw))
+    return FaultPlan(events=tuple(events), seed=seed)
+
+
 def preset_100m():
     """~100M-parameter dense decoder for the end-to-end driver."""
     return dense("dense-100m", n_layers=8, d_model=768, n_heads=12,
@@ -302,6 +418,20 @@ def main(argv=None):
                          "--adaptive-sync + sim/mesh the controller runs "
                          "from measured transfer times only — no trace is "
                          "wired to it")
+    ap.add_argument("--faults", default="",
+                    help="seeded chaos schedule keyed to sync steps, e.g. "
+                         "'fail:x2@39,timeout:x6@67,corrupt@95,"
+                         "flap:x8@119+6,crash:pod1@183,seed=0' "
+                         "(see parse_faults); wraps the transport in a "
+                         "ChaosTransport with bounded retry/backoff, "
+                         "per-chunk checksum verification and degraded "
+                         "rounds over the surviving membership")
+    ap.add_argument("--no-tolerance", action="store_true",
+                    help="with --faults: disable checksums, retries and "
+                         "degraded rounds — the baseline the fault-"
+                         "tolerant path is measured against (corruption "
+                         "decodes into the parameters; a crashed peer "
+                         "hangs every round)")
     ap.add_argument("--topology", default="ring",
                     choices=["ring", "tree", "auto"],
                     help="aggregation topology over the plan's regions: "
@@ -411,6 +541,33 @@ def main(argv=None):
               f"{type(transport).__name__}"
               + (f", {jax.device_count()} devices"
                  if isinstance(transport, MeshTransport) else ""))
+    fault_plan = parse_faults(args.faults)
+    if args.no_tolerance and fault_plan is None:
+        raise SystemExit(
+            "--no-tolerance is a --faults baseline switch: it picks how "
+            "injected faults are (not) handled, so it needs --faults")
+    if fault_plan is not None:
+        if transport is None:
+            raise SystemExit(
+                "--faults needs a billing transport to inject into: add "
+                "--transport sim (with --wan-trace) or --transport mesh")
+        if fault_plan.needs_host_seam and not sync_cfg.uses_codec:
+            raise SystemExit(
+                "--faults with fail/timeout/corrupt/crash events injects "
+                "at the host-seam codec ship: add --compress-topk F --int8")
+        bad = next((ev for ev in fault_plan.events
+                    if ev.kind == "crash" and ev.pod >= args.pods), None)
+        if bad is not None:
+            raise SystemExit(
+                f"--faults: crash pod {bad.pod} is out of range for "
+                f"--pods {args.pods} (pods are 0..{args.pods - 1})")
+        transport = ChaosTransport(transport, fault_plan,
+                                   tolerate=not args.no_tolerance)
+        print(f"[faults] {len(fault_plan.events)} scheduled events, seed "
+              f"{fault_plan.seed}, "
+              f"{'tolerant' if transport.tolerate else 'NO-TOLERANCE'}: "
+              f"retry budget {transport.retry_policy.max_retries}, "
+              f"timeout {transport.retry_policy.timeout_factor}x belief")
     tcfg = TrainerConfig(n_pods=args.pods, optimizer=args.optimizer,
                          lr=args.lr, sync=sync_cfg)
     trainer = Trainer(lambda p, b: fns.loss_fn(p, cfg, b),
@@ -446,7 +603,12 @@ def main(argv=None):
     # AdaptiveSyncController (retune the codec)
     bus = EventBus()
     events = parse_events(args.events)
-    controller = ElasticityController(plan, bus=bus) if events else None
+    # crashes are involuntary cloud_left events: the elasticity controller
+    # must be live to re-match the surviving pods when one dies
+    chaos = transport if isinstance(transport, ChaosTransport) else None
+    need_elastic = bool(events) or (chaos is not None and chaos.tolerate
+                                    and chaos.plan.has_crashes)
+    controller = ElasticityController(plan, bus=bus) if need_elastic else None
     tuner = None
     # measured mode: the transport's probe owns the bandwidth belief —
     # the controller reads it and nothing else (no trace, no bus events)
@@ -501,8 +663,21 @@ def main(argv=None):
     # trainer (pending_base), not against the latest event's predecessor
     pending_base = None     # live plan when the first un-applied event fired
     pending_event = None
+    pending_crashes = []    # crashed pods awaiting removal at a barrier
     n_reconfigs = 0
     n_retunes = 0
+    n_rollbacks = 0
+
+    # mid-round crash recovery: keep a snapshot of the FULL train state at
+    # the last completed sync barrier — a rollback-mode crash unwinds to it
+    barrier_dir = None
+    if chaos is not None and chaos.tolerate and chaos.plan.has_crashes:
+        barrier_dir = (f"{args.ckpt_dir}/fault_barrier" if args.ckpt_dir
+                       else tempfile.mkdtemp(prefix="fault_barrier_"))
+
+    if barrier_dir is not None:
+        ckpt.save(barrier_dir, state, step=0,
+                  metadata={"model": name, "pods": trainer.cfg.n_pods})
 
     # ------------------------------------------------------------- loop
     t0 = time.time()
@@ -557,7 +732,22 @@ def main(argv=None):
                       f" MB{detail})")
 
         state, metrics = trainer.train_step(state, batches(step))
-        state = trainer.maybe_sync(state, step, model_mb)
+        try:
+            state = trainer.maybe_sync(state, step, model_mb)
+        except PodUnreachableError as crash:
+            # mid-round crash: progress since the barrier includes the dead
+            # pod's replica and cannot be re-stacked — restore the snapshot
+            # (the crash then degrades rounds until the pod is removed)
+            state, _ = ckpt.restore(barrier_dir, like=state)
+            n_rollbacks += 1
+            print(f"[faults] pod {crash.pod} unreachable mid-round at "
+                  f"step {step + 1}: rolled back to the last sync barrier")
+        else:
+            if barrier_dir is not None and trainer.cfg.n_pods > 1 and \
+                    is_sync_step(trainer.cfg.sync, step):
+                ckpt.save(barrier_dir, state, step=step + 1,
+                          metadata={"model": name,
+                                    "pods": trainer.cfg.n_pods})
         losses.append(float(metrics["loss"]))
         if transport is not None and hasattr(transport, "tick"):
             # the sim transport's clock advances by emulated compute time;
@@ -567,6 +757,14 @@ def main(argv=None):
         # control-plane events fire now; the reconfiguration they produce is
         # applied at the next sync barrier via checkpointed pod re-stacking
         if controller is not None:
+            if chaos is not None:
+                # each crash surfaces on the shared bus exactly once; the
+                # resulting reconfig removes the pod at the next barrier,
+                # after which the transport stops degrading rounds for it
+                for p in chaos.take_new_crashes():
+                    pending_crashes.append(p)
+                    fire_event(CloudEvent("pod_crashed", region=f"pod{p}",
+                                          time_s=step * args.step_time))
             for ev in events.pop(step, ()):
                 fire_event(ev)
             at_barrier = (trainer.cfg.sync.strategy == "asgd"
@@ -588,6 +786,10 @@ def main(argv=None):
                     n_reconfigs += 1
                     plan = pending.new
                     batches = make_batches(plan)
+                    if chaos is not None and pending_crashes:
+                        for p in pending_crashes:
+                            chaos.clear_crash(p)
+                        pending_crashes.clear()
                     if tuner is not None:
                         # the reconfig rewrote the live sync settings:
                         # re-anchor the autotuner's belief so its next
@@ -660,6 +862,16 @@ def main(argv=None):
             and transport.probe.estimator.bandwidth_mbps is not None
             else None),
         "bucket_patterns": args.bucket_patterns,
+        "faults": args.faults or None,
+        "fault_tolerant": (chaos.tolerate if chaos is not None else None),
+        "retries": chaos.retries if chaos is not None else None,
+        "retried_mb": (round(chaos.retried_mb, 3)
+                       if chaos is not None else None),
+        "degraded_rounds": (chaos.degraded_rounds
+                            if chaos is not None else None),
+        "crash_recoveries": (chaos.crash_recoveries
+                             if chaos is not None else None),
+        "rollbacks": n_rollbacks if chaos is not None else None,
         "wall_s": round(time.time() - t0, 1),
     }
     print(json.dumps(summary, indent=1))

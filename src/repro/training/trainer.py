@@ -93,17 +93,19 @@ class Trainer:
         self._sync_step = jax.jit(self._sync_step_impl)
         self._prepare_sync = jax.jit(self._prepare_sync_impl)
         self._finish_sync = jax.jit(self._finish_sync_impl)
+        self._finish_sync_masked = jax.jit(self._finish_sync_masked_impl)
         # compiled-sync-step cache across retunes, keyed by the codec
         # shape of the config (interval is host-side scheduling only and
         # never forces a re-jit); carried from trainer to trainer so an
         # adaptive controller revisiting a rung reuses the old executable.
-        # The host-seam split path caches its (prepare, finish) pair under
-        # the same key discipline.
+        # The host-seam split path caches its (prepare, finish, masked
+        # finish) triple under the same key discipline.
         self._sync_cache: Dict[SyncConfig, Any] = {self._sync_key(cfg.sync):
                                                    self._sync_step}
         self._split_cache: Dict[SyncConfig, Any] = {
             self._sync_key(cfg.sync): (self._prepare_sync,
-                                       self._finish_sync)}
+                                       self._finish_sync,
+                                       self._finish_sync_masked)}
         self._bucket_weights: Optional[Dict[str, float]] = None
         self._wire_mb: Optional[Dict[str, float]] = None
         self.traffic_mb = 0.0
@@ -194,6 +196,19 @@ class Trainer:
             shipped, lr)
         return state._replace(params=params, sync_state=sync_state)
 
+    def _finish_sync_masked_impl(self, state: TrainState, payloads, shipped,
+                                 alive) -> TrainState:
+        """Degraded-round finish: complete the round over the surviving
+        membership mask (``alive`` is a traced argument, so one compile
+        covers every crash pattern).  See ``finish_codec_sync``'s mask
+        semantics: undelivered messages stay whole in the EF residual and
+        the dead rows' telemetry zeroes out."""
+        lr = self.schedule(state.step)
+        params, sync_state = finish_codec_sync(
+            self.cfg.sync, state.params, state.sync_state, payloads,
+            shipped, lr, alive=alive)
+        return state._replace(params=params, sync_state=sync_state)
+
     def wire_mb(self, state: TrainState) -> Dict[str, float]:
         """Per-bucket per-pod wire MB of one sync round (memoized per
         config; shape-only host arithmetic) — what transports bill."""
@@ -212,6 +227,14 @@ class Trainer:
         payloads = self._prepare_sync(state)
         shipped = ship_sync_payloads(self.cfg.sync, payloads.chunks,
                                      self.transport, self.wire_mb(state))
+        failed = tuple(getattr(self.transport, "round_failed_pods", ()) or ())
+        if failed:
+            alive = np.ones((self.cfg.n_pods,), np.float32)
+            for p in failed:
+                if 0 <= p < self.cfg.n_pods:
+                    alive[p] = 0.0
+            return self._finish_sync_masked(state, payloads, shipped,
+                                            jnp.asarray(alive))
         return self._finish_sync(state, payloads, shipped)
 
     def train_step(self, state, batch):
@@ -269,10 +292,12 @@ class Trainer:
             self._sync_cache[key] = trainer._sync_step
         split_cached = self._split_cache.get(key)
         if split_cached is not None:
-            trainer._prepare_sync, trainer._finish_sync = split_cached
+            (trainer._prepare_sync, trainer._finish_sync,
+             trainer._finish_sync_masked) = split_cached
         else:
             self._split_cache[key] = (trainer._prepare_sync,
-                                      trainer._finish_sync)
+                                      trainer._finish_sync,
+                                      trainer._finish_sync_masked)
         if sync.bucket_policy == self.cfg.sync.bucket_policy:
             trainer._bucket_weights = self._bucket_weights
         trainer.traffic_mb = self.traffic_mb
@@ -292,6 +317,11 @@ class Trainer:
                 bucket_weights=self.bucket_weights(state)) * (
                     legs if legs is not None else self.cfg.n_pods)
         if is_sync_step(self.cfg.sync, host_step) and self.cfg.n_pods > 1:
+            # fault-aware transports arm their plan per round (which pods
+            # are dead, which transfers will need retries) before shipping
+            begin = getattr(self.transport, "begin_round", None)
+            if begin is not None:
+                begin(host_step)
             if self._host_seam and self.cfg.sync.uses_codec:
                 state = self._host_sync(state)
             else:

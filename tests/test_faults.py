@@ -1,0 +1,508 @@
+"""Fault-tolerant WAN sync (chaos injection, bounded retry, degraded
+rounds): the ChaosTransport contract (empty plan == bit-exact
+passthrough; injected faults retry/degrade/roll back deterministically),
+the per-chunk checksum path, the degraded-round mask semantics (EF
+residuals preserved, telemetry zeroed, no spurious ef-guard reading),
+the ship-loop retry law, EventBus delivery isolation, the probe's
+degenerate-observation guard, the DES failure billing, and the
+``--faults`` launcher grammar.
+
+The seeded chaos property test reads ``CHAOS_SEED`` (CI runs a small
+seed matrix): any plan of retryable faults must recover to parameters
+bit-identical to the clean run.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.autotune import AdaptiveSyncController, BucketStats
+from repro.core.control_plane import (CloudEvent, EventBus,
+                                      EventDeliveryError)
+from repro.core.faults import (ChaosTransport, FaultEvent, FaultPlan,
+                               resolve_round)
+from repro.core.sync import (BucketOverride, PodUnreachableError,
+                             SyncConfig, TransferFailed, _encode_bucket,
+                             chunk_checksum_rows, ship_sync_payloads)
+from repro.core.transport import MeasuredWanProbe, SimTransport
+from repro.core.wan import (BandwidthTrace, RetryPolicy, SimCloud,
+                            SimEvent, WANConfig, retry_schedule, simulate)
+from repro.training.trainer import Trainer, TrainerConfig
+
+SYNC = SyncConfig("asgd_ga", 2, compress_topk=0.2, quantize_int8=True,
+                  error_feedback=True, codec_block=128, overlap_chunks=2,
+                  bucket_policy="layer-class",
+                  buckets=(BucketOverride("norm", compress_topk=0.5),))
+TRACE = BandwidthTrace(times_s=(0.0,), mbps=(100.0,))
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+
+
+def _loss(params, batch):
+    pred = batch["x"] @ params["w"] + params["bias"]
+    reg = jnp.mean(params["embed"] ** 2)
+    return jnp.mean((pred - batch["y"]) ** 2) + 0.01 * reg, {}
+
+
+def _init(key):
+    kw, ke = jax.random.split(key)
+    return {"w": jax.random.normal(kw, (8, 4)) * 0.1,
+            "bias": jnp.zeros((4,)),
+            "embed": jax.random.normal(ke, (16, 4)) * 0.1}
+
+
+def _transport(plan=None, tolerate=True, policy=None):
+    inner = SimTransport(TRACE, WANConfig(fluctuation=0.0, latency_s=0.0,
+                                          seed=0),
+                         probe=MeasuredWanProbe())
+    if plan is None:
+        return inner
+    return ChaosTransport(inner, plan, policy=policy, tolerate=tolerate)
+
+
+def _run(transport, n_steps=6, n_pods=2, sync=SYNC, raises=False):
+    """Drive the production trainer path; returns (state, trainer, snaps,
+    raised) where snaps are per-step (msg_norm, ef_residual) copies."""
+    tr = Trainer(_loss, _init,
+                 TrainerConfig(n_pods=n_pods, optimizer="sgd", lr=0.05,
+                               sync=sync),
+                 transport=transport)
+    st = tr.init_state(jax.random.key(0))
+    rng = np.random.default_rng(7)
+    snaps, raised = [], []
+    for step in range(n_steps):
+        x = rng.normal(size=(n_pods, 16, 8)).astype(np.float32)
+        y = (x[..., :4] * 0.5).astype(np.float32)
+        st, _ = tr.train_step(st, {"x": jnp.asarray(x), "y": jnp.asarray(y)})
+        try:
+            st = tr.maybe_sync(st, step, model_mb=0.001)
+        except PodUnreachableError as e:
+            if not raises:
+                raise
+            raised.append((step, e.pod))
+        if transport is not None and hasattr(transport, "tick"):
+            transport.tick(0.5)
+        snaps.append((np.asarray(st.sync_state.msg_norm).copy(),
+                      np.asarray(st.sync_state.ef_residual).copy()))
+    return st, tr, snaps, raised
+
+
+def _assert_same_stream(a, b, label):
+    st_a, _, snaps_a, _ = a
+    st_b, _, snaps_b, _ = b
+    for la, lb in zip(jax.tree.leaves(st_a.params),
+                      jax.tree.leaves(st_b.params)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=f"{label}: params")
+    for field in ("ef_residual", "msg_norm", "resid_norm", "tier"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st_a.sync_state, field)),
+            np.asarray(getattr(st_b.sync_state, field)),
+            err_msg=f"{label}: {field}")
+    for i, ((ma, ra), (mb, rb)) in enumerate(zip(snaps_a, snaps_b)):
+        np.testing.assert_array_equal(ma, mb, err_msg=f"{label}: step {i}")
+        np.testing.assert_array_equal(ra, rb, err_msg=f"{label}: step {i}")
+
+
+# ------------------------------------------------------- passthrough
+
+
+def test_empty_plan_is_bit_exact_passthrough():
+    """ChaosTransport with no events IS the wrapped transport: params,
+    telemetry, billed records and probe belief all bit-identical."""
+    clean = _run(_transport())
+    wrapped_t = _transport(FaultPlan())
+    wrapped = _run(wrapped_t)
+    _assert_same_stream(clean, wrapped, "empty plan vs bare")
+    bare_t = clean[1].transport
+    assert [r.seconds for r in bare_t.records] == \
+           [r.seconds for r in wrapped_t.records]
+    assert bare_t.probe.estimator.bandwidth_mbps == \
+           wrapped_t.probe.estimator.bandwidth_mbps
+    assert wrapped_t.in_graph        # no ship faults -> in-graph fast path
+    assert wrapped_t.retries == 0 and wrapped_t.outcomes == []
+
+
+# ---------------------------------------------------- retry + checksum
+
+
+def test_retry_then_succeed_bit_equal_and_billed():
+    """Failed attempts retry to success: parameters bit-equal to the
+    clean run, every retry counted and billed, the probe fed the
+    degraded (not clean) round time."""
+    plan = FaultPlan((FaultEvent("fail", step=3, pod=1, attempts=2),))
+    chaos = _transport(plan)
+    faulted = _run(chaos)
+    clean = _run(_transport())
+    _assert_same_stream(clean, faulted, "retry-then-succeed vs clean")
+    assert chaos.retries == 2
+    assert chaos.retried_mb > 0.0
+    [o] = [o for o in chaos.outcomes if o["step"] == 3]
+    assert o["kinds"] == ["fail"] and o["attempts"] == 2
+    assert o["extra_s"] == pytest.approx(
+        retry_schedule(o["expected_s"], chaos.retry_policy, 2))
+    # the degraded round slowed the measured belief below the clean run's
+    clean_bw = clean[1].transport.probe.estimator.bandwidth_mbps
+    assert chaos.probe.estimator.bandwidth_mbps < clean_bw
+
+
+def test_hard_timeout_is_retried_soft_timeout_is_slow():
+    policy = RetryPolicy(max_retries=3, timeout_factor=4.0)
+    hard = FaultPlan((FaultEvent("timeout", step=3, factor=6.0),))
+    soft = FaultPlan((FaultEvent("timeout", step=3, factor=2.0),))
+    out_h = resolve_round(hard, policy, 3, 1.0)
+    out_s = resolve_round(soft, policy, 3, 1.0)
+    assert out_h.attempts == 1 and out_h.extra_s > 0 and out_h.slowdown == 1.0
+    assert out_s.attempts == 0 and out_s.extra_s == 0.0 \
+        and out_s.slowdown == 2.0
+    t = _transport(hard, policy=policy)
+    faulted = _run(t)
+    _assert_same_stream(_run(_transport()), faulted, "hard timeout retry")
+    assert t.retries == 1
+
+
+def test_corruption_caught_by_checksums_and_reshipped():
+    """A wire bit-flip is caught by the per-chunk checksums and the
+    bucket re-ships clean: parameters bit-equal to the clean run."""
+    plan = FaultPlan((FaultEvent("corrupt", step=3, pod=1),))
+    chaos = _transport(plan)
+    faulted = _run(chaos)
+    _assert_same_stream(_run(_transport()), faulted, "corrupt caught")
+    assert chaos.retries == 1
+
+
+def test_corruption_undetected_without_tolerance_diverges():
+    """The no-tolerance baseline ships unverified: the same bit-flip
+    decodes straight into the parameters."""
+    plan = FaultPlan((FaultEvent("corrupt", step=3, pod=1),))
+    chaos = _transport(plan, tolerate=False)
+    st, _, _, _ = _run(chaos)
+    clean, _, _, _ = _run(_transport())
+    assert chaos.retries == 0        # nothing caught, nothing retried
+    damage = max(float(np.abs(np.asarray(l)).max()) if np.isfinite(
+                     np.asarray(l)).all() else np.inf
+                 for l in jax.tree.leaves(st.params))
+    clean_scale = max(float(np.abs(np.asarray(l)).max())
+                      for l in jax.tree.leaves(clean.params))
+    assert damage > 1e4 * clean_scale
+
+
+def test_chunk_checksums_catch_any_row_flip():
+    rng = np.random.default_rng(0)
+    flat = jnp.asarray(rng.normal(size=(3, 512)), jnp.float32)
+    cfg = SyncConfig("asgd_ga", 1, compress_topk=0.1, quantize_int8=True,
+                     codec_block=128)
+    chunks, _ = _encode_bucket(cfg, flat, want_local=False)
+    crc = chunk_checksum_rows(chunks)
+    assert len(crc) == 3 and len(set(crc)) == 3
+    # same content -> same checksums; one flipped scale row -> changed
+    assert chunk_checksum_rows(chunks) == crc
+    scales = np.asarray(chunks[0].scales).copy()
+    scales.view(np.uint32)[1] ^= np.uint32(0x40000000)
+    bad = (chunks[0]._replace(scales=jnp.asarray(scales)),) + \
+        tuple(chunks[1:])
+    bad_crc = chunk_checksum_rows(bad)
+    assert bad_crc[1] != crc[1] and bad_crc[0] == crc[0]
+
+
+def test_ship_retry_exhaustion_raises_pod_unreachable():
+    """A transport that keeps failing past the retry budget surfaces
+    PodUnreachableError from the ship loop (the defensive contract —
+    ChaosTransport itself degrades the round before ever reaching it)."""
+
+    class AlwaysFail:
+        in_graph = False
+        verify_checksums = False
+        retry_policy = RetryPolicy(max_retries=2)
+
+        def __init__(self):
+            self.notes = []
+
+        def note_retry(self, bucket, attempt, err):
+            self.notes.append((bucket, attempt, err.reason))
+
+        def ship_bucket(self, name, chunks, shift, payload_mb=0.0):
+            raise TransferFailed(name, 0, "fail", pod=1)
+
+    rng = np.random.default_rng(0)
+    flat = jnp.asarray(rng.normal(size=(2, 256)), jnp.float32)
+    cfg = SyncConfig("asgd_ga", 1, compress_topk=0.1, quantize_int8=True,
+                     codec_block=128)
+    chunks, _ = _encode_bucket(cfg, flat, want_local=False)
+    ship = AlwaysFail()
+    with pytest.raises(PodUnreachableError) as ei:
+        ship_sync_payloads(cfg, {"all": chunks}, ship, {"all": 0.1})
+    assert ei.value.pod == 1 and ei.value.bucket == "all"
+    assert [a for _, a, _ in ship.notes] == [1, 2]   # budget exhausted
+
+
+# ------------------------------------------------------ degraded rounds
+
+
+def test_degraded_round_masks_membership_and_preserves_ef():
+    """3 pods, pod 2 dead: the round completes over the survivors — the
+    one delivered message applies bit-identically to the clean run, the
+    undelivered senders keep their FULL message in the EF residual, and
+    the dead rows' telemetry zeroes out (no fake reading)."""
+    sync = dataclasses.replace(SYNC, bucket_policy="single", buckets=())
+    plan = FaultPlan((FaultEvent("crash", step=1, pod=2),))
+    chaos = _transport(plan)
+    st_f, _, snaps_f, _ = _run(chaos, n_steps=2, n_pods=3, sync=sync)
+    st_c, _, snaps_c, _ = _run(_transport(), n_steps=2, n_pods=3, sync=sync)
+    assert chaos.degraded_rounds == 1
+    # shift 1: applied = (0, 1, 0) — only pod 1 received (from pod 0);
+    # delivered = (1, 0, 0) — only pod 0's message landed
+    for lf, lc in zip(jax.tree.leaves(st_f.params),
+                      jax.tree.leaves(st_c.params)):
+        np.testing.assert_array_equal(np.asarray(lf)[1], np.asarray(lc)[1])
+    msg = np.asarray(st_f.sync_state.msg_norm)
+    assert msg[0].sum() > 0.0
+    assert msg[1].sum() == 0.0 and msg[2].sum() == 0.0
+    resid_f = np.asarray(st_f.sync_state.ef_residual)
+    resid_c = np.asarray(st_c.sync_state.ef_residual)
+    # delivered sender: residual identical to the clean run's
+    np.testing.assert_array_equal(resid_f[0], resid_c[0])
+    # undelivered senders: the WHOLE message stays in the residual —
+    # strictly more energy than the clean run's dropped-part residual
+    for p in (1, 2):
+        assert np.linalg.norm(resid_f[p]) > np.linalg.norm(resid_c[p])
+
+
+def test_degraded_round_never_trips_ef_guard():
+    """2 pods, peer dead => NO message delivered anywhere: telemetry is
+    all-zero, BucketStats reads 'no reading yet', and the controller must
+    NOT de-escalate on it (the ef-guard fires on evidence, not absence)."""
+    plan = FaultPlan((FaultEvent("crash", step=1, pod=1),))
+    chaos = _transport(plan)
+    st, tr, _, _ = _run(chaos, n_steps=2)
+    assert chaos.degraded_rounds == 1
+    stats = BucketStats.from_sync_state(st.sync_state)
+    assert stats.msg_norm == 0.0 and stats.resid_norm == 0.0
+    tuner = AdaptiveSyncController(tr.cfg.sync, 44.6, 0.3, ef_guard=0.9)
+    tuner.observe_wan(100.0)
+    rung0 = tuner.rung
+    upd = tuner.update(2, stats)
+    assert upd is None and tuner.rung == rung0
+
+
+def test_crash_rollback_raises_once_then_degrades():
+    plan = FaultPlan((FaultEvent("crash", step=1, pod=1,
+                                 mode="rollback"),))
+    chaos = _transport(plan)
+    st, tr, snaps, raised = _run(chaos, n_steps=6, raises=True)
+    assert raised == [(1, 1)]            # one rollback, at the first round
+    assert chaos.degraded_rounds == 2    # steps 3 and 5 complete degraded
+    assert chaos.take_new_crashes() == (1,)
+    assert chaos.take_new_crashes() == ()    # reported exactly once
+    chaos.clear_crash(1)
+    assert chaos.crash_recoveries == 1
+    chaos.begin_round(7)
+    assert chaos.round_failed_pods == ()     # removed pod stops degrading
+
+
+# -------------------------------------------------- chaos property test
+
+
+def test_seeded_chaos_plan_always_recovers():
+    """Property (seed from CHAOS_SEED, CI runs a matrix): ANY plan of
+    retryable faults — failed attempts, hard timeouts, corruption —
+    within the retry budget recovers to parameters and telemetry
+    bit-identical to the clean run, with every injection counted."""
+    rng = np.random.default_rng(CHAOS_SEED)
+    policy = RetryPolicy(max_retries=3)
+    steps = rng.choice([1, 3, 5, 7, 9], size=3, replace=False)
+    events, expected_retries = [], 0
+    for s in steps:
+        kind = rng.choice(["fail", "timeout", "corrupt"])
+        if kind == "fail":
+            n = int(rng.integers(1, policy.max_retries + 1))
+            events.append(FaultEvent("fail", step=int(s), pod=1,
+                                     attempts=n))
+            expected_retries += n
+        elif kind == "timeout":
+            events.append(FaultEvent("timeout", step=int(s), pod=1,
+                                     factor=float(policy.timeout_factor
+                                                  + rng.integers(0, 4))))
+            expected_retries += 1
+        else:
+            events.append(FaultEvent("corrupt", step=int(s),
+                                     pod=int(rng.integers(0, 2))))
+            expected_retries += 1
+    plan = FaultPlan(tuple(events), seed=CHAOS_SEED)
+    chaos = _transport(plan, policy=policy)
+    faulted = _run(chaos, n_steps=10)
+    clean = _run(_transport(), n_steps=10)
+    _assert_same_stream(clean, faulted, f"chaos seed {CHAOS_SEED}")
+    assert chaos.retries == expected_retries
+    # the decision stream replays exactly through the shared pure law,
+    # JSON round-trip included (the check_regression discipline)
+    for o in json.loads(json.dumps(chaos.outcomes)):
+        out = resolve_round(plan, policy, o["step"], o["expected_s"])
+        assert [list(out.kinds), out.attempts, out.extra_s, out.slowdown] \
+            == [o["kinds"], o["attempts"], o["extra_s"], o["slowdown"]]
+
+
+# ------------------------------------------------------- event delivery
+
+
+def test_event_bus_isolates_subscriber_errors():
+    bus = EventBus()
+    seen = []
+    bus.subscribe("pod_crashed", lambda e: seen.append(("a", e.region)))
+
+    def boom(e):
+        raise KeyError(f"unknown region {e.region!r}")
+
+    bus.subscribe("pod_crashed", boom)
+    bus.subscribe("pod_crashed", lambda e: seen.append(("c", e.region)))
+    with pytest.raises(KeyError, match="pod9"):
+        bus.publish(CloudEvent("pod_crashed", region="pod9"))
+    # every subscriber heard the event BEFORE the error surfaced
+    assert seen == [("a", "pod9"), ("c", "pod9")]
+
+
+def test_event_bus_collects_multiple_errors():
+    bus = EventBus()
+    seen = []
+
+    def boom1(e):
+        raise KeyError("first")
+
+    def boom2(e):
+        raise ValueError("second")
+
+    bus.subscribe("pod_crashed", boom1)
+    bus.subscribe("pod_crashed", lambda e: seen.append(e.kind))
+    bus.subscribe("pod_crashed", boom2)
+    with pytest.raises(EventDeliveryError) as ei:
+        bus.publish(CloudEvent("pod_crashed", region="pod1"))
+    assert seen == ["pod_crashed"]
+    assert [type(e) for _, e in ei.value.errors] == [KeyError, ValueError]
+    assert ei.value.event.region == "pod1"
+
+
+# ------------------------------------------------------- probe guard
+
+
+def test_observe_transfer_ignores_degenerate_observations():
+    probe = MeasuredWanProbe(alpha=0.5, cliff_snap=4.0)
+    probe.observe_transfer(1.0, 0.1)             # 80 Mbps belief
+    before = probe.estimator.bandwidth_mbps
+    probe.observe_transfer(0.0, 1.0)             # zero-byte round
+    probe.observe_transfer(1.0, 0.0)             # zero-time round
+    probe.observe_transfer(-1.0, 1.0)
+    assert probe.estimator.bandwidth_mbps == before
+    assert probe.n_observations == 1
+
+
+# ---------------------------------------------------------- DES billing
+
+
+def test_simulate_link_failed_bills_retries_and_traffic():
+    clouds = [SimCloud("sh", iter_time_s=0.1, units=4),
+              SimCloud("cq", iter_time_s=0.1, units=4)]
+    sync = SyncConfig("asgd_ga", 4)
+    kw = dict(n_iters=60, model_mb=0.6, wan=WANConfig(seed=1))
+    base = simulate(clouds, sync, **kw)
+    failed = simulate(clouds, sync,
+                      events=[SimEvent(1.0, "link_failed", duration_s=2.0,
+                                       n_failures=2)], **kw)
+    for b, f in zip(base.clouds, failed.clouds):
+        assert f.total_s > b.total_s           # retry/backoff wall-clock
+        assert f.traffic_mb > b.traffic_mb     # retried bytes at full cost
+
+
+def test_simulate_pod_crashed_departs_and_stalls_survivors():
+    clouds = [SimCloud("sh", iter_time_s=0.1, units=4),
+              SimCloud("cq", iter_time_s=0.1, units=4)]
+    sync = SyncConfig("asgd_ga", 4)
+    kw = dict(n_iters=60, model_mb=0.6, wan=WANConfig(seed=1))
+    r = simulate(clouds, sync,
+                 events=[SimEvent(1.0, "pod_crashed", region="cq",
+                                  pause_s=3.0)], **kw)
+    by = {c.region: c for c in r.clouds}
+    assert by["sh"].reconfig_s >= 3.0          # barrier rollback stall
+    assert by["cq"].total_s < by["sh"].total_s  # cq died early
+    with pytest.raises(ValueError, match="unknown sim event kind"):
+        SimEvent(0.0, "pod_exploded")
+
+
+# ----------------------------------------------------- validation + CLI
+
+
+def test_fault_event_and_retry_policy_validation():
+    with pytest.raises(ValueError, match="kind 'melt'"):
+        FaultEvent("melt", step=0)
+    with pytest.raises(ValueError, match="step must be >= 0"):
+        FaultEvent("fail", step=-1)
+    with pytest.raises(ValueError, match="attempts must be >= 1"):
+        FaultEvent("fail", step=0, attempts=0)
+    with pytest.raises(ValueError, match="duration must be >= 1"):
+        FaultEvent("flap", step=0, duration=0)
+    with pytest.raises(ValueError, match="mode 'panic'"):
+        FaultEvent("crash", step=0, mode="panic")
+    with pytest.raises(ValueError, match="max_retries"):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError, match="timeout_factor"):
+        RetryPolicy(timeout_factor=0.5)
+    with pytest.raises(ValueError, match="backoff_base"):
+        RetryPolicy(backoff_base=0.0)
+    assert retry_schedule(1.0, RetryPolicy(), 0) == 0.0
+    # 2 failures: 2 timeouts at 4x + backoff 0.5 * (2^0 + 2^1)
+    assert retry_schedule(1.0, RetryPolicy(), 2) == pytest.approx(9.5)
+
+
+def test_parse_faults_grammar_and_errors():
+    from repro.launch.train import parse_faults
+
+    assert parse_faults("") is None
+    plan = parse_faults("fail:x2@39,timeout:x6@67,corrupt@95,"
+                        "flap:x8@119+6,crash:pod1@183:rollback,seed=3")
+    assert plan.seed == 3 and len(plan.events) == 5
+    assert plan.events[0] == FaultEvent("fail", step=39, attempts=2)
+    assert plan.events[1].factor == 6.0
+    assert plan.events[3].duration == 6
+    assert plan.events[4] == FaultEvent("crash", step=183, pod=1,
+                                        mode="rollback")
+    assert plan.needs_host_seam and plan.has_crashes
+    assert not parse_faults("flap:x4@10+2").needs_host_seam
+    with pytest.raises(ValueError, match="missing '@step'"):
+        parse_faults("corrupt")
+    with pytest.raises(ValueError, match="unknown kind 'melt'"):
+        parse_faults("melt@3")
+    with pytest.raises(ValueError, match="step must be an integer"):
+        parse_faults("corrupt@soon")
+    with pytest.raises(ValueError, match="factor must be a number"):
+        parse_faults("timeout:xfast@3")
+    with pytest.raises(ValueError, match="needs a slowdown factor"):
+        parse_faults("flap@3+2")
+    with pytest.raises(ValueError, match="'\\+duration' only applies"):
+        parse_faults("fail@3+2")
+    with pytest.raises(ValueError, match="recovery mode only applies"):
+        parse_faults("corrupt@3:rollback")
+    with pytest.raises(ValueError, match="needs the dying pod"):
+        parse_faults("crash:1@3")
+    with pytest.raises(ValueError, match="corrupt takes no argument"):
+        parse_faults("corrupt:x2@3")
+    with pytest.raises(ValueError, match="seed must be an integer"):
+        parse_faults("seed=pi")
+
+
+def test_launcher_rejects_inconsistent_fault_flags():
+    from repro.launch.train import main
+
+    base = ["--preset", "tiny", "--pods", "2", "--steps", "1"]
+    with pytest.raises(SystemExit, match="needs a billing transport"):
+        main(base + ["--faults", "corrupt@3"])
+    with pytest.raises(SystemExit, match="host-seam codec"):
+        main(base + ["--faults", "corrupt@3", "--transport", "sim",
+                     "--wan-trace", "100@0"])
+    with pytest.raises(SystemExit, match="out of range"):
+        main(base + ["--faults", "crash:pod5@3", "--transport", "sim",
+                     "--wan-trace", "100@0", "--compress-topk", "0.1",
+                     "--int8"])
+    with pytest.raises(SystemExit, match="needs --faults"):
+        main(base + ["--no-tolerance"])

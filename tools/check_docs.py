@@ -38,13 +38,14 @@ DOC_FILES = (
 )
 
 # one cookbook page owns each sync-related launcher flag
-FLAG_PAGES = ("docs/sync-tuning.md", "docs/control-loops.md")
+FLAG_PAGES = ("docs/sync-tuning.md", "docs/control-loops.md",
+              "docs/fault-tolerance.md")
 SYNC_FLAGS = (
     "--sync", "--interval", "--compress-topk", "--int8", "--value-dtype",
     "--error-feedback", "--overlap-chunks", "--codec-block",
     "--bucket-policy", "--bucket-override", "--bucket-patterns",
     "--adaptive-sync", "--ef-guard", "--wan-trace", "--step-time",
-    "--transport", "--topology",
+    "--transport", "--topology", "--faults", "--no-tolerance",
 )
 LAUNCHER = "src/repro/launch/train.py"
 
