@@ -22,10 +22,15 @@ checker makes them a *gate*, not a log.  Checks, cheapest first:
   sync round's (step, expected transfer time) inputs and resolved
   outcome; re-running the committed FaultPlan + RetryPolicy through
   ``resolve_round`` must reproduce the retry/degrade/crash decision
-  stream float-for-float.
+  stream float-for-float.  ``BENCH_serving.json`` records the serving
+  plane the same way: the continuous variant's router event stream must
+  replay placement-for-placement through a fresh ``GeoRouter`` and the
+  windowed load stream decision-for-decision through a fresh
+  ``ServingElasticityController``.
 - **Banded** (deterministic sims, 5%): the elasticity benchmark's
-  speedup / cost-reduction / traffic-reduction (discrete-event simulator,
-  seeded RNG).
+  speedup / cost-reduction / traffic-reduction and the serving
+  benchmark's throughput-speedup / p99-improvement (discrete-event
+  simulators, seeded RNG).
 - **Banded** (timing, floor at 40% of baseline): the fused-codec encode
   speedup over the iterative-argmax kernel, re-timed at a reduced buffer
   size so the whole gate stays CI-fast.  Timing on shared runners is
@@ -330,6 +335,43 @@ def check_faults_replay(gate: Gate, base: Dict) -> None:
                f"diverged={ntl['diverged']}")
 
 
+def check_serving_replay(gate: Gate, base: Dict) -> None:
+    """Replay the serving plane's recorded decision streams: the baseline
+    commits the continuous variant's full router event stream (route /
+    observe / complete in invocation order) and the autoscaler's windowed
+    load observations.  Feeding the events through a fresh ``GeoRouter``
+    must reproduce every placement — scores and reason strings included —
+    and the load stream through a fresh ``ServingElasticityController``
+    must reproduce every scale decision: together they pin the whole
+    serving control path (link belief EMA + cliff-snap -> three-term
+    score -> placement; windowed rps -> hysteresis scale law)
+    deterministically, without re-simulating."""
+    from repro.core.control_plane import (CloudEvent,
+                                          ServingElasticityController)
+    from repro.serving.router import ReplicaSpec, replay_decisions
+
+    scen = base["scenario"]
+    specs = [ReplicaSpec(**r) for r in scen["replicas"]]
+    replayed = replay_decisions(specs, base["router"]["mode"],
+                                base["router"]["events"],
+                                **scen["router_knobs"])
+    _check_decisions(gate, "serving.replay.router_decisions",
+                     replayed, base["router"]["decisions"])
+    regions = {s.region for s in specs}
+    gate.check("serving.replay.placements_on_known_replicas",
+               len(replayed) > 0 and
+               all(d["chosen"] in regions for d in replayed),
+               f"{len(replayed)} placements over {sorted(regions)}")
+
+    ctrl = ServingElasticityController(**base["autoscaler"]["knobs"])
+    scale_replayed = []
+    for t, rps in base["autoscaler"]["observations"]:
+        d = ctrl.handle(CloudEvent("load_changed", time_s=t, rps=rps))
+        scale_replayed.append([t, d.old_replicas, d.new_replicas, d.reason])
+    _check_decisions(gate, "serving.replay.autoscaler_decisions",
+                     scale_replayed, base["autoscaler"]["decisions"])
+
+
 # ----------------------------------------------------------- banded checks
 
 
@@ -344,6 +386,22 @@ def check_elasticity_sim(gate: Gate, base: Dict) -> None:
                    f"baseline {b} vs fresh {f} (band {SIM_TOL:.0%})")
     gate.check("elasticity.elastic_beats_static", fresh["speedup"] > 1.0,
                f"speedup {fresh['speedup']}")
+
+
+def check_serving_sim(gate: Gate, base: Dict) -> None:
+    from benchmarks.serving import bench_serving
+
+    fresh = bench_serving(seed=base["scenario"]["seed"])
+    for key in ("throughput_speedup", "p99_improvement"):
+        b, f = base[key], fresh[key]
+        ok = abs(f - b) <= SIM_TOL * max(abs(b), 1e-9)
+        gate.check(f"serving.{key}", ok,
+                   f"baseline {b} vs fresh {f} (band {SIM_TOL:.0%})")
+    gate.check("serving.continuous_beats_batch",
+               fresh["throughput_speedup"] > 1.0
+               and fresh["p99_improvement"] > 1.0,
+               f"fresh {fresh['throughput_speedup']}x delivered tokens/sec,"
+               f" {fresh['p99_improvement']}x p99")
 
 
 def check_encode_speedup(gate: Gate, base: Dict) -> None:
@@ -399,6 +457,7 @@ def main(argv: Sequence[str] = None) -> int:
         "elasticity": _load("BENCH_elasticity.json"),
         "autotune": _load("BENCH_autotune.json"),
         "faults": _load("BENCH_faults.json"),
+        "serving": _load("BENCH_serving.json"),
     }
     gate = Gate()
     check_acceptance_flags(gate, baselines)
@@ -408,7 +467,9 @@ def main(argv: Sequence[str] = None) -> int:
     check_bucketed_replay(gate, baselines["autotune"])
     check_topology_replay(gate, baselines["autotune"])
     check_faults_replay(gate, baselines["faults"])
+    check_serving_replay(gate, baselines["serving"])
     check_elasticity_sim(gate, baselines["elasticity"])
+    check_serving_sim(gate, baselines["serving"])
     check_encode_speedup(gate, baselines["wan_codec"])
 
     n_fail = sum(1 for r in gate.rows if not r["ok"])

@@ -65,6 +65,13 @@ def main() -> None:
                    f"guard_ok="
                    f"{r['acceptance']['ef_guard_never_violated']}")
 
+    from benchmarks import serving as S
+    _run("serving", S.bench_serving,        # also writes BENCH_serving.json
+         lambda r: f"throughput_speedup={r['throughput_speedup']}x "
+                   f"p99_improvement={r['p99_improvement']}x "
+                   f"reroute_ok="
+                   f"{r['acceptance']['router_reroutes_on_link_collapse']}")
+
     # roofline from the dry-run artifacts (skips silently if none exist yet)
     def _roofline():
         from benchmarks import roofline as R

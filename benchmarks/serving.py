@@ -1,0 +1,436 @@
+"""Serving-plane benchmark: continuous batching vs run-to-completion under
+a bursty multi-region request trace, with geo-aware routing.
+
+Scenario: three regional replicas (the same regions the training benches
+churn) serve a seeded 2-minute request trace — a steady trickle plus a
+hard burst out of one region — while the us-east<->eu-west link collapses
+mid-trace.  Every variant runs the same discrete-event simulator (pure
+deterministic arithmetic, no wall clock, no RNG after trace generation):
+
+- **batch** — the run-to-completion baseline: a replica admits a group of
+  requests up to its slot capacity, decodes until the *whole group*
+  finishes, and only then admits the next group; results are returned at
+  group completion (exactly the old ``BatchScheduler`` contract).
+- **continuous** — the slot-pool engine: finished requests are evicted
+  and new ones inserted at every decode-step boundary (at most one
+  prefill per boundary — the decoupled-queue rule), so a long generation
+  never holds the pool hostage.
+
+Both variants share the same :class:`~repro.serving.router.GeoRouter`
+(measured link beliefs -> placement) and the same autoscaled capacity
+trajectory from a :class:`~repro.core.control_plane.
+ServingElasticityController` consuming windowed request rates off the
+trace, so the comparison isolates the scheduling discipline.
+
+The committed ``BENCH_serving.json`` records the continuous variant's
+full router event stream (route / observe / complete in invocation
+order) and the autoscaler's observation stream; ``check_regression.py``
+replays both through fresh instances and requires decision-for-decision
+equality, then re-runs this sim inside the 5% band.
+
+Run:  PYTHONPATH=src python -m benchmarks.serving
+      PYTHONPATH=src python -m benchmarks.serving --compare A.json B.json
+"""
+from __future__ import annotations
+
+import argparse
+import heapq
+import json
+import math
+import os
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.control_plane import CloudEvent, ServingElasticityController
+from repro.serving.router import GeoRouter, ReplicaSpec, ROUTER_MODES
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+OUT_DIR = os.path.join(HERE, "..", "experiments", "bench")
+OUT_PATH = os.path.join(OUT_DIR, "BENCH_serving.json")
+
+# --------------------------------------------------------------- scenario
+
+REPLICAS = (
+    ReplicaSpec("us-east", device="v5e", units=1, n_slots=4,
+                cost_per_unit_hour=3.0),
+    ReplicaSpec("eu-west", device="v5e", units=2, n_slots=4,
+                cost_per_unit_hour=2.0),
+    ReplicaSpec("ap-south", device="v5e", units=1, n_slots=4,
+                cost_per_unit_hour=1.0),
+)
+ROUTER_KNOBS = dict(default_mbps=100.0, alpha=0.5, cliff_snap=4.0,
+                    mb_per_token=0.004)
+AUTOSCALER_KNOBS = dict(replicas=1, min_replicas=1, max_replicas=2,
+                        target_rps_per_replica=2.0, hysteresis=2)
+
+T_TRACE = 120.0            # arrivals span [0, T_TRACE)
+BURST = (30.0, 50.0, 8.0)  # (start, end, extra rps) burst out of us-east
+BASE_RPS = 1.5             # steady trickle, all regions
+T_COLLAPSE = 60.0          # us-east<->eu-west drops ...
+COLLAPSE_MBPS = 1.0        # ... from 100 to 1 Mbps
+GRACE_S = 15.0             # post-collapse window in which the router is
+#   allowed to still pick the dead link: the belief is *measured*, so the
+#   first transfer after the collapse must pay it once before cliff-snap
+#   reprices the link (same one-payment contract as MeasuredWanProbe)
+BURST_WINDOW = (BURST[0], BURST[1] + 15.0)   # saturated window for the
+#   delivered-throughput comparison: burst + early drain, closing while
+#   the run-to-completion baseline is still backlogged.  Outside a
+#   saturated window both variants are arrival-bound and delivered
+#   throughput is trivially equal — the win continuous batching buys is
+#   exactly the slot-time the baseline wastes while saturated (idle slots
+#   held by finished members until their group's longest request ends)
+LOAD_WINDOW_S = 10.0       # autoscaler observation window
+PREFILL_SPEEDUP = 8.0      # prefill processes tokens ~8x faster than decode
+TOKENS_PER_POWER = 0.01    # catalog power -> tokens/sec per slot (a v5e
+#   unit's TN power is ~2052, giving ~20 tok/s/slot: calibrated so the
+#   burst saturates the pools and the scheduling discipline — not the
+#   trace — dominates the comparison)
+
+
+def make_trace(seed: int = 0) -> List[dict]:
+    """Seeded bursty multi-region arrivals, sorted by time."""
+    rng = np.random.default_rng(seed)
+    regions = [r.region for r in REPLICAS]
+    reqs = []
+    t = 0.0
+    while t < T_TRACE:
+        t += float(rng.exponential(1.0 / BASE_RPS))
+        if t >= T_TRACE:
+            break
+        reqs.append((t, regions[int(rng.integers(len(regions)))]))
+    t = BURST[0]
+    while t < BURST[1]:
+        t += float(rng.exponential(1.0 / BURST[2]))
+        if t >= BURST[1]:
+            break
+        reqs.append((t, "us-east"))
+    reqs.sort()
+    return [{"rid": i, "t": round(t, 6), "src": src,
+             "prompt_len": int(rng.integers(16, 129)),
+             "max_new": int(rng.integers(16, 257))}
+            for i, (t, src) in enumerate(reqs)]
+
+
+def true_mbps(a: str, b: str, t: float) -> float:
+    """Ground-truth link bandwidth the transfers actually experience."""
+    pair = tuple(sorted((a, b)))
+    if pair == ("eu-west", "us-east") and t >= T_COLLAPSE:
+        return COLLAPSE_MBPS
+    return 100.0
+
+
+def capacity_steps(trace: Sequence[dict]
+                   ) -> Tuple[List[Tuple[float, int]], dict]:
+    """Run the ServingElasticityController on windowed request rates.
+
+    Returns the per-region pool-multiplier step function
+    ``[(t_effective, replicas), ...]`` and the recorded
+    observation/decision streams for the baseline JSON."""
+    ctrl = ServingElasticityController(**AUTOSCALER_KNOBS)
+    steps = [(0.0, ctrl.replicas)]
+    observations, decisions = [], []
+    n_windows = int(math.ceil(T_TRACE / LOAD_WINDOW_S))
+    for w in range(n_windows):
+        t0, t1 = w * LOAD_WINDOW_S, (w + 1) * LOAD_WINDOW_S
+        rps = sum(1 for r in trace if t0 <= r["t"] < t1) / LOAD_WINDOW_S
+        d = ctrl.handle(CloudEvent("load_changed", time_s=t1, rps=rps))
+        observations.append([round(t1, 6), round(rps, 6)])
+        decisions.append([round(t1, 6), d.old_replicas, d.new_replicas,
+                          d.reason])
+        if not d.is_noop:
+            steps.append((t1, d.new_replicas))
+    return steps, {"knobs": dict(AUTOSCALER_KNOBS),
+                   "observations": observations, "decisions": decisions}
+
+
+def _capacity(steps: Sequence[Tuple[float, int]], spec: ReplicaSpec,
+              t: float) -> int:
+    mult = steps[0][1]
+    for t_eff, m in steps:
+        if t_eff <= t:
+            mult = m
+    return mult * spec.n_slots
+
+
+# ------------------------------------------------------------- simulator
+
+
+class _Pool:
+    """One region's serving pool in the discrete-event sim."""
+
+    def __init__(self, spec: ReplicaSpec):
+        self.spec = spec
+        self.step_s = 1.0 / (spec.service_rate * TOKENS_PER_POWER)
+        self.queue: deque = deque()
+        self.live: Dict[int, int] = {}        # rid -> tokens remaining
+        self.group: List[int] = []            # batch variant: current group
+        self.busy = False
+
+
+def simulate_serving(trace: Sequence[dict], mode: str, scheduler: str,
+                     steps: Sequence[Tuple[float, int]]
+                     ) -> Tuple[dict, List[dict], GeoRouter]:
+    """Drive one variant through the trace; returns (metrics, the router
+    event stream in invocation order, the router)."""
+    router = GeoRouter(REPLICAS, mode=mode, **ROUTER_KNOBS)
+    pools = {r.region: _Pool(r) for r in REPLICAS}
+    by_rid = {r["rid"]: r for r in trace}
+    placed: Dict[int, str] = {}
+    events: List[dict] = []
+    done: Dict[int, float] = {}
+    heap: List[tuple] = []
+    seq = 0
+
+    def push(t: float, kind: str, data) -> None:
+        nonlocal seq
+        heapq.heappush(heap, (t, seq, kind, data))
+        seq += 1
+
+    def complete(rid: int, t: float) -> None:
+        events.append({"op": "complete", "rid": rid})
+        router.complete(rid)
+        done[rid] = t
+
+    for r in trace:
+        push(r["t"], "arrive", r["rid"])
+
+    while heap:
+        t, _, kind, data = heapq.heappop(heap)
+        if kind == "arrive":
+            r = by_rid[data]
+            events.append({"op": "route", "rid": r["rid"], "src": r["src"],
+                           "prompt_len": r["prompt_len"],
+                           "max_new": r["max_new"]})
+            dst = router.route(r["rid"], r["src"], r["prompt_len"],
+                               r["max_new"])
+            placed[r["rid"]] = dst
+            wire_mb = (r["prompt_len"] + r["max_new"]) * \
+                ROUTER_KNOBS["mb_per_token"]
+            if r["src"] == dst:
+                push(t, "enqueue", r["rid"])
+            else:
+                transfer_s = wire_mb * 8.0 / true_mbps(r["src"], dst, t)
+                push(t + transfer_s, "enqueue",
+                     (r["rid"], r["src"], dst, wire_mb, transfer_s))
+        elif kind == "enqueue":
+            if isinstance(data, tuple):        # cross-region: bill the link
+                rid, src, dst, wire_mb, transfer_s = data
+                events.append({"op": "observe", "a": src, "b": dst,
+                               "payload_mb": round(wire_mb, 9),
+                               "seconds": round(transfer_s, 9)})
+                router.observe_transfer(src, dst, round(wire_mb, 9),
+                                        round(transfer_s, 9))
+            else:
+                rid = data
+            pool = pools[placed[rid]]
+            pool.queue.append(rid)
+            if not pool.busy:
+                pool.busy = True
+                push(t, "tick", placed[rid])
+        elif kind == "tick":
+            pool = pools[data]
+            cap = _capacity(steps, pool.spec, t)
+            if scheduler == "continuous":
+                for rid in [i for i, rem in pool.live.items() if rem <= 0]:
+                    del pool.live[rid]
+                    complete(rid, t)
+                if pool.queue and len(pool.live) < cap:
+                    rid = pool.queue.popleft()   # one prefill per boundary
+                    pool.live[rid] = by_rid[rid]["max_new"]
+                    prefill_s = by_rid[rid]["prompt_len"] * pool.step_s \
+                        / PREFILL_SPEEDUP
+                    push(t + prefill_s, "tick", data)
+                elif pool.live:
+                    for rid in pool.live:
+                        pool.live[rid] -= 1
+                    push(t + pool.step_s, "tick", data)
+                else:
+                    pool.busy = False
+            else:                               # run-to-completion baseline
+                if not pool.live and pool.group:
+                    for rid in pool.group:      # results only at group end
+                        complete(rid, t)
+                    pool.group = []
+                if not pool.live:
+                    if not pool.queue:
+                        pool.busy = False
+                        continue
+                    prefill_s = 0.0
+                    while pool.queue and len(pool.live) < cap:
+                        rid = pool.queue.popleft()
+                        pool.live[rid] = by_rid[rid]["max_new"]
+                        pool.group.append(rid)
+                        prefill_s += by_rid[rid]["prompt_len"] * \
+                            pool.step_s / PREFILL_SPEEDUP
+                    push(t + prefill_s, "tick", data)
+                else:
+                    for rid in list(pool.live):
+                        pool.live[rid] -= 1
+                        if pool.live[rid] <= 0:
+                            del pool.live[rid]  # done decoding; held to end
+                    push(t + pool.step_s, "tick", data)
+
+    lat = sorted(done[r["rid"]] - r["t"] for r in trace)
+    n = len(lat)
+
+    def pct(q: float) -> float:
+        return lat[min(n - 1, max(0, math.ceil(q * n) - 1))]
+
+    makespan = max(done.values())
+    total_tokens = sum(r["max_new"] for r in trace)
+    w0, w1 = BURST_WINDOW
+    burst_tokens = sum(r["max_new"] for r in trace
+                       if w0 <= done[r["rid"]] < w1)
+    by_region: Dict[str, int] = {r.region: 0 for r in REPLICAS}
+    pre = {r.region: 0 for r in REPLICAS}
+    grace = {r.region: 0 for r in REPLICAS}
+    post = {r.region: 0 for r in REPLICAS}
+    for d in router.decisions:
+        by_region[d["chosen"]] += 1
+        if by_rid[d["rid"]]["src"] == "us-east":
+            t_arr = by_rid[d["rid"]]["t"]
+            side = (pre if t_arr < T_COLLAPSE else
+                    grace if t_arr < T_COLLAPSE + GRACE_S else post)
+            side[d["chosen"]] += 1
+    metrics = {
+        "makespan_s": round(makespan, 4),
+        "tokens_per_sec": round(total_tokens / makespan, 4),
+        "burst_tokens_per_sec": round(burst_tokens / (w1 - w0), 4),
+        "latency_p50_s": round(pct(0.50), 4),
+        "latency_p95_s": round(pct(0.95), 4),
+        "latency_p99_s": round(pct(0.99), 4),
+        "mean_latency_s": round(sum(lat) / n, 4),
+        "routes_by_region": by_region,
+        "us_east_routes_pre_collapse": pre,
+        "us_east_routes_grace": grace,
+        "us_east_routes_post_grace": post,
+    }
+    return metrics, events, router
+
+
+# ------------------------------------------------------------------ bench
+
+
+def bench_serving(seed: int = 0) -> Dict:
+    trace = make_trace(seed)
+    steps, autoscaler = capacity_steps(trace)
+
+    batch, _, _ = simulate_serving(trace, "balanced", "batch", steps)
+    cont, events, router = simulate_serving(trace, "balanced",
+                                            "continuous", steps)
+    modes = {}
+    for mode in ROUTER_MODES:
+        if mode == "balanced":
+            modes[mode] = {k: cont[k] for k in
+                           ("tokens_per_sec", "latency_p99_s",
+                            "routes_by_region")}
+            continue
+        m, _, _ = simulate_serving(trace, mode, "continuous", steps)
+        modes[mode] = {k: m[k] for k in ("tokens_per_sec", "latency_p99_s",
+                                         "routes_by_region")}
+
+    eu = cont["us_east_routes_post_grace"].get("eu-west", 0)
+    eu_pre = cont["us_east_routes_pre_collapse"].get("eu-west", 0)
+    scaled_up = any(d[2] > d[1] for d in autoscaler["decisions"])
+    result = {
+        "scenario": {
+            "seed": seed,
+            "replicas": [{"region": r.region, "device": r.device,
+                          "units": r.units, "n_slots": r.n_slots,
+                          "cost_per_unit_hour": r.cost_per_unit_hour}
+                         for r in REPLICAS],
+            "n_requests": len(trace),
+            "total_tokens": sum(r["max_new"] for r in trace),
+            "trace_s": T_TRACE,
+            "burst": f"+{BURST[2]:g}rps us-east "
+                     f"@[{BURST[0]:g},{BURST[1]:g}]s",
+            "link_collapse": f"us-east<->eu-west 100->{COLLAPSE_MBPS:g}Mbps"
+                             f"@{T_COLLAPSE:g}s",
+            "router_knobs": dict(ROUTER_KNOBS),
+            "prefill_speedup": PREFILL_SPEEDUP,
+            "load_window_s": LOAD_WINDOW_S,
+        },
+        "router": {"mode": "balanced", "events": events,
+                   "decisions": router.decisions},
+        "autoscaler": autoscaler,
+        "variants": {"batch": batch, "continuous": cont},
+        "modes": modes,
+        "throughput_speedup": round(cont["burst_tokens_per_sec"]
+                                    / batch["burst_tokens_per_sec"], 3),
+        "p99_improvement": round(batch["latency_p99_s"]
+                                 / cont["latency_p99_s"], 3),
+        "acceptance": {
+            "continuous_beats_batch_tokens_per_sec":
+                cont["burst_tokens_per_sec"] > batch["burst_tokens_per_sec"],
+            "continuous_beats_batch_p99":
+                cont["latency_p99_s"] < batch["latency_p99_s"],
+            "router_reroutes_on_link_collapse": eu == 0 and eu_pre > 0,
+            "balanced_beats_nearest_p99":
+                cont["latency_p99_s"] < modes["nearest"]["latency_p99_s"],
+            "autoscaler_scales_up_on_burst": scaled_up,
+        },
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def print_report(r: Dict) -> None:
+    print("=== serving: continuous batching vs run-to-completion ===")
+    s = r["scenario"]
+    print(f"  trace: {s['n_requests']} requests / {s['total_tokens']} "
+          f"tokens over {s['trace_s']:.0f}s, burst {s['burst']}")
+    print(f"  chaos: {s['link_collapse']}")
+    print(f"  {'':12s} {'burst tok/s':>11s} {'p50':>8s} {'p95':>8s} "
+          f"{'p99':>8s} {'makespan':>10s}")
+    for label in ("batch", "continuous"):
+        v = r["variants"][label]
+        print(f"  {label:12s} {v['burst_tokens_per_sec']:>11.1f} "
+              f"{v['latency_p50_s']:>7.2f}s {v['latency_p95_s']:>7.2f}s "
+              f"{v['latency_p99_s']:>7.2f}s {v['makespan_s']:>9.1f}s")
+    print(f"  -> {r['throughput_speedup']}x delivered tokens/sec in the "
+          f"burst window, {r['p99_improvement']}x p99 improvement")
+    print(f"  router modes ({len(r['router']['decisions'])} decisions "
+          f"recorded):")
+    for mode, m in r["modes"].items():
+        print(f"    {mode:10s} {m['tokens_per_sec']:>8.1f} tok/s  "
+              f"p99 {m['latency_p99_s']:>6.2f}s  {m['routes_by_region']}")
+    ups = [d for d in r["autoscaler"]["decisions"] if d[2] > d[1]]
+    print(f"  autoscaler: {len(r['autoscaler']['decisions'])} observations,"
+          f" {len(ups)} scale-up(s): "
+          + "; ".join(f"{d[1]}->{d[2]}@{d[0]:.0f}s" for d in ups))
+    print(f"  acceptance: {r['acceptance']}")
+    print(f"  written: {os.path.relpath(OUT_PATH)}")
+
+
+def compare(path_a: str, path_b: str) -> None:
+    a, b = json.load(open(path_a)), json.load(open(path_b))
+    print(f"{'metric':28s} {os.path.basename(path_a):>16s} "
+          f"{os.path.basename(path_b):>16s}")
+    for key in ("throughput_speedup", "p99_improvement"):
+        print(f"{key:28s} {a[key]:>16} {b[key]:>16}")
+    for label in ("batch", "continuous"):
+        for key in ("tokens_per_sec", "latency_p99_s", "makespan_s"):
+            print(f"{label}.{key:22s} {a['variants'][label][key]:>16} "
+                  f"{b['variants'][label][key]:>16}")
+
+
+def main(argv: Sequence[str] = None) -> Dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compare", nargs=2, metavar=("A", "B"),
+                    help="diff two BENCH_serving.json files instead")
+    args = ap.parse_args(argv)
+    if args.compare:
+        compare(*args.compare)
+        return {}
+    r = bench_serving(seed=args.seed)
+    print_report(r)
+    return r
+
+
+if __name__ == "__main__":
+    main()

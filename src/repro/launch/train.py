@@ -444,6 +444,13 @@ def main(argv=None):
                          "— the third actuator; needs --adaptive-sync).  "
                          "Numerics are identical either way; topology "
                          "changes the billing and the traffic accounting")
+    ap.add_argument("--serve", action="store_true",
+                    help="after training, run a short continuous-batching "
+                         "serving smoke on pod-0's final parameters "
+                         "(prefill -> slot insert -> generate over a "
+                         "4-slot pool); decoder-only modules only — "
+                         "encoder-decoder modules print a skip.  See "
+                         "docs/serving.md")
     args = ap.parse_args(argv)
 
     # ----------------------------------------------------------- model
@@ -814,6 +821,36 @@ def main(argv=None):
             ckpt.save(args.ckpt_dir, state.params, step=step + 1,
                       metadata={"model": name, "sync": args.sync})
 
+    # -------------------------------------------------- serving smoke
+    serve_info = None
+    if args.serve:
+        if fns.prefill is None:
+            print(f"[serve] module '{module}' has no prefill/decode-cache "
+                  f"path (encoder-decoder) — skipping serving smoke")
+            serve_info = {"skipped": module}
+        else:
+            from repro.serving.engine import (ContinuousEngine,
+                                              ContinuousScheduler)
+            pod0 = jax.tree.map(lambda x: x[0], state.params)
+            sched = ContinuousScheduler(ContinuousEngine(
+                None, pod0, n_slots=4, cache_len=64, cfg=cfg,
+                module=module))
+            srng = np.random.default_rng(0)
+            for _ in range(6):
+                plen = int(srng.integers(4, 17))
+                sched.submit(srng.integers(0, cfg.vocab_size, plen)
+                             .astype(np.int32), max_new=8)
+            outs = sched.run()
+            serve_info = {
+                "requests": len(outs),
+                "new_tokens": sum(len(v) for v in outs.values()),
+                "decode_steps": sched.engine.decode_steps,
+            }
+            print(f"[serve] continuous-batching smoke on pod-0 params: "
+                  f"{serve_info['requests']} requests, "
+                  f"{serve_info['new_tokens']} tokens in "
+                  f"{serve_info['decode_steps']} pool decode steps")
+
     summary = {
         "model": name, "pods": args.pods, "sync": args.sync,
         "interval": args.interval, "steps": args.steps,
@@ -872,6 +909,7 @@ def main(argv=None):
         "crash_recoveries": (chaos.crash_recoveries
                              if chaos is not None else None),
         "rollbacks": n_rollbacks if chaos is not None else None,
+        "serve": serve_info,
         "wall_s": round(time.time() - t0, 1),
     }
     print(json.dumps(summary, indent=1))

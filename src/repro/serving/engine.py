@@ -1,19 +1,49 @@
-"""Batched serving engine: prefill + KV-cache decode.
+"""Serving plane: prefill + KV-cache decode, continuous batching on top.
 
-Serves a model with batched requests (the inference counterpart used by the
-``prefill_32k`` / ``decode_32k`` / ``long_500k`` input shapes).  The decode
-cache kinds come from the model config: ring-buffer KV for sliding-window
-positions, full KV for global positions, O(1) recurrent state for SSM
-positions — so ``long_500k`` is served with bounded memory by SSM/hybrid/
-local-attention architectures.
+Three layers, bottom to top:
+
+- :class:`ServingEngine` — per-pod prefill + decode primitives (the
+  inference counterpart of the ``prefill_32k`` / ``decode_32k`` /
+  ``long_500k`` input shapes).  The decode cache kinds come from the model
+  config: ring-buffer KV for sliding-window positions, full KV for global
+  positions, O(1) recurrent state for SSM positions.
+- :class:`ContinuousEngine` — a fixed **slot pool** over one decode cache
+  whose batch axis is the pool (the maxengine/JetStream
+  prefill → insert → generate decomposition): each request is prefilled
+  *solo* (no padding — exactly its own tokens build its cache), inserted
+  into a free slot with ``dynamic_update_slice`` on the cache's batch
+  axis, and decoded by a per-slot ``vmap`` that gives every slot its own
+  cache position.  Slots are row-independent under ``vmap``, so a slot's
+  decoded tokens are bit-identical whether or not another slot was
+  inserted or evicted mid-flight (property-tested in
+  ``tests/test_serving.py``).
+- :class:`ContinuousScheduler` / :class:`BatchScheduler` — request-level
+  scheduling.  The continuous scheduler keeps *decoupled prefill and
+  decode queues*: at most one prefill is admitted between decode steps,
+  so a burst of long prompts never stalls the decode throughput of
+  requests already in flight.  The batch scheduler is the run-to-
+  completion baseline (`benchmarks/serving.py` measures the gap): it
+  fills a group of slots, decodes the whole group to completion, and only
+  then admits the next group.
 
 Serving is per-pod independent (the paper's technique synchronizes
-*training* state; serving replicas don't synchronize), so the engine has no
-pod dimension — on a multi-pod mesh each pod serves its own replica.
+*training* state; serving replicas don't synchronize), so the engines have
+no pod dimension — on a multi-pod mesh each pod serves its own replica,
+and ``repro.serving.router.GeoRouter`` decides which replica a request
+lands on.
+
+Historical note: the pre-continuous ``BatchScheduler`` left-padded mixed-
+length prompts with zeros and fed the pad tokens to ``prefill`` unmasked,
+shifting positions and polluting the KV cache of every short prompt in the
+batch.  The slot decomposition removes padding from the data path entirely
+(each prompt prefills at its true length); the regression test
+``test_batch_matches_solo_generation`` pins batched output token-for-token
+to solo generation.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from collections import deque
+from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -43,6 +73,10 @@ class ServingEngine:
         self.cache_len = cache_len
         self._decode = jax.jit(
             lambda p, t, c, pos: self.fns.decode_step(p, self.cfg, t, c, pos))
+        self._prefill = jax.jit(
+            lambda p, t, pe: self.fns.prefill(p, self.cfg, t, self.cache_len,
+                                              patch_emb=pe)
+        ) if self.fns.prefill is not None else None
 
     # ------------------------------------------------------------- prefill
     def prefill(self, tokens: jnp.ndarray, **extras) -> Tuple[jnp.ndarray, Pytree]:
@@ -60,10 +94,8 @@ class ServingEngine:
                                              cache, pos)
                 pos = pos + 1
             return logits[:, 0], cache
-        logits, cache = jax.jit(
-            lambda p, t: self.fns.prefill(p, self.cfg, t, self.cache_len,
-                                          patch_emb=extras.get("patch_emb"))
-        )(self.params, tokens)
+        logits, cache = self._prefill(self.params, tokens,
+                                      extras.get("patch_emb"))
         return logits, cache
 
     # -------------------------------------------------------------- decode
@@ -94,7 +126,7 @@ class ServingEngine:
 
 
 # ---------------------------------------------------------------------------
-# request batching (simple continuous-batching front)
+# continuous batching: slot pool + per-slot decode
 # ---------------------------------------------------------------------------
 
 
@@ -107,18 +139,284 @@ class Request:
     output: Optional[np.ndarray] = None
 
 
+@dataclass
+class FinishedRequest:
+    """One completed generation leaving the slot pool."""
+
+    rid: int
+    tokens: np.ndarray           # (n,) generated tokens (eos included)
+    reason: str                  # "max_new" | "eos"
+    slot: int
+
+
+@dataclass
+class _Slot:
+    """Host-side bookkeeping of one live slot (the cache row is the
+    device-side half)."""
+
+    rid: int
+    max_new: int
+    tokens: List[int] = field(default_factory=list)   # emitted so far
+
+
+class ContinuousEngine:
+    """Fixed slot pool with per-slot insert / evict over one decode cache.
+
+    The cache pytree is allocated once with batch axis ``n_slots``; a
+    request occupies exactly one slot from insert to evict.  Decode is a
+    per-slot ``vmap`` of the model's single-sequence ``decode_step``, so
+    every slot carries its *own* cache position — mixed prompt lengths
+    coexist without padding, and a freshly inserted slot starts decoding
+    at its true prompt length while its neighbours continue uninterrupted.
+
+    Invariants (tested):
+
+    - **insert never clobbers a live slot** — inserting into an occupied
+      slot (or a full pool) raises instead of overwriting;
+    - **evict frees exactly one slot** — the evicted row is the only state
+      that changes;
+    - **slot independence** — a slot's decoded tokens are bit-identical
+      whether or not a concurrent prefill-insert happened in another slot
+      (``vmap`` rows only read their own cache row and position).
+
+    Decoding is greedy (the deterministic mode every parity test and the
+    router replay rely on); sampling stays on :class:`ServingEngine`.
+    """
+
+    def __init__(self, arch: Optional[Arch], params: Pytree, *,
+                 n_slots: int = 4, cache_len: int = 1024,
+                 use_smoke: bool = False, eos_id: Optional[int] = None,
+                 cfg=None, module: Optional[str] = None):
+        # arch is optional when cfg + module are given directly (the
+        # training launcher serves preset configs that have no Arch)
+        module = module if module is not None else arch.module
+        if get_model_fns(module).prefill is None:
+            raise ValueError(
+                f"module {module!r} has no one-shot prefill; the slot "
+                f"pool needs prefill -> insert (serve it with ServingEngine)")
+        self.arch = arch
+        self.module = module
+        self.cfg = cfg if cfg is not None else (
+            arch.smoke if use_smoke else arch.config)
+        self.fns = get_model_fns(module)
+        self.params = params
+        self.n_slots = int(n_slots)
+        self.cache_len = int(cache_len)
+        self.eos_id = eos_id
+        if self.n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+
+        cfg_ = self.cfg
+        fns = self.fns
+
+        self._prefill = jax.jit(
+            lambda p, t: fns.prefill(p, cfg_, t, self.cache_len))
+        # insert: write a solo-prefilled cache (batch 1) into slot row i of
+        # the pool cache (batch n_slots) — the maxengine insert
+        self._insert_row = jax.jit(lambda pool, one, slot: jax.tree.map(
+            lambda P, o: jax.lax.dynamic_update_slice_in_dim(
+                P, o.astype(P.dtype), slot, axis=1), pool, one))
+
+        def _one(p, tok, cache, pos):
+            # re-add a batch axis of 1: decode_step is written for (B, ...)
+            cache1 = jax.tree.map(lambda x: x[:, None], cache)
+            logits, nc = fns.decode_step(p, cfg_, tok[None], cache1, pos)
+            return logits[0, 0], jax.tree.map(lambda x: x[:, 0], nc)
+
+        def _step(p, toks, pool, pos):
+            logits, pool = jax.vmap(_one, in_axes=(None, 0, 1, 0),
+                                    out_axes=(0, 1))(p, toks, pool, pos)
+            nxt = jnp.argmax(logits[:, : cfg_.vocab_size],
+                             axis=-1).astype(jnp.int32)
+            return nxt, pool
+
+        self._step_fn = jax.jit(_step)
+
+        self._pool = self.fns.init_cache(self.cfg, self.n_slots,
+                                         self.cache_len)
+        self.slots: List[Optional[_Slot]] = [None] * self.n_slots
+        self._pos = np.zeros(self.n_slots, np.int32)
+        self._tok = np.zeros((self.n_slots, 1), np.int32)
+        self._finished: List[FinishedRequest] = []
+        self.decode_steps = 0
+
+    # ---------------------------------------------------------- occupancy
+    @property
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    @property
+    def live_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+    # ------------------------------------------------------------- insert
+    def insert(self, prompt: np.ndarray, max_new: int, *, rid: int = 0,
+               slot: Optional[int] = None) -> int:
+        """Prefill ``prompt`` solo and insert it into a free slot.
+
+        Raises when the pool is full or the requested ``slot`` is live —
+        inserting never clobbers in-flight state."""
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError("prompt must be a non-empty 1-D token array")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if prompt.size + max_new > self.cache_len:
+            raise ValueError(
+                f"prompt ({prompt.size}) + max_new ({max_new}) exceeds "
+                f"cache_len ({self.cache_len})")
+        if slot is None:
+            free = self.free_slots
+            if not free:
+                raise RuntimeError("no free slot: evict (or wait for a "
+                                   "finish) before inserting")
+            slot = free[0]
+        elif self.slots[slot] is not None:
+            raise RuntimeError(f"slot {slot} is live (rid "
+                               f"{self.slots[slot].rid}); insert refuses "
+                               f"to clobber it")
+
+        logits, cache = self._prefill(self.params, jnp.asarray(prompt)[None])
+        first = int(jnp.argmax(logits[0, : self.cfg.vocab_size]))
+        self._pool = self._insert_row(self._pool, cache, jnp.int32(slot))
+        st = _Slot(rid=rid, max_new=int(max_new), tokens=[first])
+        self.slots[slot] = st
+        self._pos[slot] = prompt.size
+        self._tok[slot, 0] = first
+        self._maybe_finish(slot)
+        return slot
+
+    # -------------------------------------------------------------- decode
+    def step(self) -> List[FinishedRequest]:
+        """One batched decode step across the whole pool.
+
+        Every live slot advances one token at its own position (free slots
+        compute a throwaway row — the fixed pool shape is what keeps the
+        compiled step cached).  Slots reaching ``max_new`` or ``eos_id``
+        are evicted and returned (plus any insert-time finishes pending)."""
+        if not self.live_slots:
+            return self.take_finished()
+        nxt, self._pool = self._step_fn(self.params, jnp.asarray(self._tok),
+                                        self._pool, jnp.asarray(self._pos))
+        nxt = np.array(nxt, np.int32)
+        self.decode_steps += 1
+        for i, st in enumerate(self.slots):
+            if st is None:
+                continue
+            tok = int(nxt[i])
+            st.tokens.append(tok)
+            self._pos[i] += 1
+            self._tok[i, 0] = tok
+            self._maybe_finish(i)
+        return self.take_finished()
+
+    def _maybe_finish(self, slot: int) -> None:
+        st = self.slots[slot]
+        if self.eos_id is not None and st.tokens[-1] == self.eos_id:
+            reason = "eos"
+        elif len(st.tokens) >= st.max_new:
+            reason = "max_new"
+        else:
+            return
+        self._finished.append(FinishedRequest(
+            rid=st.rid, tokens=np.asarray(st.tokens, np.int32),
+            reason=reason, slot=slot))
+        self.evict(slot)
+
+    def take_finished(self) -> List[FinishedRequest]:
+        out, self._finished = self._finished, []
+        return out
+
+    # -------------------------------------------------------------- evict
+    def evict(self, slot: int) -> None:
+        """Free exactly one slot (the cache row is left in place — the next
+        insert overwrites it wholesale)."""
+        if self.slots[slot] is None:
+            raise RuntimeError(f"slot {slot} is already free")
+        self.slots[slot] = None
+        self._pos[slot] = 0
+        self._tok[slot, 0] = 0
+
+
+# ---------------------------------------------------------------------------
+# request-level scheduling
+# ---------------------------------------------------------------------------
+
+
+class ContinuousScheduler:
+    """Continuous-batching front: decoupled prefill and decode queues.
+
+    ``submit`` enqueues onto the *prefill* queue; the run loop admits at
+    most one prefill-insert per decode step, so a burst of long prompts is
+    absorbed one slot at a time while every in-flight request keeps
+    decoding at full cadence.  ``history`` records the interleaving
+    (``("prefill", rid, slot)`` / ``("decode", n_live)`` /
+    ``("finish", rid, reason)``) — the request-lifecycle trace
+    `docs/serving.md` walks through."""
+
+    def __init__(self, engine: ContinuousEngine):
+        self.engine = engine
+        self.queue: deque[Request] = deque()
+        self.results: Dict[int, np.ndarray] = {}
+        self.history: List[Tuple] = []
+        self._rid = 0
+
+    def submit(self, prompt: np.ndarray, max_new: int) -> int:
+        rid = self._rid
+        self._rid += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  int(max_new)))
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def _drain(self, finished: List[FinishedRequest]) -> None:
+        for f in finished:
+            self.results[f.rid] = f.tokens
+            self.history.append(("finish", f.rid, f.reason))
+
+    def step(self) -> bool:
+        """One scheduler iteration: at most one prefill-insert, then one
+        pool decode step.  Returns False when fully idle."""
+        if self.queue and self.engine.free_slots:
+            req = self.queue.popleft()
+            slot = self.engine.insert(req.prompt, req.max_new, rid=req.rid)
+            self.history.append(("prefill", req.rid, slot))
+            self._drain(self.engine.take_finished())
+        if self.engine.live_slots:
+            self.history.append(("decode", len(self.engine.live_slots)))
+            self._drain(self.engine.step())
+        return bool(self.queue or self.engine.live_slots)
+
+    def run(self) -> Dict[int, np.ndarray]:
+        while self.step():
+            pass
+        return self.results
+
+
 class BatchScheduler:
-    """Greedy static batcher: groups pending requests into fixed-size decode
-    batches (right-padded prompts), runs them to completion."""
+    """Run-to-completion baseline batcher: fills a group of ``batch_size``
+    slots, decodes the whole group until every member finishes, then admits
+    the next group.  Requests are prefilled solo through the same slot pool
+    as :class:`ContinuousScheduler` — no padding, so batched output is
+    token-for-token identical to solo generation; what this scheduler
+    keeps from its ancestor is the *head-of-line blocking* that
+    `benchmarks/serving.py` measures continuous batching against."""
 
     def __init__(self, engine: ServingEngine, batch_size: int):
         self.engine = engine
-        self.batch_size = batch_size
+        self.batch_size = int(batch_size)
         self.queue: List[Request] = []
+        self._pool = ContinuousEngine(
+            engine.arch, engine.params, n_slots=self.batch_size,
+            cache_len=engine.cache_len, cfg=engine.cfg)
 
     def submit(self, prompt: np.ndarray, max_new: int) -> int:
         rid = len(self.queue)
-        self.queue.append(Request(rid, prompt, max_new))
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  int(max_new)))
         return rid
 
     def run(self) -> Dict[int, np.ndarray]:
@@ -126,13 +424,14 @@ class BatchScheduler:
         pending = [r for r in self.queue if not r.done]
         for i in range(0, len(pending), self.batch_size):
             group = pending[i:i + self.batch_size]
-            S = max(len(r.prompt) for r in group)
-            n_new = max(r.max_new for r in group)
-            prompts = np.stack([
-                np.pad(r.prompt, (S - len(r.prompt), 0)) for r in group])
-            gen = self.engine.generate(jnp.asarray(prompts, jnp.int32), n_new)
-            for j, r in enumerate(group):
-                r.done = True
-                r.output = gen.tokens[j, : r.max_new]
-                results[r.rid] = r.output
+            for r in group:
+                self._pool.insert(r.prompt, r.max_new, rid=r.rid)
+            finished = self._pool.take_finished()
+            while self._pool.live_slots:
+                finished += self._pool.step()
+            for f in finished:
+                req = next(r for r in group if r.rid == f.rid)
+                req.done = True
+                req.output = f.tokens[: req.max_new]
+                results[f.rid] = req.output
         return results

@@ -1,13 +1,19 @@
-"""Serving engine tests: generate correctness, batching, long-window decode."""
+"""Serving plane tests: engine correctness, slot-pool invariants, the
+padding regression, router determinism + reroute, replica autoscaling."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_arch
+from repro.core.control_plane import (CloudEvent, EventBus,
+                                      ServingElasticityController,
+                                      TRAINING_EVENT_KINDS)
 from repro.models import transformer as T
 from repro.models.registry import get_model_fns
-from repro.serving.engine import BatchScheduler, ServingEngine
+from repro.serving.engine import (BatchScheduler, ContinuousEngine,
+                                  ContinuousScheduler, ServingEngine)
+from repro.serving.router import GeoRouter, ReplicaSpec, replay_decisions
 
 
 @pytest.fixture(scope="module")
@@ -65,3 +71,221 @@ def test_ssm_engine_generates():
     prompt = jax.random.randint(jax.random.key(1), (2, 6), 0, cfg.vocab_size)
     gen = engine.generate(prompt, 5)
     assert gen.tokens.shape == (2, 5)
+
+
+# ---------------------------------------------------------------------------
+# the padding regression + slot-pool invariants
+# ---------------------------------------------------------------------------
+
+
+def test_batch_matches_solo_generation(granite):
+    # THE padding regression: the old batcher left-padded mixed-length
+    # prompts with zeros and fed them to prefill unmasked, so a short
+    # prompt's tokens depended on its neighbours' lengths.  Batched
+    # output must now equal solo generation token-for-token.
+    arch, cfg, params = granite
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (2, 8, 5, 3, 8, 6)]       # deliberately mixed
+    engine = ServingEngine(arch, params, cache_len=16, use_smoke=True)
+    sched = BatchScheduler(engine, batch_size=3)
+    rids = [sched.submit(p, 4) for p in prompts]
+    batched = sched.run()
+
+    solo = ServingEngine(arch, params, cache_len=16, use_smoke=True)
+    for rid, p in zip(rids, prompts):
+        ref = solo.generate(jnp.asarray(p)[None], 4).tokens[0]
+        np.testing.assert_array_equal(
+            batched[rid], ref,
+            err_msg=f"prompt len {p.size} diverged from solo generation")
+
+
+def test_insert_never_clobbers_live_slot(granite):
+    arch, cfg, params = granite
+    eng = ContinuousEngine(arch, params, n_slots=2, cache_len=16,
+                           use_smoke=True)
+    rng = np.random.default_rng(0)
+    p = lambda n: rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+    s0 = eng.insert(p(4), 8, rid=0)
+    with pytest.raises(RuntimeError, match="clobber"):
+        eng.insert(p(4), 8, rid=1, slot=s0)
+    eng.insert(p(5), 8, rid=1)
+    with pytest.raises(RuntimeError, match="free slot"):
+        eng.insert(p(3), 8, rid=2)
+    # invalid requests are rejected before touching the pool
+    with pytest.raises(ValueError, match="non-empty"):
+        eng.insert(np.zeros(0, np.int32), 4)
+    with pytest.raises(ValueError, match="cache_len"):
+        eng.insert(p(8), 99)
+    assert eng.live_slots == [0, 1]
+
+
+def test_evict_frees_exactly_one_slot(granite):
+    arch, cfg, params = granite
+    eng = ContinuousEngine(arch, params, n_slots=3, cache_len=16,
+                           use_smoke=True)
+    rng = np.random.default_rng(1)
+    for r in range(3):
+        eng.insert(rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                   8, rid=r)
+    before = {i: eng.slots[i].rid for i in eng.live_slots}
+    eng.evict(1)
+    assert eng.free_slots == [1]
+    assert {i: eng.slots[i].rid for i in eng.live_slots} == \
+        {i: r for i, r in before.items() if i != 1}
+    with pytest.raises(RuntimeError, match="already free"):
+        eng.evict(1)
+
+
+def test_decode_bit_identical_under_concurrent_insert(granite):
+    # slot independence: slot 0's tokens must not change when another
+    # request is prefilled+inserted into slot 1 mid-decode
+    arch, cfg, params = granite
+    rng = np.random.default_rng(2)
+    pa = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab_size, 3).astype(np.int32)
+
+    alone = ContinuousEngine(arch, params, n_slots=2, cache_len=16,
+                             use_smoke=True)
+    alone.insert(pa, 8, rid=0)
+    ref = None
+    while ref is None:
+        for f in alone.step():
+            if f.rid == 0:
+                ref = f.tokens
+
+    shared = ContinuousEngine(arch, params, n_slots=2, cache_len=16,
+                              use_smoke=True)
+    shared.insert(pa, 8, rid=0)
+    shared.step()                       # slot 0 decodes alone once...
+    shared.insert(pb, 8, rid=1)         # ...then a neighbour moves in
+    got = {}
+    while len(got) < 2:
+        for f in shared.step():
+            got[f.rid] = f.tokens
+    np.testing.assert_array_equal(got[0], ref)
+
+
+def test_eos_evicts_slot_early(granite):
+    arch, cfg, params = granite
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+    free = ContinuousEngine(arch, params, n_slots=1, cache_len=16,
+                            use_smoke=True)
+    free.insert(prompt, 6, rid=0)
+    full = None
+    while full is None:
+        for f in free.step():
+            full = f.tokens
+    assert full.size == 6 and len(set(full.tolist())) > 1
+
+    eos = int(full[2])                  # a token the run actually emits
+    eng = ContinuousEngine(arch, params, n_slots=1, cache_len=16,
+                           use_smoke=True, eos_id=eos)
+    eng.insert(prompt, 6, rid=0)
+    fin = None
+    while fin is None:
+        for f in eng.step():
+            fin = f
+    assert fin.reason == "eos"
+    assert fin.tokens[-1] == eos and fin.tokens.size == 3
+    assert eng.free_slots == [0]        # the slot is immediately reusable
+
+
+def test_scheduler_interleaves_prefill_with_decode(granite):
+    # decoupled queues: with more requests than slots the history must
+    # show prefill-inserts *between* decode steps (no drain-then-refill),
+    # and never two prefills back to back
+    arch, cfg, params = granite
+    eng = ContinuousEngine(arch, params, n_slots=2, cache_len=16,
+                           use_smoke=True)
+    sched = ContinuousScheduler(eng)
+    rng = np.random.default_rng(4)
+    rids = [sched.submit(rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                         m) for m in (6, 3, 5, 2, 4)]
+    results = sched.run()
+    assert set(results) == set(rids)
+    kinds = [h[0] for h in sched.history]
+    first_decode = kinds.index("decode")
+    assert "prefill" in kinds[first_decode:]
+    for a, b in zip(kinds, kinds[1:]):
+        assert not (a == "prefill" and b == "prefill")
+
+
+# ---------------------------------------------------------------------------
+# geo router + replica autoscaler (pure host-side — no model involved)
+# ---------------------------------------------------------------------------
+
+REPLICAS = [ReplicaSpec(region="us-east", cost_per_unit_hour=3.0),
+            ReplicaSpec(region="eu-west", units=2, cost_per_unit_hour=2.0)]
+
+
+def _events(n=20, seed=5):
+    rng = np.random.default_rng(seed)
+    evs = [{"op": "observe", "a": "us-east", "b": "eu-west",
+            "payload_mb": 4.0, "seconds": 0.32}]
+    for rid in range(n):
+        evs.append({"op": "route", "rid": rid,
+                    "src": ("us-east", "eu-west")[int(rng.integers(2))],
+                    "prompt_len": int(rng.integers(8, 128)),
+                    "max_new": int(rng.integers(16, 256))})
+        if rid >= 3:
+            evs.append({"op": "complete", "rid": rid - 3})
+    return evs
+
+
+def test_router_decisions_deterministic_under_seeded_trace():
+    evs = _events()
+    a = replay_decisions(REPLICAS, "balanced", evs)
+    b = replay_decisions(REPLICAS, "balanced", evs)
+    assert a == b and len(a) == 20
+    # and not degenerate: the balanced objective spreads the load
+    assert len({d["chosen"] for d in a}) == 2
+    # a duplicate rid is a caller bug, not a silent double-booking
+    r = GeoRouter(REPLICAS, mode="balanced")
+    r.route(0, "us-east", 16, 32)
+    with pytest.raises(ValueError, match="rid 0"):
+        r.route(0, "us-east", 16, 32)
+
+
+def test_router_reroutes_after_link_collapse():
+    # belief-driven placement: an idle local replica wins, a queued one
+    # spills over the healthy link, and after ONE collapsed transfer the
+    # cliff-snap reprices the link and us-east traffic stays home even
+    # though the local queue is still there
+    r = GeoRouter(REPLICAS, mode="balanced")
+    r.observe_transfer("us-east", "eu-west", payload_mb=4.0, seconds=0.32)
+    assert r.route(0, "us-east", 64, 256) == "us-east"   # idle, local
+    assert r.route(1, "us-east", 64, 256) == "eu-west"   # queue spill
+    r.observe_transfer("us-east", "eu-west", payload_mb=4.0, seconds=320.0)
+    assert r.route(2, "us-east", 64, 256) == "us-east"   # rerouted home
+    d1, d2 = r.decisions[1], r.decisions[2]
+    assert d2["scores"]["eu-west"]["net_s"] > \
+        100 * d1["scores"]["eu-west"]["net_s"]
+
+
+def test_serving_autoscaler_hysteresis():
+    ctrl = ServingElasticityController(replicas=1, max_replicas=4,
+                                       target_rps_per_replica=4.0,
+                                       hysteresis=2)
+    up = ctrl.handle(CloudEvent("load_changed", time_s=0.0, rps=10.0))
+    assert ctrl.replicas == 3 and not up.is_noop      # immediate scale-up
+    hold = ctrl.handle(CloudEvent("load_changed", time_s=1.0, rps=2.0))
+    assert hold.is_noop and ctrl.replicas == 3        # calm streak 1 of 2
+    down = ctrl.handle(CloudEvent("load_changed", time_s=2.0, rps=2.0))
+    assert ctrl.replicas == 1 and down.new_replicas == 1
+    with pytest.raises(ValueError, match="rps"):
+        ctrl.handle(CloudEvent("load_changed", time_s=3.0))
+
+
+def test_load_events_never_reach_training_controller():
+    # two planes, one bus: the load_changed kind is partitioned away from
+    # the training controllers' subscription
+    assert "load_changed" not in TRAINING_EVENT_KINDS
+    bus = EventBus()
+    ctrl = ServingElasticityController(replicas=1, max_replicas=2, bus=bus)
+    seen = []
+    for kind in TRAINING_EVENT_KINDS:
+        bus.subscribe(kind, seen.append)
+    bus.publish(CloudEvent("load_changed", time_s=0.0, rps=9.0))
+    assert ctrl.replicas == 2 and seen == []

@@ -13,11 +13,13 @@ Three checks over ``docs/*.md`` + the READMEs, cheapest first:
   least fail on syntax and the snippet author is forced to keep them
   plausible.  Import-level validity is the test suite's job, not the
   docs gate's.
-- **Flag ownership**: each sync-related ``repro.launch.train`` flag must
-  appear in *exactly one* of ``docs/sync-tuning.md`` /
-  ``docs/control-loops.md`` (the acceptance rule for the operator docs:
-  one page owns each flag, no drift between the two), and every flag in
-  the list must still exist in ``launch/train.py`` (catches renames).
+- **Flag ownership**: each sync-related ``repro.launch.train`` flag and
+  each serving-plane flag (``repro.launch.serve`` + ``--serve``) must
+  appear in *exactly one* of the cookbook pages (sync-tuning /
+  control-loops / fault-tolerance / serving — the acceptance rule for
+  the operator docs: one page owns each flag, no drift between pages),
+  and every flag in the list must still exist in its launcher source
+  (catches renames).
 
 Exit code 1 on any failure.  Run:  python tools/check_docs.py
 """
@@ -39,7 +41,7 @@ DOC_FILES = (
 
 # one cookbook page owns each sync-related launcher flag
 FLAG_PAGES = ("docs/sync-tuning.md", "docs/control-loops.md",
-              "docs/fault-tolerance.md")
+              "docs/fault-tolerance.md", "docs/serving.md")
 SYNC_FLAGS = (
     "--sync", "--interval", "--compress-topk", "--int8", "--value-dtype",
     "--error-feedback", "--overlap-chunks", "--codec-block",
@@ -48,6 +50,21 @@ SYNC_FLAGS = (
     "--transport", "--topology", "--faults", "--no-tolerance",
 )
 LAUNCHER = "src/repro/launch/train.py"
+
+# serving-plane flags live in two launchers; map each to its source so the
+# existence check catches renames in either file
+SERVING_FLAGS = {
+    "--serve": "src/repro/launch/train.py",
+    "--scheduler": "src/repro/launch/serve.py",
+    "--slots": "src/repro/launch/serve.py",
+    "--batch": "src/repro/launch/serve.py",
+    "--prompt-len": "src/repro/launch/serve.py",
+    "--new-tokens": "src/repro/launch/serve.py",
+    "--requests": "src/repro/launch/serve.py",
+    "--router": "src/repro/launch/serve.py",
+    "--replicas": "src/repro/launch/serve.py",
+    "--autoscale": "src/repro/launch/serve.py",
+}
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _FENCE = re.compile(r"^```(\w*)\s*$")
@@ -125,7 +142,19 @@ def check_flag_ownership(errors: List[str]) -> int:
             errors.append(
                 f"flag {flag} must appear in exactly one of {FLAG_PAGES}, "
                 f"found in {owners or 'none'}")
-    return len(SYNC_FLAGS)
+    for flag, launcher in SERVING_FLAGS.items():
+        with open(os.path.join(ROOT, launcher)) as f:
+            if f'"{flag}"' not in f.read():
+                errors.append(
+                    f"{launcher}: serving flag {flag} no longer exists "
+                    f"(update tools/check_docs.py SERVING_FLAGS)")
+                continue
+        owners = [rel for rel, text in pages.items() if flag in text]
+        if len(owners) != 1:
+            errors.append(
+                f"flag {flag} must appear in exactly one of {FLAG_PAGES}, "
+                f"found in {owners or 'none'}")
+    return len(SYNC_FLAGS) + len(SERVING_FLAGS)
 
 
 def main() -> int:
@@ -134,7 +163,7 @@ def main() -> int:
     n_snips = check_snippets(errors)
     n_flags = check_flag_ownership(errors)
     print(f"docs-check: {len(_doc_paths())} files, {n_links} intra-repo "
-          f"links, {n_snips} python snippets, {n_flags} sync flags")
+          f"links, {n_snips} python snippets, {n_flags} launcher flags")
     for e in errors:
         print(f"[FAIL] {e}")
     if not errors:
