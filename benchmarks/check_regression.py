@@ -26,7 +26,11 @@ checker makes them a *gate*, not a log.  Checks, cheapest first:
   plane the same way: the continuous variant's router event stream must
   replay placement-for-placement through a fresh ``GeoRouter`` and the
   windowed load stream decision-for-decision through a fresh
-  ``ServingElasticityController``.
+  ``ServingElasticityController``.  ``BENCH_elasticity.json`` records the
+  live-migration decision stream (plan diff, keep set, barrier-reconcile
+  stall, staged snapshot bytes, replaced full pause); replaying the
+  scenario's events through a fresh ``ElasticityController`` and
+  ``ReconfigPlan.migration_bill`` must reproduce it field-for-field.
 - **Banded** (deterministic sims, 5%): the elasticity benchmark's
   speedup / cost-reduction / traffic-reduction and the serving
   benchmark's throughput-speedup / p99-improvement (discrete-event
@@ -372,6 +376,45 @@ def check_serving_replay(gate: Gate, base: Dict) -> None:
                      scale_replayed, base["autoscaler"]["decisions"])
 
 
+def check_migration_replay(gate: Gate, base: Dict) -> None:
+    """Replay the live-migration decision stream: rebuild the committed
+    scenario's plan, feed the same two events through a fresh
+    ``ElasticityController``, and re-derive each migration's bill
+    (``ReconfigPlan.migration_bill`` — keep set, barrier-reconcile stall,
+    staged snapshot bytes, replaced full pause) — the recomputed stream
+    must match the committed one field-for-field.  This pins the whole
+    migration cost law (plan diff -> pod transition -> barrier-overlap
+    billing) deterministically, without re-running the DES."""
+    from benchmarks.elasticity import (MODEL_MB, N_ITERS, NEW_BANDWIDTH,
+                                       T_BANDWIDTH, T_LEAVE,
+                                       migration_decision, paper_clouds)
+    from repro.core.control_plane import (CloudEvent, ElasticityController,
+                                          TrainingRequest,
+                                          build_training_plan)
+    from repro.core.sync import SyncConfig
+
+    scen = base["scenario"]
+    plan = build_training_plan(TrainingRequest(
+        model="resnet18", clouds=paper_clouds(),
+        sync=SyncConfig("asgd_ga", 8), n_iters=N_ITERS,
+        global_batch=scen["global_batch"]))
+    controller = ElasticityController(plan, ref_bandwidth_mbps=100.0)
+    rc_leave = controller.handle(
+        CloudEvent("cloud_left", region="chongqing", time_s=T_LEAVE))
+    rc_bw = controller.handle(
+        CloudEvent("bandwidth_changed", bandwidth_mbps=NEW_BANDWIDTH,
+                   time_s=T_BANDWIDTH))
+    replayed = [migration_decision(rc_leave, MODEL_MB, 100.0),
+                migration_decision(rc_bw, MODEL_MB, NEW_BANDWIDTH)]
+    recorded = base["migration"]["decisions"]
+    _check_decisions(gate, "elasticity.migration_replay.decisions",
+                     replayed, recorded)
+    gate.check("elasticity.migration_replay.barrier_overlap_billing",
+               all(d["barrier_s"] < d["pause_replaced_s"]
+                   for d in replayed),
+               "every migration's stall below the full pause it replaced")
+
+
 # ----------------------------------------------------------- banded checks
 
 
@@ -386,6 +429,11 @@ def check_elasticity_sim(gate: Gate, base: Dict) -> None:
                    f"baseline {b} vs fresh {f} (band {SIM_TOL:.0%})")
     gate.check("elasticity.elastic_beats_static", fresh["speedup"] > 1.0,
                f"speedup {fresh['speedup']}")
+    gate.check("elasticity.no_pause_in_elastic_run",
+               fresh["elastic"]["reconfig_s"]
+               <= base["migration"]["pause_replaced_s_total"],
+               f"fresh reconfig stall {fresh['elastic']['reconfig_s']}s vs "
+               f"replaced pauses {base['migration']['pause_replaced_s_total']}s")
 
 
 def check_serving_sim(gate: Gate, base: Dict) -> None:
@@ -468,6 +516,7 @@ def main(argv: Sequence[str] = None) -> int:
     check_topology_replay(gate, baselines["autotune"])
     check_faults_replay(gate, baselines["faults"])
     check_serving_replay(gate, baselines["serving"])
+    check_migration_replay(gate, baselines["elasticity"])
     check_elasticity_sim(gate, baselines["elasticity"])
     check_serving_sim(gate, baselines["serving"])
     check_encode_speedup(gate, baselines["wan_codec"])

@@ -1,0 +1,242 @@
+"""Asynchronous checkpoint engine: snapshots streamed off the training step.
+
+The training loop's only blocking cost is :meth:`AsyncCheckpointEngine.
+snapshot` — it captures the (immutable) device arrays, kicks off the
+device-to-host copies asynchronously, and enqueues the rest to a background
+worker thread.  The worker finalizes the host copies into *donated host
+buffers* (a per-leaf pool reused across snapshots, so steady-state
+snapshotting allocates nothing), serializes them with the checkpoint
+layer's writer, and commits each snapshot as a step-tagged directory
+(``step_00000042``) via a single atomic directory rename — a crash at any
+point leaves only fully-committed snapshots plus an ignorable ``.tmp``
+staging dir, never a torn checkpoint.
+
+API contract (what the trainer/launcher rely on):
+
+- ``snapshot(tree, step)`` returns immediately; at most ``max_inflight``
+  snapshots queue before it applies backpressure.
+- ``wait()`` blocks until the queue drains and re-raises any background
+  failure as :class:`SnapshotError`.
+- ``last_durable()`` names the newest *committed* snapshot — the recovery
+  base for rollback crash handling and the migration source for live pod
+  resizes.  It only ever advances after the atomic rename.
+- ``restore_last(like=...)`` drains the queue, then restores the newest
+  durable snapshot, falling back to older ones if an externally-damaged
+  directory fails its integrity check.
+- Retention: after each commit the engine prunes to the ``keep`` newest
+  snapshots.
+
+This is the subsystem that makes aggressive elasticity affordable: the
+live-migration path (``repro.training.trainer.LiveMigrator``) stages pod
+grow/shrink state from ``last_durable()`` while surviving pods keep
+stepping, so a reconfiguration costs one sync barrier instead of a full
+checkpoint-restore pause.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from . import checkpoint as ckpt
+
+Pytree = Any
+
+STEP_PREFIX = "step_"
+_STEP_RE = re.compile(rf"^{STEP_PREFIX}(\d+)$")
+_STOP = object()
+
+
+class SnapshotError(RuntimeError):
+    """A background snapshot failed; raised by ``wait()`` / ``snapshot()``
+    on the next call so the failure cannot pass silently."""
+
+
+def step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"{STEP_PREFIX}{step:08d}")
+
+
+def list_steps(root: str) -> List[int]:
+    """Steps of fully-committed snapshots under ``root``, ascending.  Only
+    directories holding a manifest count — a ``.tmp`` staging dir from an
+    interrupted commit is invisible here."""
+    out = []
+    try:
+        names = os.listdir(root)
+    except FileNotFoundError:
+        return out
+    for name in names:
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(root, name, ckpt._MANIFEST)):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+class AsyncCheckpointEngine:
+    """Background-thread snapshot engine over step-tagged directories."""
+
+    def __init__(self, root: str, *, keep: int = 2, max_inflight: int = 2):
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
+        self.root = os.fspath(root)
+        self.keep = int(keep)
+        os.makedirs(self.root, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue(maxsize=max(1, int(max_inflight)))
+        self._lock = threading.Lock()
+        self._error: Optional[Exception] = None
+        self._durable: List[int] = list_steps(self.root)
+        self._host_bufs: Dict[int, np.ndarray] = {}   # donated, reused
+        self.committed = 0
+        self._closed = False
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="ckpt-engine")
+        self._thread.start()
+
+    # ------------------------------------------------------------ enqueue
+    def snapshot(self, tree: Pytree, step: int,
+                 metadata: Optional[dict] = None) -> None:
+        """Enqueue an async snapshot of ``tree`` tagged ``step``.  Returns
+        once the device arrays are captured and their host copies kicked
+        off — the serialize + commit happens on the worker thread."""
+        if self._closed:
+            raise RuntimeError("engine is closed")
+        self._raise_pending()
+        keys, leaves, _ = ckpt._flatten_with_paths(tree)
+        for x in leaves:
+            # start the D2H DMA now so the worker's device_get finds the
+            # bytes already on host (jax arrays are immutable, so the
+            # training step can race ahead safely)
+            if hasattr(x, "copy_to_host_async"):
+                x.copy_to_host_async()
+        self._q.put((keys, leaves, int(step), dict(metadata or {})))
+
+    # ------------------------------------------------------------- worker
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is _STOP:
+                    return
+                try:
+                    self._commit_snapshot(*item)
+                except Exception as e:   # noqa: BLE001 — surfaced by wait()
+                    with self._lock:
+                        self._error = e
+            finally:
+                self._q.task_done()
+
+    def _host_copy(self, i: int, x) -> np.ndarray:
+        """Finalize one leaf's host copy into the donated buffer pool."""
+        a = ckpt._host_leaf(x)
+        buf = self._host_bufs.get(i)
+        if (buf is not None and buf.shape == a.shape
+                and buf.dtype == a.dtype and buf is not a):
+            np.copyto(buf, a)
+            return buf
+        if not (a.flags.owndata and a.flags.writeable
+                and a.flags.c_contiguous):
+            a = np.array(a)   # owned, writable donated buffer
+        self._host_bufs[i] = a
+        return a
+
+    def _commit_snapshot(self, keys, leaves, step: int, metadata: dict) -> None:
+        host = [self._host_copy(i, x) for i, x in enumerate(leaves)]
+        manifest = ckpt.build_manifest(keys, leaves, host, step, metadata)
+        final = step_dir(self.root, step)
+        tmp = final + ".tmp"
+        for stale in (tmp, final):
+            if os.path.isdir(stale):
+                shutil.rmtree(stale)
+        os.makedirs(tmp)
+        ckpt._commit(tmp, host, manifest)
+        os.replace(tmp, final)               # the atomic commit point
+        with self._lock:
+            self._durable = sorted(set(self._durable) | {step})
+            self.committed += 1
+        self._prune()
+
+    def _prune(self) -> None:
+        with self._lock:
+            drop = self._durable[:-self.keep]
+            self._durable = self._durable[-self.keep:]
+        for s in drop:
+            shutil.rmtree(step_dir(self.root, s), ignore_errors=True)
+
+    # -------------------------------------------------------------- query
+    def _raise_pending(self) -> None:
+        with self._lock:
+            err, self._error = self._error, None
+        if err is not None:
+            raise SnapshotError(f"background snapshot failed: {err!r}") from err
+
+    def wait(self) -> None:
+        """Block until every enqueued snapshot is committed (or failed);
+        re-raise the first background failure."""
+        self._q.join()
+        self._raise_pending()
+
+    def last_durable(self) -> Optional[Tuple[int, str]]:
+        """(step, directory) of the newest committed snapshot, or None.
+        Never names an in-flight or torn snapshot — the step list only
+        advances after the atomic directory rename."""
+        with self._lock:
+            if not self._durable:
+                return None
+            s = self._durable[-1]
+        return s, step_dir(self.root, s)
+
+    def restore_last(self, like: Pytree, *,
+                     pod_resize: Optional[str] = None) -> Tuple[Pytree, int]:
+        """Drain the queue, then restore the newest durable snapshot.
+
+        A snapshot this engine committed can only be damaged externally
+        (disk truncation, an operator's stray rm); on a
+        ``CheckpointCorruptError`` the damaged directory is skipped and the
+        next-newest durable snapshot is tried."""
+        self.wait()
+        while True:
+            with self._lock:
+                if not self._durable:
+                    raise FileNotFoundError(
+                        f"no durable snapshot under {self.root!r}")
+                s = self._durable[-1]
+            try:
+                return ckpt.restore(step_dir(self.root, s), like=like,
+                                    pod_resize=pod_resize)
+            except ckpt.CheckpointCorruptError:
+                with self._lock:
+                    if self._durable and self._durable[-1] == s:
+                        self._durable.pop()
+
+    # ------------------------------------------------------------ shutdown
+    def close(self) -> None:
+        """Drain the queue and stop the worker.  Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        self._q.put(_STOP)
+        self._thread.join()
+        self._raise_pending()
+
+    def __enter__(self) -> "AsyncCheckpointEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def blocking_equivalent(tree: Pytree, step: int, directory: str,
+                        metadata: Optional[dict] = None) -> str:
+    """Reference semantics for one engine snapshot: the blocking
+    ``checkpoint.save`` of the same tree at the same step, written under
+    ``directory`` with the engine's step-dir naming.  The property suite
+    asserts an async snapshot is bit-identical to this."""
+    d = step_dir(directory, step)
+    ckpt.save(d, tree, step=step, metadata=metadata)
+    return d

@@ -6,11 +6,22 @@ shape / step metadata.  ``save`` gathers addressable shards to host;
 (so a checkpoint written under one mesh can be restored under another —
 needed when the elastic scheduler changes the resource plan between runs,
 the paper's rescheduling path).
+
+Writes are atomic: both files are staged in a tmp sibling directory and
+``os.replace``d into place, arrays first, manifest last.  The manifest is
+the commit record — it carries the byte size and CRC of the arrays file it
+was written against, and ``restore`` verifies them — so a crash mid-save
+leaves either the previous intact checkpoint or a mismatch that raises
+:class:`CheckpointCorruptError`, never a silently torn restore.
 """
 from __future__ import annotations
 
 import json
+import io
 import os
+import shutil
+import tempfile
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -22,6 +33,13 @@ _MANIFEST = "manifest.json"
 _ARRAYS = "arrays.npz"
 
 
+class CheckpointCorruptError(RuntimeError):
+    """The checkpoint directory is torn: a file is missing, truncated, or
+    fails the manifest's integrity record.  Callers distinguish this
+    ("fall back to an older snapshot") from shape/key mismatches (a
+    programming error)."""
+
+
 def _flatten_with_paths(tree: Pytree):
     # jax.tree.flatten_with_path only exists in newer jax; the tree_util
     # spelling works across the versions this repo supports
@@ -31,34 +49,98 @@ def _flatten_with_paths(tree: Pytree):
     return keys, [leaf for _, leaf in flat], treedef
 
 
-def save(directory: str, tree: Pytree, step: int = 0,
-         metadata: Optional[dict] = None) -> None:
-    os.makedirs(directory, exist_ok=True)
-    keys, leaves, _ = _flatten_with_paths(tree)
-    host_leaves = []
-    for x in leaves:
-        a = np.asarray(jax.device_get(x))
-        if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
-            # npz has no cast for ml_dtypes extension types; store upcast
-            # (bf16 ⊂ fp32, lossless) — the manifest keeps the true dtype
-            a = a.astype(np.float32)
-        host_leaves.append(a)
-    np.savez(os.path.join(directory, _ARRAYS),
-             **{f"a{i}": a for i, a in enumerate(host_leaves)})
-    manifest = {
+def _host_leaf(x) -> np.ndarray:
+    a = np.asarray(jax.device_get(x))
+    if a.dtype.kind == "V" or a.dtype.name == "bfloat16":
+        # npz has no cast for ml_dtypes extension types; store upcast
+        # (bf16 ⊂ fp32, lossless) — the manifest keeps the true dtype
+        a = a.astype(np.float32)
+    return a
+
+
+def _commit(directory: str, host_leaves, manifest: dict) -> None:
+    """Stage arrays + manifest in a tmp sibling dir, then ``os.replace``
+    into ``directory`` (arrays first, manifest last — the manifest, which
+    records the arrays' size and CRC, is the commit point)."""
+    parent = os.path.dirname(os.path.abspath(directory)) or "."
+    tmp = tempfile.mkdtemp(prefix=".ckpt-stage-", dir=parent)
+    try:
+        apath = os.path.join(tmp, _ARRAYS)
+        np.savez(apath, **{f"a{i}": a for i, a in enumerate(host_leaves)})
+        with open(apath, "rb") as f:
+            blob = f.read()
+        manifest = dict(manifest,
+                        arrays_bytes=len(blob),
+                        arrays_crc32=zlib.crc32(blob))
+        mpath = os.path.join(tmp, _MANIFEST)
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+        os.replace(apath, os.path.join(directory, _ARRAYS))
+        os.replace(mpath, os.path.join(directory, _MANIFEST))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def build_manifest(keys, leaves, host_leaves, step: int,
+                   metadata: Optional[dict]) -> dict:
+    return {
         "step": step,
         "keys": keys,
         "dtypes": [str(x.dtype) for x in leaves],
         "shapes": [list(a.shape) for a in host_leaves],
         "metadata": metadata or {},
     }
-    with open(os.path.join(directory, _MANIFEST), "w") as f:
-        json.dump(manifest, f, indent=1)
+
+
+def save(directory: str, tree: Pytree, step: int = 0,
+         metadata: Optional[dict] = None) -> None:
+    os.makedirs(directory, exist_ok=True)
+    keys, leaves, _ = _flatten_with_paths(tree)
+    host_leaves = [_host_leaf(x) for x in leaves]
+    _commit(directory, host_leaves,
+            build_manifest(keys, leaves, host_leaves, step, metadata))
 
 
 def load_manifest(directory: str) -> dict:
-    with open(os.path.join(directory, _MANIFEST)) as f:
-        return json.load(f)
+    path = os.path.join(directory, _MANIFEST)
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except json.JSONDecodeError as e:
+        raise CheckpointCorruptError(
+            f"checkpoint manifest {path!r} is not valid JSON "
+            f"(torn write?): {e}") from e
+
+
+def _load_arrays(directory: str, manifest: dict):
+    """Read + integrity-check ``arrays.npz`` against the manifest."""
+    apath = os.path.join(directory, _ARRAYS)
+    try:
+        with open(apath, "rb") as f:
+            blob = f.read()
+    except FileNotFoundError as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {directory!r} has a manifest but no {_ARRAYS} "
+            f"(torn write?)") from e
+    want_bytes = manifest.get("arrays_bytes")
+    if want_bytes is not None:   # absent only in pre-atomic checkpoints
+        if len(blob) != want_bytes:
+            raise CheckpointCorruptError(
+                f"checkpoint {apath!r} is {len(blob)} bytes but the "
+                f"manifest committed {want_bytes} (truncated or torn "
+                f"write)")
+        if zlib.crc32(blob) != manifest.get("arrays_crc32"):
+            raise CheckpointCorruptError(
+                f"checkpoint {apath!r} fails its manifest CRC "
+                f"(corrupted or torn write)")
+    try:
+        with np.load(io.BytesIO(blob)) as data:
+            return {k: data[f"a{i}"]
+                    for i, k in enumerate(manifest["keys"])}
+    except Exception as e:   # BadZipFile / npy-header ValueError / KeyError
+        raise CheckpointCorruptError(
+            f"checkpoint {apath!r} is unreadable (truncated or torn "
+            f"write): {e}") from e
 
 
 def _resize_pod_dim(arr: np.ndarray, n_new: int, how: str) -> np.ndarray:
@@ -100,12 +182,14 @@ def restore(directory: str, like: Pytree,
     leading pod-dimension size restores into a model stacked for another —
     the leading dimension is grown/shrunk with the named transform while all
     trailing dimensions must still match exactly.
+
+    Raises :class:`CheckpointCorruptError` when the directory's files are
+    missing, truncated, or fail the manifest's size/CRC record.
     """
     if pod_resize not in (None, "mean", "clone", "drop"):
         raise ValueError(f"unknown pod_resize mode {pod_resize!r}")
     manifest = load_manifest(directory)
-    data = np.load(os.path.join(directory, _ARRAYS))
-    by_key = {k: data[f"a{i}"] for i, k in enumerate(manifest["keys"])}
+    by_key = _load_arrays(directory, manifest)
 
     keys, leaves, treedef = _flatten_with_paths(like)
     out = []

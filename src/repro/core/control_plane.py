@@ -387,6 +387,27 @@ class ReconfigPlan:
                      if r in old_regions)
         return keep, len(new_regions)
 
+    def migration_bill(self, model_mb: float,
+                       bandwidth_mbps: float) -> Dict[str, float]:
+        """Cost of applying this plan as a *live migration* instead of a
+        checkpointed full pause (the async snapshot engine's path).
+
+        ``barrier_s`` is the only stall the active regions pay: one
+        barrier-aligned payload transfer to reconcile the staged state
+        against the live barrier state — at most one sync round; zero when
+        the diff is structurally empty (an interval/batch-split move
+        re-stacks nothing).  ``migrate_mb`` is the snapshot shipment the
+        engine streamed in the background — one full model replica per
+        joining or leaving region — billed as overlapped traffic, never
+        as pause.  The re-plan itself also overlaps with compute."""
+        structural = not self.diff.is_empty
+        moved = len(self.diff.added) + len(self.diff.removed)
+        return {
+            "barrier_s": (model_mb * 8.0 / bandwidth_mbps) if structural
+            else 0.0,
+            "migrate_mb": float(model_mb * moved),
+        }
+
 
 def adapt_interval(sync: SyncConfig, base_interval: int,
                    ref_bandwidth_mbps: float, bandwidth_mbps: float,

@@ -1416,3 +1416,20 @@ def traffic_per_step_mb(cfg: SyncConfig, model_mb: float,
         return model_mb
     return cfg.payload_mb(model_mb, bucket_weights=bucket_weights) \
         / cfg.interval
+
+
+def migration_wire_mb(stacked_params: Pytree, n_new: int) -> float:
+    """WAN bytes a *live* pod migration stages in the background.
+
+    Each joining pod pulls one full fp32 per-pod replica from the last
+    durable snapshot; each leaving pod pushes one replica-sized payload
+    (its parameters + accumulator state folds into the survivors'
+    sum-preserving resize).  Surviving pods move nothing — their state
+    never leaves the device.  This traffic overlaps with training (the
+    engine streams it off the step path), so the DES bills it as
+    background ``traffic_mb``, not as pause; the only stall left is the
+    one barrier-aligned reconcile."""
+    n_old = jax.tree.leaves(stacked_params)[0].shape[0]
+    per_pod_mb = sum(
+        x.size * 4 for x in jax.tree.leaves(stacked_params)) / n_old / 1e6
+    return per_pod_mb * abs(n_new - n_old)

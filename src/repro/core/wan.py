@@ -122,7 +122,11 @@ class SimEvent:
     online), ``slowdown`` (region's iter time scaled by ``factor``),
     ``reconfig`` (elasticity engine output: swap in a new cloud set /
     ``SyncConfig`` after a ``pause_s`` reconfiguration stall — checkpoint
-    re-stack + re-plan cost — charged to every active region),
+    re-stack + re-plan cost — charged to every active region; with
+    ``migration=True`` the re-stack is a *live migration* staged from the
+    async snapshot engine, so active regions pay only the barrier-aligned
+    ``barrier_s`` reconcile and the staged ``migrate_mb`` snapshot bytes
+    bill as overlapped background traffic, never as stall),
     ``link_failed`` (the WAN link drops transfers for ``duration_s``: each
     sync round inside the window pays ``n_failures`` failed attempts of
     retry/backoff wall-clock per :func:`retry_schedule`, and the retried
@@ -141,6 +145,9 @@ class SimEvent:
     pause_s: float = 0.0
     duration_s: float = 0.0                 # link_failed: outage window
     n_failures: int = 1                     # link_failed: attempts per round
+    migration: bool = False                 # reconfig: live-migrated re-stack
+    barrier_s: float = 0.0                  # migration: reconcile stall
+    migrate_mb: float = 0.0                 # migration: staged snapshot bytes
 
     _KINDS = ("bandwidth_changed", "cloud_left", "cloud_joined",
               "slowdown", "reconfig", "link_failed", "pod_crashed")
@@ -427,13 +434,22 @@ def simulate(
             elif e.kind == "reconfig":
                 n_reconfigs += 1
                 # barrier to the slowest, then everyone stalls for the
-                # checkpointed re-stack + re-plan
+                # re-stack: the full checkpointed pause (legacy), or — for
+                # a live migration — only the barrier-aligned reconcile
+                # (the snapshot staging and the re-plan overlapped with
+                # compute, so their bytes bill as background traffic and
+                # their time never reaches the clock)
+                stall = e.barrier_s if e.migration else e.pause_s
                 t_bar = max(clock[c.region] for c in active)
                 for c in active:
                     tl[c.region].wait_s += t_bar - clock[c.region]
-                    tl[c.region].reconfig_s += e.pause_s
-                    clock[c.region] = t_bar + e.pause_s
-                t_bar += e.pause_s
+                    tl[c.region].reconfig_s += stall
+                    clock[c.region] = t_bar + stall
+                t_bar += stall
+                if e.migration and e.migrate_mb > 0.0 and active:
+                    # staged snapshot shipment: billed once, to the
+                    # coordinating (first active) region's meter
+                    tl[active[0].region].traffic_mb += e.migrate_mb
                 if e.sync is not None:
                     sync = e.sync
                     payload, sync_every, barrier, chunks = \

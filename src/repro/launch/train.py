@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt
+from repro.checkpoint.async_engine import AsyncCheckpointEngine
 from repro.configs import ARCH_IDS, get_arch
 from repro.configs.base import dense
 from repro.core.autotune import (AdaptiveSyncController, BucketStats,
@@ -57,7 +58,8 @@ from repro.core.transport import (MeasuredWanProbe, MeshTransport,
 from repro.core.wan import BandwidthTrace, WANConfig
 from repro.data.pipeline import TokenStream
 from repro.models.registry import get_model_fns
-from repro.training.trainer import Trainer, TrainerConfig, apply_reconfig
+from repro.training.trainer import (LiveMigrator, Trainer, TrainerConfig,
+                                    apply_reconfig)
 
 
 def parse_events(spec: str) -> Dict[int, list]:
@@ -388,6 +390,20 @@ def main(argv=None):
                     help="per-pod data distribution, e.g. 2:1")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--async-checkpoint", action="store_true",
+                    help="stream snapshots off the training step: an "
+                         "AsyncCheckpointEngine captures the full train "
+                         "state at every sync barrier on a background "
+                         "thread (atomic step-tagged dirs), and pod "
+                         "reconfigurations migrate live from the last "
+                         "durable snapshot instead of pausing to "
+                         "checkpoint-restore.  See docs/checkpointing.md")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="with --async-checkpoint: also snapshot every N "
+                         "steps between barriers (0 = barriers only)")
+    ap.add_argument("--keep-snapshots", type=int, default=2,
+                    help="with --async-checkpoint: retention depth — the "
+                         "engine prunes to the N newest durable snapshots")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--events", default="",
                     help="mid-run cloud events, e.g. "
@@ -548,6 +564,19 @@ def main(argv=None):
               f"{type(transport).__name__}"
               + (f", {jax.device_count()} devices"
                  if isinstance(transport, MeshTransport) else ""))
+    if not args.async_checkpoint:
+        if args.snapshot_every:
+            raise SystemExit(
+                "--snapshot-every tunes the async snapshot engine's "
+                "cadence: it needs --async-checkpoint")
+        if args.keep_snapshots != 2:
+            raise SystemExit(
+                "--keep-snapshots tunes the async snapshot engine's "
+                "retention: it needs --async-checkpoint")
+    elif args.keep_snapshots < 1:
+        raise SystemExit(
+            "--keep-snapshots must keep at least the one snapshot the "
+            "rollback/migration paths recover from")
     fault_plan = parse_faults(args.faults)
     if args.no_tolerance and fault_plan is None:
         raise SystemExit(
@@ -675,10 +704,28 @@ def main(argv=None):
     n_retunes = 0
     n_rollbacks = 0
 
+    # async snapshot engine: full-train-state snapshots streamed off the
+    # step at every sync barrier; reconfigurations migrate live from the
+    # last durable snapshot and crashes roll back to it
+    engine = migrator = None
+    if args.async_checkpoint:
+        snap_root = (f"{args.ckpt_dir}/snapshots" if args.ckpt_dir
+                     else tempfile.mkdtemp(prefix="snapshots_"))
+        engine = AsyncCheckpointEngine(snap_root, keep=args.keep_snapshots)
+        migrator = LiveMigrator(engine)
+        engine.snapshot(state, 0,
+                        metadata={"model": name, "pods": trainer.cfg.n_pods})
+        print(f"[ckpt] async snapshot engine at {snap_root}: keep "
+              f"{args.keep_snapshots}, cadence "
+              f"{'every ' + str(args.snapshot_every) + ' steps + ' if args.snapshot_every else ''}"
+              f"sync barriers")
+
     # mid-round crash recovery: keep a snapshot of the FULL train state at
     # the last completed sync barrier — a rollback-mode crash unwinds to it
+    # (the async engine's durable snapshots subsume this blocking path)
     barrier_dir = None
-    if chaos is not None and chaos.tolerate and chaos.plan.has_crashes:
+    if engine is None and chaos is not None and chaos.tolerate \
+            and chaos.plan.has_crashes:
         barrier_dir = (f"{args.ckpt_dir}/fault_barrier" if args.ckpt_dir
                        else tempfile.mkdtemp(prefix="fault_barrier_"))
 
@@ -704,6 +751,14 @@ def main(argv=None):
                   f"diff {rc.diff.summary()}, "
                   f"batch split {rc.new.batch_split}, "
                   f"interval {rc.new.request.sync.interval}")
+            if migrator is not None and not rc.diff.is_empty:
+                # live migration: pre-move the target-pod-count state from
+                # the last durable snapshot off the step path — surviving
+                # pods keep stepping until the barrier reconciles
+                keep_pods, n_new = rc.pod_transition()
+                migrator.stage(state, n_new, keep=keep_pods)
+                print(f"[elasticity] staging {n_new}-pod migration from "
+                      f"the last durable snapshot (background)")
 
     for step in range(args.steps):
         # WAN trace: segment changes surface as bandwidth_changed events on
@@ -745,13 +800,23 @@ def main(argv=None):
             # mid-round crash: progress since the barrier includes the dead
             # pod's replica and cannot be re-stacked — restore the snapshot
             # (the crash then degrades rounds until the pod is removed)
-            state, _ = ckpt.restore(barrier_dir, like=state)
+            if engine is not None:
+                state, _ = engine.restore_last(like=state)
+            else:
+                state, _ = ckpt.restore(barrier_dir, like=state)
             n_rollbacks += 1
             print(f"[faults] pod {crash.pod} unreachable mid-round at "
                   f"step {step + 1}: rolled back to the last sync barrier")
         else:
-            if barrier_dir is not None and trainer.cfg.n_pods > 1 and \
-                    is_sync_step(trainer.cfg.sync, step):
+            at_sync = trainer.cfg.n_pods > 1 and \
+                is_sync_step(trainer.cfg.sync, step)
+            if engine is not None and (
+                    at_sync or (args.snapshot_every and
+                                (step + 1) % args.snapshot_every == 0)):
+                engine.snapshot(state, step + 1,
+                                metadata={"model": name,
+                                          "pods": trainer.cfg.n_pods})
+            elif barrier_dir is not None and at_sync:
                 ckpt.save(barrier_dir, state, step=step + 1,
                           metadata={"model": name,
                                     "pods": trainer.cfg.n_pods})
@@ -787,8 +852,14 @@ def main(argv=None):
                               state.params, step=step + 1,
                               metadata={"model": name,
                                         "pods": trainer.cfg.n_pods})
-                trainer, state, applied = apply_reconfig(
-                    trainer, state, pending)
+                if migrator is not None:
+                    # one barrier, not a pause: the staged migration joins
+                    # here and the live state is re-stacked in place
+                    trainer, state, applied = migrator.reconcile(
+                        trainer, state, pending)
+                else:
+                    trainer, state, applied = apply_reconfig(
+                        trainer, state, pending)
                 if applied:
                     n_reconfigs += 1
                     plan = pending.new
@@ -802,6 +873,12 @@ def main(argv=None):
                         # re-anchor the autotuner's belief so its next
                         # update reasons about the knobs actually running
                         tuner.resync(trainer.cfg.sync)
+                    if engine is not None:
+                        # re-anchor the durable base on the new membership
+                        # (an old-pod-count snapshot cannot back a rollback)
+                        engine.snapshot(state, step + 1,
+                                        metadata={"model": name,
+                                                  "pods": trainer.cfg.n_pods})
                     print(f"[elasticity] reconfig applied at barrier "
                           f"step {step + 1}: {trainer.cfg.n_pods} pods, "
                           f"sync interval "
@@ -820,6 +897,15 @@ def main(argv=None):
                 (step + 1) % args.ckpt_every == 0:
             ckpt.save(args.ckpt_dir, state.params, step=step + 1,
                       metadata={"model": name, "sync": args.sync})
+
+    last_durable = None
+    if engine is not None:
+        engine.wait()
+        durable = engine.last_durable()
+        last_durable = durable[0] if durable is not None else None
+        engine.close()
+        print(f"[ckpt] async engine: {engine.committed} snapshots "
+              f"committed, last durable step {last_durable}")
 
     # -------------------------------------------------- serving smoke
     serve_info = None
@@ -909,6 +995,12 @@ def main(argv=None):
         "crash_recoveries": (chaos.crash_recoveries
                              if chaos is not None else None),
         "rollbacks": n_rollbacks if chaos is not None else None,
+        "async_checkpoint": args.async_checkpoint,
+        "snapshots": engine.committed if engine is not None else None,
+        "last_durable_step": last_durable,
+        "migrations": migrator.migrations if migrator is not None else None,
+        "staged_mb": (round(migrator.staged_mb, 3)
+                      if migrator is not None else None),
         "serve": serve_info,
         "wall_s": round(time.time() - t0, 1),
     }

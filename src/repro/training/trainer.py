@@ -408,6 +408,142 @@ def apply_reconfig(trainer: Trainer, state: TrainState, reconfig
 
 
 # ---------------------------------------------------------------------------
+# elasticity: live pod migration off the step path
+# ---------------------------------------------------------------------------
+
+
+def _resized_like(tree: Pytree, n_old: int, n_new: int) -> Pytree:
+    """Shape/dtype skeleton of ``tree`` with every pod-stacked leaf's
+    leading dimension re-sized ``n_old -> n_new`` (scalar bookkeeping
+    leaves pass through)."""
+    def f(x):
+        shape = tuple(getattr(x, "shape", ()))
+        if len(shape) >= 1 and shape[0] == n_old:
+            shape = (n_new,) + shape[1:]
+        return jax.ShapeDtypeStruct(shape, x.dtype)
+    return jax.tree.map(f, tree)
+
+
+class LiveMigrator:
+    """Live pod migration: a grow/shrink staged off the training step.
+
+    On a ``PlanDiff`` the surviving pods keep stepping.  :meth:`stage`
+    materializes the target-pod-count state skeleton from the async
+    engine's last durable snapshot on a background thread, via the
+    checkpoint layer's ``pod_resize`` transforms — in a real deployment
+    this is the bulk WAN shipment of the migration (the
+    ``migration_wire_mb`` bytes the DES bills as overlapped background
+    traffic).  At the next sync barrier :meth:`reconcile` applies the same
+    pod-resize transforms to the *live* state (``apply_reconfig`` /
+    ``resize_train_state`` — EF residuals and optimizer moments carried
+    under exactly the invariants ``retune_sync_state`` guarantees), so the
+    reconciled state is bit-identical to a pause-and-restore taken at the
+    barrier; the staged restore validates the target structure and stands
+    by as the recovery base if the barrier never comes (pod crash
+    mid-migration).  The reconfiguration's only stall is the one barrier
+    it reconciles at."""
+
+    def __init__(self, engine):
+        import threading
+        self.engine = engine
+        self._threading = threading
+        self._pending: Optional[Tuple[Any, Dict[str, Any]]] = None
+        self.migrations = 0
+        self.restaged = 0
+        self.staged_mb = 0.0
+        self.errors: List[Exception] = []
+        self.last_staged: Optional[Dict[str, Any]] = None
+
+    @property
+    def pending(self) -> bool:
+        return self._pending is not None
+
+    def stage(self, state: TrainState, n_new: int,
+              keep: Optional[Tuple[int, ...]] = None) -> None:
+        """Start materializing the ``n_new``-pod state from the last
+        durable snapshot in the background.  Supersedes any earlier
+        un-reconciled stage (the launcher composes events between
+        barriers — only the barrier-time plan is reconciled)."""
+        from repro.checkpoint import checkpoint as _ckpt
+
+        if self._pending is not None:
+            self._join_pending(superseded=True)
+        n_old = jax.tree.leaves(state.params)[0].shape[0]
+        like = _resized_like(state, n_old, n_new)
+        holder: Dict[str, Any] = {"n_new": n_new,
+                                  "keep": tuple(keep) if keep else None}
+
+        def work():
+            try:
+                self.engine.wait()
+                durable = self.engine.last_durable()
+                if durable is None:
+                    return
+                snap_step, path = durable
+                staged, ckpt_step = _ckpt.restore(path, like=like,
+                                                  pod_resize="mean")
+                holder.update(
+                    state=staged, snapshot_step=snap_step,
+                    ckpt_step=ckpt_step,
+                    mb=sum(np.asarray(x).nbytes
+                           for x in jax.tree.leaves(staged.params)) / 1e6)
+            except Exception as e:   # noqa: BLE001 — surfaced at reconcile
+                holder["error"] = e
+
+        t = self._threading.Thread(target=work, daemon=True,
+                                   name="live-migrator")
+        t.start()
+        self._pending = (t, holder)
+
+    def _join_pending(self, superseded: bool = False) -> Optional[Dict]:
+        t, holder = self._pending
+        t.join()
+        self._pending = None
+        err = holder.get("error")
+        if err is not None:
+            # a failed stage degrades to a plain barrier re-stack — the
+            # reconcile math never depended on the staged bytes
+            self.errors.append(err)
+            return None
+        if superseded:
+            self.restaged += 1
+            return None
+        if "state" not in holder:
+            return None   # no durable snapshot yet: nothing was staged
+        return holder
+
+    def reconcile(self, trainer: Trainer, state: TrainState, reconfig
+                  ) -> Tuple[Trainer, TrainState, bool]:
+        """At the sync barrier: reconcile the migration against the live
+        state.  Same signature and semantics as :func:`apply_reconfig` —
+        and bit-identical results: the staged snapshot never enters the
+        numerics, it only pre-moved the bytes a joining/leaving pod needs
+        and pre-validated the target structure."""
+        staged = self._join_pending() if self._pending is not None else None
+        new_trainer, new_state, applied = apply_reconfig(trainer, state,
+                                                         reconfig)
+        if not applied:
+            return new_trainer, new_state, applied
+        self.migrations += 1
+        if staged is not None:
+            if staged["n_new"] != new_trainer.cfg.n_pods:
+                # the plan evolved between stage and barrier: the staged
+                # skeleton is stale — the barrier re-stack covered it
+                self.restaged += 1
+            else:
+                ref = jax.tree.leaves(new_state.params)
+                got = jax.tree.leaves(staged["state"].params)
+                if [(tuple(a.shape), a.dtype) for a in got] != \
+                        [(tuple(a.shape), a.dtype) for a in ref]:
+                    raise RuntimeError(
+                        "staged migration skeleton does not match the "
+                        "reconciled state — snapshot/plan divergence")
+                self.staged_mb += staged["mb"]
+                self.last_staged = staged
+        return new_trainer, new_state, applied
+
+
+# ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,328 @@
+"""Async snapshot engine + live pod migration: the checkpoint-equivalence
+suite that locks the elastic-reconfig path down.
+
+Covers the engine's durability contract (``last_durable`` only advances
+after the atomic rename; partial commits are never visible; retention
+prunes to ``keep``), its failure surface (background errors re-raised by
+``wait``; externally-corrupted snapshots skipped on restore), and — the
+acceptance bar — that a live migration through ``LiveMigrator`` is
+step-for-step loss-identical to a pause-and-restore reconfiguration on the
+same event trace.
+"""
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.checkpoint.async_engine import (AsyncCheckpointEngine,
+                                           SnapshotError,
+                                           blocking_equivalent, list_steps,
+                                           step_dir)
+from repro.core.control_plane import (CloudEvent, ElasticityController,
+                                      TrainingRequest, build_training_plan)
+from repro.core.scheduler import CloudResources
+from repro.core.sync import SyncConfig, is_sync_step
+from repro.training.trainer import (LiveMigrator, Trainer, TrainerConfig,
+                                    apply_reconfig)
+
+CLOUDS = (CloudResources("sh", (("cascade", 6),), data_size=2.0),
+          CloudResources("cq", (("sky", 6),), data_size=1.0),
+          CloudResources("bj", (("sky", 3),), data_size=1.0))
+
+
+def _tree(n_pods, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(n_pods, 6, 3)), jnp.float32),
+        "opt": {"m": jnp.asarray(rng.normal(size=(n_pods, 6, 3)),
+                                 jnp.float32)},
+        "bias": jnp.asarray(rng.normal(size=(n_pods, 3)), jnp.float32),
+    }
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------ commit & retention
+
+
+def test_engine_commits_and_prunes_to_keep(tmp_path):
+    eng = AsyncCheckpointEngine(str(tmp_path), keep=2)
+    for s in range(5):
+        eng.snapshot(_tree(2, seed=s), s)
+    eng.wait()
+    assert eng.committed == 5
+    assert list_steps(str(tmp_path)) == [3, 4]
+    step, path = eng.last_durable()
+    assert step == 4 and path == step_dir(str(tmp_path), 4)
+    eng.close()
+
+
+def test_engine_rejects_keepless_retention(tmp_path):
+    with pytest.raises(ValueError, match="keep"):
+        AsyncCheckpointEngine(str(tmp_path), keep=0)
+
+
+def test_engine_reseeds_durable_steps_from_disk(tmp_path):
+    eng = AsyncCheckpointEngine(str(tmp_path), keep=3)
+    eng.snapshot(_tree(2), 7)
+    eng.close()
+    eng2 = AsyncCheckpointEngine(str(tmp_path), keep=3)
+    assert eng2.last_durable()[0] == 7
+    eng2.close()
+
+
+def test_async_snapshot_matches_blocking_save(tmp_path):
+    """The engine's commit is byte-for-byte the checkpoint layer's writer:
+    restored trees and manifest structure match a blocking ``save`` of the
+    same tree at the same step (file bytes differ only by zip mtimes)."""
+    tree = _tree(3, seed=11)
+    eng = AsyncCheckpointEngine(str(tmp_path / "async"), keep=1)
+    eng.snapshot(tree, 42, metadata={"pods": 3})
+    eng.wait()
+    _, apath = eng.last_durable()
+    bpath = blocking_equivalent(tree, 42, str(tmp_path / "block"),
+                                metadata={"pods": 3})
+    like = jax.tree.map(jnp.zeros_like, tree)
+    a, astep = ckpt.restore(apath, like)
+    b, bstep = ckpt.restore(bpath, like)
+    assert astep == bstep == 42
+    _assert_trees_equal(a, b)
+    ma, mb = ckpt.load_manifest(apath), ckpt.load_manifest(bpath)
+    for k in ("keys", "dtypes", "shapes", "step", "metadata"):
+        assert ma[k] == mb[k]
+    eng.close()
+
+
+def test_donated_buffers_are_reused_across_snapshots(tmp_path):
+    eng = AsyncCheckpointEngine(str(tmp_path), keep=1)
+    eng.snapshot(_tree(2, seed=0), 0)
+    eng.wait()
+    bufs0 = dict(eng._host_bufs)
+    eng.snapshot(_tree(2, seed=1), 1)
+    eng.wait()
+    assert all(eng._host_bufs[i] is bufs0[i] for i in bufs0)
+    out, _ = ckpt.restore(eng.last_durable()[1],
+                          jax.tree.map(jnp.zeros_like, _tree(2)))
+    _assert_trees_equal(out, _tree(2, seed=1))
+    eng.close()
+
+
+# --------------------------------------------------- durability under race
+
+
+def _gated_engine(root, keep=2):
+    """Engine whose commit blocks on an event — lets a test observe the
+    window between enqueue and the atomic rename."""
+    eng = AsyncCheckpointEngine(root, keep=keep)
+    gate = threading.Event()
+    orig = eng._commit_snapshot
+
+    def gated(*item):
+        assert gate.wait(timeout=30)
+        orig(*item)
+
+    eng._commit_snapshot = gated
+    return eng, gate
+
+
+def test_last_durable_advances_only_after_commit(tmp_path):
+    eng, gate = _gated_engine(str(tmp_path))
+    eng.snapshot(_tree(2), 5)
+    # in flight: not durable, and no partial step dir is visible on disk
+    assert eng.last_durable() is None
+    assert list_steps(str(tmp_path)) == []
+    gate.set()
+    eng.wait()
+    assert eng.last_durable()[0] == 5
+    assert list_steps(str(tmp_path)) == [5]
+    eng.close()
+
+
+def test_restore_last_drains_inflight_snapshots(tmp_path):
+    eng, gate = _gated_engine(str(tmp_path))
+    tree = _tree(2, seed=9)
+    eng.snapshot(tree, 3)
+    gate.set()
+    out, step = eng.restore_last(like=jax.tree.map(jnp.zeros_like, tree))
+    assert step == 3
+    _assert_trees_equal(out, tree)
+    eng.close()
+
+
+def test_wait_surfaces_background_failure_as_snapshot_error(tmp_path):
+    eng = AsyncCheckpointEngine(str(tmp_path), keep=1)
+
+    def boom(*item):
+        raise OSError("disk detached")
+
+    eng._commit_snapshot = boom
+    eng.snapshot(_tree(2), 1)
+    with pytest.raises(SnapshotError, match="disk detached"):
+        eng.wait()
+    eng.close()
+
+
+def test_restore_last_falls_back_past_corrupted_newest(tmp_path):
+    """An externally-damaged newest snapshot (truncated arrays.npz) is
+    skipped and the previous durable snapshot restores instead."""
+    eng = AsyncCheckpointEngine(str(tmp_path), keep=3)
+    older = _tree(2, seed=1)
+    eng.snapshot(older, 1)
+    eng.snapshot(_tree(2, seed=2), 2)
+    eng.wait()
+    apath = os.path.join(step_dir(str(tmp_path), 2), "arrays.npz")
+    with open(apath, "rb") as f:
+        blob = f.read()
+    with open(apath, "wb") as f:
+        f.write(blob[: len(blob) // 2])
+    out, step = eng.restore_last(like=jax.tree.map(jnp.zeros_like, older))
+    assert step == 1
+    _assert_trees_equal(out, older)
+    eng.close()
+
+
+def test_restore_last_with_nothing_durable_raises(tmp_path):
+    eng = AsyncCheckpointEngine(str(tmp_path), keep=1)
+    with pytest.raises(FileNotFoundError):
+        eng.restore_last(like=_tree(2))
+    eng.close()
+
+
+# ------------------------------------- the checkpoint-equivalence contract
+
+
+def _loss(params, batch):
+    pred = batch["x"] @ params["w"]
+    return jnp.mean((pred - batch["y"]) ** 2), {}
+
+
+def _init(key):
+    return {"w": jax.random.normal(key, (4, 1)) * 0.1}
+
+
+def _batch(n_pods, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n_pods, 8, 4)).astype(np.float32)
+    w = rng.normal(size=(4, 1)).astype(np.float32)
+    y = x @ w + 0.01 * rng.normal(size=(n_pods, 8, 1)).astype(np.float32)
+    return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+
+def _run_trace(root, live, n_steps=16, event_step=5):
+    """One elastic run over a fixed event trace: ``cloud_left`` fires at
+    ``event_step``, the reconfig lands at the next sync barrier.
+
+    ``live=False`` is the reference arm — pause at the barrier, blocking
+    checkpoint save + restore, re-stack.  ``live=True`` is the migration
+    arm — async barrier snapshots, ``stage`` at event time off the step
+    path, ``reconcile`` at the barrier.  Returns the per-step loss stream.
+    """
+    sync = SyncConfig("asgd_ga", 4, compress_topk=0.25, quantize_int8=True,
+                      error_feedback=True, codec_block=128)
+    plan = build_training_plan(TrainingRequest(
+        model="m", clouds=CLOUDS, sync=sync, global_batch=96))
+    ctl = ElasticityController(plan)
+    trainer = Trainer(_loss, _init,
+                      TrainerConfig(n_pods=3, optimizer="momentum", lr=0.05,
+                                    sync=sync))
+    state = trainer.init_state(jax.random.key(0), same_init=False)
+    engine = AsyncCheckpointEngine(os.path.join(root, "snaps"),
+                                   keep=2) if live else None
+    migrator = LiveMigrator(engine) if live else None
+    if live:
+        engine.snapshot(state, 0)
+    losses, pending = [], None
+    for step in range(n_steps):
+        state, m = trainer.train_step(state,
+                                      _batch(trainer.cfg.n_pods, step))
+        state = trainer.maybe_sync(state, step)
+        losses.append(float(m["loss"]))
+        at_barrier = is_sync_step(trainer.cfg.sync, step)
+        if live and at_barrier:
+            engine.snapshot(state, step + 1)
+        if step == event_step:
+            pending = ctl.handle(CloudEvent("cloud_left", region="cq",
+                                            time_s=float(step)))
+            if live:
+                keep, n_new = pending.pod_transition()
+                migrator.stage(state, n_new, keep=keep)
+        if pending is not None and at_barrier:
+            if live:
+                trainer, state, applied = migrator.reconcile(
+                    trainer, state, pending)
+            else:
+                d = os.path.join(root, f"pause_{step + 1}")
+                ckpt.save(d, state, step=step + 1)
+                state, _ = ckpt.restore(d, like=state)
+                trainer, state, applied = apply_reconfig(
+                    trainer, state, pending)
+            assert applied
+            pending = None
+    if live:
+        assert migrator.migrations == 1
+        assert not migrator.errors
+        assert migrator.last_staged is not None
+        assert migrator.last_staged["n_new"] == trainer.cfg.n_pods
+        engine.close()
+    return np.asarray(losses)
+
+
+def test_live_migration_loss_identical_to_pause_and_restore(tmp_path):
+    """The acceptance bar: a migrated run is step-for-step loss-identical
+    to a pause-and-restore run on the same event trace — the staged
+    snapshot pre-moves bytes but never perturbs the numerics, and the fp32
+    checkpoint round-trip of the pause arm is exact."""
+    ref = _run_trace(str(tmp_path / "pause"), live=False)
+    mig = _run_trace(str(tmp_path / "live"), live=True)
+    np.testing.assert_array_equal(ref, mig)
+
+
+def test_stage_supersedes_and_stale_stage_degrades(tmp_path):
+    """Two events between barriers: the second stage supersedes the first
+    (counted, not reconciled), and reconcile still re-stacks correctly."""
+    sync = SyncConfig("asgd_ga", 8)
+    plan = build_training_plan(TrainingRequest(
+        model="m", clouds=CLOUDS, sync=sync, global_batch=96))
+    ctl = ElasticityController(plan)
+    trainer = Trainer(_loss, _init,
+                      TrainerConfig(n_pods=3, optimizer="sgd", lr=0.05,
+                                    sync=sync))
+    state = trainer.init_state(jax.random.key(1), same_init=False)
+    engine = AsyncCheckpointEngine(str(tmp_path), keep=2)
+    migrator = LiveMigrator(engine)
+    engine.snapshot(state, 0)
+    rc = ctl.handle(CloudEvent("cloud_left", region="cq", time_s=1.0))
+    migrator.stage(state, rc.pod_transition()[1])
+    migrator.stage(state, rc.pod_transition()[1])   # supersedes the first
+    trainer, state, applied = migrator.reconcile(trainer, state, rc)
+    assert applied and trainer.cfg.n_pods == 2
+    assert migrator.restaged == 1 and migrator.migrations == 1
+    engine.close()
+
+
+def test_stage_without_durable_snapshot_degrades_cleanly(tmp_path):
+    """No durable snapshot yet: stage is a no-op and reconcile falls back
+    to the plain barrier re-stack (nothing staged, nothing raised)."""
+    sync = SyncConfig("asgd_ga", 8)
+    plan = build_training_plan(TrainingRequest(
+        model="m", clouds=CLOUDS, sync=sync, global_batch=96))
+    ctl = ElasticityController(plan)
+    trainer = Trainer(_loss, _init,
+                      TrainerConfig(n_pods=3, optimizer="sgd", lr=0.05,
+                                    sync=sync))
+    state = trainer.init_state(jax.random.key(2), same_init=False)
+    engine = AsyncCheckpointEngine(str(tmp_path), keep=2)
+    migrator = LiveMigrator(engine)
+    rc = ctl.handle(CloudEvent("cloud_left", region="cq", time_s=1.0))
+    migrator.stage(state, rc.pod_transition()[1])
+    trainer, state, applied = migrator.reconcile(trainer, state, rc)
+    assert applied and trainer.cfg.n_pods == 2
+    assert migrator.last_staged is None and not migrator.errors
+    engine.close()

@@ -261,3 +261,109 @@ def test_restore_same_values_across_topologies(tmp_path):
     hier, _ = ckpt.restore(str(tmp_path), like, pod_resize="mean")
     for a, b in zip(jax.tree.leaves(flat), jax.tree.leaves(hier)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------- _resize_pod_dim directly
+
+
+def test_resize_pod_dim_grow_drop_raises():
+    with pytest.raises(ValueError, match="cannot grow"):
+        ckpt._resize_pod_dim(np.zeros((2, 4), np.float32), 3, "drop")
+
+
+def test_resize_pod_dim_shrink_to_one_mean_is_global_mean():
+    """Shrinking to a single pod under "mean" must land that pod exactly
+    on the old global mean (the shift fully re-averages the departed)."""
+    arr = np.random.default_rng(0).normal(size=(4, 5, 2)).astype(np.float32)
+    out = ckpt._resize_pod_dim(arr, 1, "mean")
+    assert out.shape == (1, 5, 2)
+    np.testing.assert_allclose(out[0], arr.mean(axis=0), rtol=1e-6,
+                               atol=1e-7)
+
+
+def test_resize_pod_dim_bf16_roundtrip_keeps_dtype():
+    """The mean math upcasts through fp32 but the result stays bf16, both
+    growing and shrinking."""
+    arr = np.asarray(jnp.asarray(
+        np.random.default_rng(1).normal(size=(2, 8)), jnp.bfloat16))
+    grown = ckpt._resize_pod_dim(arr, 4, "mean")
+    assert grown.dtype == arr.dtype and grown.shape == (4, 8)
+    np.testing.assert_array_equal(grown[:2], arr)
+    shrunk = ckpt._resize_pod_dim(grown, 2, "mean")
+    assert shrunk.dtype == arr.dtype and shrunk.shape == (2, 8)
+
+
+def test_resize_pod_dim_same_size_is_identity():
+    arr = np.random.default_rng(2).normal(size=(3, 4)).astype(np.float32)
+    for mode in ("mean", "clone", "drop"):
+        assert ckpt._resize_pod_dim(arr, 3, mode) is arr
+
+
+# ------------------------------------------------ atomicity & corruption
+
+
+def test_save_leaves_no_staging_dir(tmp_path):
+    """The atomic writer stages in a hidden sibling dir and cleans it up:
+    after save, the directory holds exactly the committed pair."""
+    d = tmp_path / "ck"
+    ckpt.save(str(d), _tree(2), step=1)
+    assert sorted(p.name for p in d.iterdir()) == ["arrays.npz",
+                                                   "manifest.json"]
+
+
+def test_truncated_arrays_raise_named_corruption_error(tmp_path):
+    """A torn write (arrays.npz truncated after commit) must fail restore
+    with CheckpointCorruptError, not decode garbage or KeyError."""
+    tree = _tree(2)
+    ckpt.save(str(tmp_path), tree, step=7)
+    apath = tmp_path / "arrays.npz"
+    blob = apath.read_bytes()
+    apath.write_bytes(blob[: len(blob) // 2])
+    like = jax.tree.map(jnp.zeros_like, tree)
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        ckpt.restore(str(tmp_path), like)
+
+
+def test_corrupted_arrays_same_length_raise_via_crc(tmp_path):
+    """Bit rot that keeps the byte count is caught by the manifest CRC."""
+    tree = _tree(2)
+    ckpt.save(str(tmp_path), tree, step=7)
+    apath = tmp_path / "arrays.npz"
+    blob = bytearray(apath.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    apath.write_bytes(bytes(blob))
+    with pytest.raises(ckpt.CheckpointCorruptError, match="CRC"):
+        ckpt.restore(str(tmp_path), jax.tree.map(jnp.zeros_like, tree))
+
+
+def test_missing_arrays_raise_corruption_error(tmp_path):
+    tree = _tree(2)
+    ckpt.save(str(tmp_path), tree, step=7)
+    (tmp_path / "arrays.npz").unlink()
+    with pytest.raises(ckpt.CheckpointCorruptError, match="no arrays.npz"):
+        ckpt.restore(str(tmp_path), jax.tree.map(jnp.zeros_like, tree))
+
+
+def test_garbage_manifest_raises_corruption_error(tmp_path):
+    ckpt.save(str(tmp_path), _tree(2), step=7)
+    (tmp_path / "manifest.json").write_text("{not json")
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        ckpt.load_manifest(str(tmp_path))
+
+
+def test_old_manifest_without_commit_record_still_loads(tmp_path):
+    """Manifests written before the commit record (no arrays_bytes/crc32)
+    must keep restoring — the integrity check is additive."""
+    import json
+
+    tree = _tree(2)
+    ckpt.save(str(tmp_path), tree, step=4)
+    mpath = tmp_path / "manifest.json"
+    m = json.loads(mpath.read_text())
+    m.pop("arrays_bytes"), m.pop("arrays_crc32")
+    mpath.write_text(json.dumps(m))
+    out, step = ckpt.restore(str(tmp_path),
+                             jax.tree.map(jnp.zeros_like, tree))
+    assert step == 4
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -229,3 +229,114 @@ def test_topk_energy_never_exceeds_exact(n, k, seed):
     xs = np.asarray(x)
     nz = d != 0
     np.testing.assert_allclose(d[nz], xs[nz])
+
+
+# ----------------------------------------------- checkpoint save/restore
+
+
+def _random_tree(n_pods, dtype, seed):
+    rng = np.random.default_rng(seed)
+    if dtype == "int32":
+        def leaf(*shape):
+            return jnp.asarray(rng.integers(-1000, 1000,
+                                            size=(n_pods,) + shape),
+                               jnp.int32)
+    else:
+        def leaf(*shape):
+            return jnp.asarray(rng.normal(size=(n_pods,) + shape),
+                               getattr(jnp, dtype))
+    return {"w": leaf(4, 3), "nested": {"m": leaf(4, 3), "v": leaf(2)},
+            "b": leaf(5)}
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 5),
+       st.sampled_from(["float32", "bfloat16", "int32"]),
+       st.integers(0, 10_000))
+def test_checkpoint_save_restore_identity(n_pods, dtype, seed):
+    """save -> restore is the identity for every dtype and pod count —
+    bf16 rides through the fp32 upcast losslessly and comes back bf16."""
+    import shutil
+    import tempfile
+
+    from repro.checkpoint import checkpoint as ckpt
+
+    tree = _random_tree(n_pods, dtype, seed)
+    d = tempfile.mkdtemp(prefix="ckpt_prop_")
+    try:
+        ckpt.save(d, tree, step=seed)
+        out, step = ckpt.restore(d, jax.tree.map(jnp.zeros_like, tree))
+        assert step == seed
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4),
+       st.sampled_from(["float32", "bfloat16"]),
+       st.integers(0, 10_000))
+def test_async_snapshot_equals_blocking_save(n_pods, dtype, seed):
+    """An engine snapshot commits exactly what a blocking save of the same
+    tree at the same step writes: restored trees are bit-identical and the
+    manifests agree on keys/dtypes/shapes/step."""
+    import shutil
+    import tempfile
+
+    from repro.checkpoint import checkpoint as ckpt
+    from repro.checkpoint.async_engine import (AsyncCheckpointEngine,
+                                               blocking_equivalent)
+
+    tree = _random_tree(n_pods, dtype, seed)
+    root = tempfile.mkdtemp(prefix="ckpt_async_prop_")
+    try:
+        eng = AsyncCheckpointEngine(f"{root}/a", keep=1)
+        eng.snapshot(tree, seed)
+        eng.wait()
+        _, apath = eng.last_durable()
+        bpath = blocking_equivalent(tree, seed, f"{root}/b")
+        like = jax.tree.map(jnp.zeros_like, tree)
+        a, astep = ckpt.restore(apath, like)
+        b, bstep = ckpt.restore(bpath, like)
+        assert astep == bstep == seed
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            assert x.dtype == y.dtype
+            np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                          np.asarray(y, np.float32))
+        ma, mb = ckpt.load_manifest(apath), ckpt.load_manifest(bpath)
+        assert all(ma[k] == mb[k]
+                   for k in ("keys", "dtypes", "shapes", "step"))
+        eng.close()
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 6), st.integers(0, 10_000))
+def test_checkpoint_pod_resize_mean_preserves_global_mean(n_old, n_new,
+                                                          seed):
+    """restore(pod_resize="mean") preserves the global parameter mean for
+    every (n_old -> n_new) transition — the invariant live migration and
+    pause-and-restore both inherit from the same transform."""
+    import shutil
+    import tempfile
+
+    from repro.checkpoint import checkpoint as ckpt
+
+    tree = _random_tree(n_old, "float32", seed)
+    d = tempfile.mkdtemp(prefix="ckpt_resize_prop_")
+    try:
+        ckpt.save(d, tree, step=0)
+        like = jax.tree.map(
+            lambda x: jnp.zeros((n_new,) + x.shape[1:], x.dtype), tree)
+        out, _ = ckpt.restore(d, like, pod_resize="mean")
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_allclose(
+                np.asarray(b, np.float32).mean(axis=0),
+                np.asarray(a, np.float32).mean(axis=0),
+                rtol=2e-5, atol=2e-6)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)

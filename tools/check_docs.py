@@ -41,13 +41,15 @@ DOC_FILES = (
 
 # one cookbook page owns each sync-related launcher flag
 FLAG_PAGES = ("docs/sync-tuning.md", "docs/control-loops.md",
-              "docs/fault-tolerance.md", "docs/serving.md")
+              "docs/fault-tolerance.md", "docs/serving.md",
+              "docs/checkpointing.md")
 SYNC_FLAGS = (
     "--sync", "--interval", "--compress-topk", "--int8", "--value-dtype",
     "--error-feedback", "--overlap-chunks", "--codec-block",
     "--bucket-policy", "--bucket-override", "--bucket-patterns",
     "--adaptive-sync", "--ef-guard", "--wan-trace", "--step-time",
     "--transport", "--topology", "--faults", "--no-tolerance",
+    "--async-checkpoint", "--snapshot-every", "--keep-snapshots",
 )
 LAUNCHER = "src/repro/launch/train.py"
 
