@@ -18,7 +18,13 @@ checker makes them a *gate*, not a log.  Checks, cheapest first:
   records the planner's interleaved (per-link observation, decide) event
   stream the same way; a fresh ``LinkBeliefs`` + ``TopologyPlanner`` must
   reproduce its shape decisions exactly, reason strings (with embedded
-  cost estimates) included.  ``BENCH_faults.json`` records every faulted
+  cost estimates) included.  The streaming scenario records the per-chunk
+  observation stream and the chunk-level controller's per-chunk decision
+  dicts; a fresh ``StreamingShipController`` — sharing one fresh probe
+  estimator with the replayed round-level controller, as the live run
+  did — must reproduce both decision streams, and every chunk's billed
+  seconds must re-derive from its round's transfer draws through
+  ``wan.stream_chunk_time`` float-for-float.  ``BENCH_faults.json`` records every faulted
   sync round's (step, expected transfer time) inputs and resolved
   outcome; re-running the committed FaultPlan + RetryPolicy through
   ``resolve_round`` must reproduce the retry/degrade/crash decision
@@ -302,6 +308,120 @@ def check_topology_replay(gate: Gate, base: Dict) -> None:
                    f"baseline {want} vs recomputed {got}")
 
 
+def check_streaming_replay(gate: Gate, base: Dict) -> None:
+    """Replay the chunk-granular streaming scenario: the baseline records,
+    per variant, the per-step (billed transfer, EF stats) signal stream
+    and — for the streaming variant — every round's chunk observation
+    list plus the ``StreamingShipController``'s per-chunk decision dicts.
+    Re-running BOTH coupled laws from those records — the round-level
+    controller at every step top, the chunk-level controller inside every
+    streaming round, sharing ONE fresh probe estimator exactly as the
+    live run shared one — must reproduce the round decisions AND the
+    chunk decision stream field-for-field (achieved/believed floats
+    included).  The transport's billing law is re-derived too: every
+    pre-retune chunk must bill its exact pro-rata slice of the round's
+    clean draw (``stream_chunk_time``), every post-retune chunk its slice
+    of the tail draw, and the round total must be the untouched clean
+    draw (zero retune) or prefix-sum + tail — float-for-float after the
+    JSON round trip.  Together these pin the whole chunk-level data path
+    (per-chunk bill -> achieved mbps -> cliff law -> rung choice ->
+    round-level handoff) deterministically, without re-training."""
+    from repro.core.autotune import (AdaptiveSyncController, BucketStats,
+                                     StreamingShipController)
+    from repro.core.transport import MeasuredWanProbe
+    from repro.core.wan import stream_chunk_time
+
+    scen = base["scenario"]
+    sb = base["streaming"]
+    stream_knobs = dict(sb["stream"])
+    for vname in ("round_adaptive", "streaming"):
+        run = sb["variants"][vname]
+        knobs, guard, sync = _tuner_parts(scen["tuner"],
+                                          scen["tuner"]["base_sync"],
+                                          overlap_chunks=sb["chunks"])
+        probe = MeasuredWanProbe(**sb["probe"])
+        tuner = AdaptiveSyncController(
+            sync, scen["model_mb"], scen["compute_step_s"],
+            probe_est=probe.estimator, **knobs)
+        stream = (StreamingShipController(
+                      sync, scen["model_mb"],
+                      probe_est=probe.estimator, **stream_knobs)
+                  if vname == "streaming" else None)
+        rounds = {r["step"]: r for r in run.get("stream_rounds", [])}
+        cur_sync = sync
+        replayed = []
+        for step, (sim_t, transfer, msg_norm, resid_norm) in \
+                enumerate(run["signals"]):
+            if transfer is not None:
+                # the previous round's fold, in the exact order the live
+                # run's estimator saw it (chunk observations never touch
+                # the estimator — the round barrier folds once)
+                probe.observe_transfer(transfer[0], transfer[1])
+            stats = BucketStats(msg_norm=msg_norm, resid_norm=resid_norm)
+            upd = tuner.update(step, stats)
+            if upd is not None:
+                cur_sync = upd.sync
+                replayed.append((step, upd.rung, upd.sync.interval,
+                                 upd.reason))
+            rr = rounds.get(step)
+            if rr is not None:
+                stream.note_stats(stats)
+                stream.begin_round(step, cur_sync)
+                for name, mb, secs in rr["chunks"]:
+                    stream.observe_chunk(name, float(mb), float(secs))
+                stream.end_round()
+        recorded = [(d["step"], d["rung"], d["interval"], d["reason"])
+                    for d in run["decisions"]]
+        _check_decisions(gate, f"streaming.replay.{vname}.round_decisions",
+                         replayed, recorded)
+        gate.check(f"streaming.replay.{vname}.guard",
+                   tuner.max_ef_ratio <= guard,
+                   f"replayed max {round(tuner.max_ef_ratio, 6)} vs guard "
+                   f"{guard}")
+        if stream is None:
+            continue
+        replayed_chunks = json.loads(json.dumps(stream.decisions))
+        _check_decisions(gate, "streaming.replay.chunk_decisions",
+                         replayed_chunks, run["stream_decisions"])
+        gate.check("streaming.replay.mid_round_retunes",
+                   stream.n_retunes == run["n_stream_retunes"]
+                   and stream.n_rounds == run["n_stream_rounds"],
+                   f"replayed {stream.n_retunes} retunes over "
+                   f"{stream.n_rounds} rounds vs recorded "
+                   f"{run['n_stream_retunes']}/{run['n_stream_rounds']}")
+
+    # the billing law: each recorded chunk's seconds must re-derive from
+    # its round's draws exactly (the cut point — which chunks are the
+    # re-encoded tail — comes from the decision stream's retune entry)
+    run = sb["variants"]["streaming"]
+    cut_by_step = {d["step"]: d["chunk"] + 1
+                   for d in run["stream_decisions"]
+                   if d["action"] == "retune"}
+    bad: List[str] = []
+    for rr in run["stream_rounds"]:
+        cut = (cut_by_step[rr["step"]] if rr["retuned"]
+               else len(rr["chunks"]))
+        prefix_s = 0.0
+        for i, (name, mb, secs) in enumerate(rr["chunks"]):
+            if i < cut:
+                want = stream_chunk_time(rr["t_round"], mb, rr["total_mb"])
+                prefix_s += want
+            else:
+                want = stream_chunk_time(rr["t_tail"], mb, rr["tail_mb"])
+            if want != secs:
+                bad.append(f"step {rr['step']} chunk {i}: "
+                           f"{secs} != {want}")
+        want_t = (rr["t_round"] if not rr["retuned"]
+                  else prefix_s + rr["t_tail"])
+        if want_t != rr["t_s"]:
+            bad.append(f"step {rr['step']} round total: "
+                       f"{rr['t_s']} != {want_t}")
+    gate.check("streaming.replay.chunk_billing_law", not bad,
+               f"{sum(len(r['chunks']) for r in run['stream_rounds'])} "
+               f"chunks re-billed over {len(run['stream_rounds'])} rounds"
+               + ("" if not bad else f"; first: {bad[0]}"))
+
+
 def check_faults_replay(gate: Gate, base: Dict) -> None:
     """Replay the chaos transport's fault decisions: the baseline records
     every faulted round's inputs (step, expected transfer time at the
@@ -514,6 +634,7 @@ def main(argv: Sequence[str] = None) -> int:
     check_measured_replay(gate, baselines["autotune"])
     check_bucketed_replay(gate, baselines["autotune"])
     check_topology_replay(gate, baselines["autotune"])
+    check_streaming_replay(gate, baselines["autotune"])
     check_faults_replay(gate, baselines["faults"])
     check_serving_replay(gate, baselines["serving"])
     check_migration_replay(gate, baselines["elasticity"])

@@ -527,13 +527,18 @@ class BucketPlanUpdate:
     rungs: Tuple[Tuple[str, int, int], ...]   # (bucket, rung, tier) each
     reasons: Tuple[str, ...]
     probe: Optional[WanProbe] = None
+    topology: Optional[str] = None  # active aggregation shape, when a
+    #   TopologyPlanner is wired in (the third actuator)
 
     def summary(self) -> str:
         knobs = ", ".join(
             f"{name}={CODEC_TIERS[tier]}@r{rung}"
             for name, rung, tier in self.rungs)
-        return (f"[{knobs}], interval {self.sync.interval} "
-                f"[{'; '.join(self.reasons)}]")
+        out = (f"[{knobs}], interval {self.sync.interval} "
+               f"[{'; '.join(self.reasons)}]")
+        if self.topology is not None:
+            out += f" topo={self.topology}"
+        return out
 
 
 class _BucketRung:
@@ -609,7 +614,7 @@ class BucketedSyncController:
                  trend_window: int = 4, trend_rise: float = 0.02,
                  cliff_snap: float = 4.0,
                  probe_est: Optional[WanProbeEstimator] = None,
-                 bus=None):
+                 topology=None, bus=None):
         if base_sync.bucket_policy != "layer-class":
             raise ValueError(
                 "BucketedSyncController drives the layer-class partition: "
@@ -663,6 +668,11 @@ class BucketedSyncController:
         self._probe_est = (probe_est if probe_est is not None
                            else WanProbeEstimator(alpha=probe_alpha,
                                                   cliff_snap=cliff_snap))
+        # third actuator (duck-typed to avoid a core.topology import
+        # cycle, same seam as the single-bucket controller): anything with
+        # .kind and .decide(step, payload_mb) — a topology.TopologyPlanner
+        # sharing the transport's LinkBeliefs
+        self.topology = topology
         self._pressure_streak = 0
         self._calm_streak = 0
         self.decisions: List[BucketPlanUpdate] = []
@@ -736,6 +746,8 @@ class BucketedSyncController:
     def _bucket_guards(self, stats: Mapping[str, BucketStats]) -> List[str]:
         """Per-bucket absolute + growth-trend guards; returns reasons."""
         reasons = []
+        self._fresh_any = False   # did ANY bucket deliver a fresh reading
+        #   this update — the topology planner's consultation gate
         for n, b in self.buckets.items():
             s = stats.get(n)
             if s is None or s.msg_norm <= 0.0:
@@ -749,6 +761,7 @@ class BucketedSyncController:
             b.ratio, b.has_reading = s.ef_ratio, True
             if not fresh:
                 continue
+            self._fresh_any = True
             b.last_stats = (s.msg_norm, s.resid_norm)
             b.max_ef_ratio = max(b.max_ef_ratio, s.ef_ratio)
             b.trend.append(s.ef_ratio)
@@ -863,6 +876,16 @@ class BucketedSyncController:
         # bucket is at its floor *or guard-blocked from escalating* (a
         # stressed bucket cannot compress harder, so only staleness can
         # absorb the link; the single-bucket law's "last rung" generalized)
+        # third actuator: consult the topology planner on fresh readings
+        # only, and never while an EF guard is de-escalating — the exact
+        # consultation rule of the single-bucket controller (a tripped
+        # guard means fidelity is the problem; reshaping the network in
+        # the same breath would blur which actuator fixed it)
+        topo = None
+        if (self.topology is not None and self._fresh_any
+                and not any(r.startswith("ef-") for r in reasons)):
+            topo = self.topology.decide(step, self._total_payload_mb())
+
         fit = self._fit_interval(self._total_payload_mb())
         exhausted = fit > self.interval_budget and self._ladder_exhausted()
         cap = self.max_interval if exhausted else self.interval_budget
@@ -874,14 +897,186 @@ class BucketedSyncController:
                     not reasons
                     and abs(interval - self.interval)
                     < max(1.0, 0.25 * self.interval)):
-                return None
+                if topo is None:
+                    return None
+                # topology-only move: the codec knobs stand as they are
+                interval = self.interval
         if not reasons:
-            reasons.append("interval-fit")
+            reasons.append(f"topo-{topo}" if topo is not None
+                           else "interval-fit")
         self.interval = interval
         update = BucketPlanUpdate(
             sync=self.current, step=step,
             rungs=tuple((n, b.rung, b.cfg.tier)
                         for n, b in self.buckets.items()),
-            reasons=tuple(reasons), probe=self.probe)
+            reasons=tuple(reasons), probe=self.probe,
+            topology=(self.topology.kind if self.topology is not None
+                      else None))
         self.decisions.append(update)
         return update
+
+
+# ---------------------------------------------------------------------------
+# chunk-level control: mid-round retune on first-chunk feedback
+# ---------------------------------------------------------------------------
+
+
+class StreamingShipController:
+    """Mid-round retune law: the chunk, not the round, as the unit of WAN
+    feedback.
+
+    The round-level controllers above decide at the TOP of a step from the
+    *previous* round's measurements — so a bandwidth cliff that lands
+    after that decision costs one full stale transfer at the old
+    (topk × dtype) tier.  This controller closes that gap: as each shipped
+    chunk's measured transfer lands (``MeasuredWanProbe.observe_chunk``),
+    it compares achieved vs believed bandwidth, and on a cliff —
+    ``achieved * cliff_ratio < believed`` for ``hysteresis`` consecutive
+    chunks (default 1: first-chunk feedback) — it picks a cheaper ladder
+    rung for the round's *unsent* segments.  The trainer re-encodes only
+    those segments (``sync.reencode_unsent``); the EF residual absorbs the
+    fidelity delta exactly, so the convergence guards' contract holds.
+
+    Interaction contract with the round-level controllers (the
+    consume-once law, property-tested):
+
+    - **Belief is read-only and pre-round**: ``believed`` is the shared
+      ``WanProbeEstimator`` belief as it stood when the round opened; the
+      estimator folds only at the round barrier, so the decision stream
+      replays exactly from the recorded signals.
+    - **At most ONE retune per round**, and the retune is *transient* —
+      it re-encodes this round's unsent segments only.  The persistent
+      ``SyncConfig`` stays owned by the round-level controllers; the
+      retuned round's aggregate (shipped MB, seconds) observation
+      cliff-snaps the shared belief, so they see the cliff at the next
+      barrier and make the durable move.
+    - **Guard-block**: no retune while the last observed EF ratio is at
+      or above ``escalate_margin * ef_guard`` — a stressed residual gets
+      no additional mid-round fidelity drop (same escalation gate as the
+      round-level law).
+    """
+
+    def __init__(self, base_sync: SyncConfig, model_mb: float, *,
+                 cliff_ratio: float = 4.0, hysteresis: int = 1,
+                 ef_guard: float = 0.9, escalate_margin: float = 0.95,
+                 topk_ladder: Sequence[float] = (0.05, 0.02, 0.01),
+                 dtype_ladder: Sequence[str] = ("int8", "fp8", "int4"),
+                 probe_est: Optional[WanProbeEstimator] = None):
+        if not base_sync.uses_codec:
+            raise ValueError(
+                "StreamingShipController re-encodes through the fused "
+                "codec: base_sync must have strategy='asgd_ga', "
+                "0 < compress_topk < 1 and quantize_int8=True")
+        if not base_sync.error_feedback:
+            raise ValueError(
+                "the mid-round retune's convergence story IS the EF "
+                "residual (it absorbs the fidelity delta): base_sync must "
+                "set error_feedback=True")
+        if cliff_ratio <= 1.0:
+            raise ValueError(
+                f"cliff_ratio must be > 1 (a chunk at believed speed must "
+                f"not read as a cliff), got {cliff_ratio}")
+        if hysteresis < 1:
+            raise ValueError(f"hysteresis must be >= 1, got {hysteresis}")
+        self.model_mb = model_mb
+        self.cliff_ratio = cliff_ratio
+        self.hysteresis = hysteresis
+        self.ef_guard = ef_guard
+        self.escalate_margin = escalate_margin
+        self.ladder = build_ladder(base_sync, topk_ladder, dtype_ladder)
+        self._probe_est = probe_est
+        self._last_ratio: Optional[float] = None
+        self._round: Optional[Dict] = None
+        self.n_retunes = 0
+        self.n_rounds = 0
+        self.decisions: List[Dict] = []   # one dict per observed chunk —
+        #   the replayable decision stream the bench commits and
+        #   check_regression re-runs
+
+    # ------------------------------------------------------------- signals
+    def note_stats(self, stats: BucketStats) -> None:
+        """Feed the latest round's EF telemetry (guard-block input)."""
+        if stats.msg_norm > 0.0:
+            self._last_ratio = stats.ef_ratio
+
+    @property
+    def believed_mbps(self) -> Optional[float]:
+        return (self._probe_est.bandwidth_mbps
+                if self._probe_est is not None else None)
+
+    # -------------------------------------------------------------- rounds
+    def begin_round(self, step: int, cfg: SyncConfig) -> None:
+        """Open a streaming round under the live config ``cfg``: snapshot
+        the pre-round belief and locate the rung the round ships at."""
+        rung = min(range(len(self.ladder)),
+                   key=lambda i: abs(self.ladder[i].payload_mb(1.0)
+                                     - cfg.payload_mb(1.0)))
+        self._round = {"step": step, "cfg": cfg, "rung": rung,
+                       "believed": self.believed_mbps, "streak": 0,
+                       "retuned": False, "chunk": 0}
+        self.n_rounds += 1
+
+    def observe_chunk(self, bucket: str, chunk_mb: float,
+                      seconds: float) -> Optional[SyncConfig]:
+        """One landed chunk.  Returns the transient retune config for the
+        round's unsent segments when the cliff law fires, else None."""
+        rd = self._round
+        achieved = (chunk_mb * 8.0 / seconds
+                    if chunk_mb > 0.0 and seconds > 0.0 else None)
+        believed = rd["believed"]
+        action, cfg_to, rung_to = "ship", None, rd["rung"]
+        if (not rd["retuned"] and achieved is not None
+                and believed is not None
+                and achieved * self.cliff_ratio < believed):
+            rd["streak"] += 1
+            if rd["streak"] < self.hysteresis:
+                action = "hold"
+            elif (self._last_ratio is not None
+                  and self._last_ratio
+                  >= self.escalate_margin * self.ef_guard):
+                # the residual is already near the guard: shipping the
+                # planned fidelity is the cheaper risk
+                action = "guard-block"
+            else:
+                rung_to = self._target_rung(rd["rung"],
+                                            achieved / believed)
+                if rung_to > rd["rung"]:
+                    cfg = rd["cfg"]
+                    cheap = self.ladder[rung_to]
+                    # transplant only the ladder knobs: buckets overrides,
+                    # codec_block (chunk alignment!) and interval stay the
+                    # round-level controllers' property
+                    cfg_to = replace(cfg,
+                                     compress_topk=cheap.compress_topk,
+                                     value_dtype=cheap.value_dtype)
+                    rd["retuned"] = True
+                    rd["rung"] = rung_to
+                    self.n_retunes += 1
+                    action = "retune"
+                else:
+                    action = "hold"   # already at/below the needed rung
+        elif not rd["retuned"] and achieved is not None:
+            rd["streak"] = 0
+        self.decisions.append({
+            "step": rd["step"], "chunk": rd["chunk"], "bucket": bucket,
+            "mb": chunk_mb, "s": seconds, "achieved": achieved,
+            "believed": believed, "action": action, "rung": rung_to,
+        })
+        rd["chunk"] += 1
+        return cfg_to
+
+    def _target_rung(self, rung: int, ratio: float) -> int:
+        """Least-aggressive rung whose wire bytes shrink at least as much
+        as the bandwidth did (``payload_j / payload_i <= achieved /
+        believed``), else the cheapest rung — mirrors the round-level
+        law's jump-straight-to-the-fitting-rung escalation."""
+        cur = self.ladder[rung].payload_mb(self.model_mb)
+        for j in range(rung + 1, len(self.ladder)):
+            if self.ladder[j].payload_mb(self.model_mb) <= cur * ratio:
+                return j
+        return len(self.ladder) - 1
+
+    def end_round(self) -> bool:
+        """Close the round; returns True when it retuned mid-round."""
+        rd, self._round = self._round, None
+        return bool(rd and rd["retuned"])

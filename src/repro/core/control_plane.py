@@ -436,13 +436,21 @@ class ElasticityController:
     barrier via checkpointed pod re-stacking."""
 
     def __init__(self, plan: TrainingPlan, bus: Optional[EventBus] = None,
-                 ref_bandwidth_mbps: float = 100.0, max_interval: int = 64):
+                 ref_bandwidth_mbps: float = 100.0, max_interval: int = 64,
+                 probe_est=None):
         self.plan = plan
         self.clouds: Dict[str, CloudResources] = {
             c.region: c for c in plan.request.clouds}
         self.slowdowns: Dict[str, float] = {}
         self.ref_bandwidth_mbps = ref_bandwidth_mbps
         self.bandwidth_mbps = ref_bandwidth_mbps
+        # measured-bandwidth source (duck-typed: anything with a
+        # ``bandwidth_mbps`` attribute — a WanProbeEstimator, a
+        # MeasuredWanProbe's estimator).  When set, every replan reads the
+        # shared measured belief instead of trusting the last trace-driven
+        # ``bandwidth_changed`` event — the control plane and the sync
+        # controllers then act on ONE bandwidth picture.
+        self.probe_est = probe_est
         self.base_interval = plan.request.sync.interval
         self.max_interval = max_interval
         self.history: List[ReconfigPlan] = []
@@ -471,6 +479,11 @@ class ElasticityController:
             self.bandwidth_mbps = event.bandwidth_mbps
         elif event.kind == "straggler_detected":
             self.slowdowns[event.region] = max(1.0, event.slowdown)
+        if self.probe_est is not None:
+            measured = getattr(self.probe_est, "bandwidth_mbps", None)
+            if measured is not None:
+                # measured belief wins over the event's claimed figure
+                self.bandwidth_mbps = float(measured)
         reconfig = self._replan(event)
         self.history.append(reconfig)
         self.plan = reconfig.new

@@ -274,6 +274,17 @@ class ChaosTransport:
                         failed.append(ev.pod)
         self._round_failed = tuple(dict.fromkeys(failed))
 
+    def begin_stream_round(self, wire_mb, step=None):
+        """Streaming rounds and fault injection compose by *exclusion*: a
+        round the plan touches declines streaming (returns False), so the
+        trainer falls back to the classic ship+on_sync path where
+        :func:`resolve_round` owns the billing, retries, and degraded
+        membership.  Clean rounds delegate to the wrapped transport —
+        chunk-granular feedback whenever no fault is scheduled."""
+        if self.plan.at(step if step is not None else self._step):
+            return False
+        return self.inner.begin_stream_round(wire_mb, step=step)
+
     @property
     def round_failed_pods(self) -> Tuple[int, ...]:
         """Pods the current round completes without (degraded membership);

@@ -758,17 +758,26 @@ def _encode_bucket(cfg: SyncConfig, flat: jnp.ndarray, want_local: bool
     return tuple(chunks), local
 
 
-def _decode_bucket(cfg: SyncConfig, chunks: Sequence[ChunkPayload],
-                   n_total: int) -> jnp.ndarray:
-    """Decode one bucket's (shipped) wire chunks back to dense."""
+def _decode_chunks(cfg: SyncConfig, chunks: Sequence[ChunkPayload],
+                   widths: Sequence[int], n_total: int) -> jnp.ndarray:
+    """Decode an explicit (chunk, width) list of one bucket's wire chunks.
+    ``n_total`` is the width the bucket was *encoded* at — it fixes the
+    codec block, so a chunk prefix decodes bit-identically whether or not
+    the round shipped the rest of the bucket (chunks are independent)."""
     from repro.kernels import ops as kops
 
     block = min(cfg.codec_block, max(1, n_total))
     _, decode = kops.wan_codec_fns(block=block, value_dtype=cfg.value_dtype)
     parts = [jax.vmap(lambda a, i, s: decode(a, i, s, m))(
         c.q, c.idx.astype(jnp.int32), c.scales)
-        for c, m in zip(chunks, _chunk_widths(cfg, n_total))]
+        for c, m in zip(chunks, widths)]
     return jnp.concatenate(parts, axis=1)
+
+
+def _decode_bucket(cfg: SyncConfig, chunks: Sequence[ChunkPayload],
+                   n_total: int) -> jnp.ndarray:
+    """Decode one bucket's (shipped) wire chunks back to dense."""
+    return _decode_chunks(cfg, chunks, _chunk_widths(cfg, n_total), n_total)
 
 
 class TransferFailed(RuntimeError):
@@ -977,6 +986,21 @@ def finish_codec_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
         peer_parts.append(_decode_bucket(cfg.for_bucket(name),
                                          shipped[name], size))
     peer_flat = jnp.concatenate(peer_parts, axis=1)
+    return _finish_from_peer(cfg, params, state, payloads.flat,
+                             payloads.local, peer_flat, layout, lr, alive)
+
+
+def _finish_from_peer(cfg: SyncConfig, params: Pytree, state: SyncState,
+                      flat: jnp.ndarray, local: Optional[jnp.ndarray],
+                      peer_flat: jnp.ndarray, layout: BucketLayout,
+                      lr: Union[jnp.ndarray, float],
+                      alive: Optional[jnp.ndarray]
+                      ) -> Tuple[Pytree, SyncState]:
+    """Common tail of the codec round once the peer message is dense:
+    alive masking, receiver SGD, EF rollover and telemetry.  ``local`` is
+    the sender-side reconstruction of what the peer will decode — the
+    full-round one on the plain path, the spliced prefix+tail one on the
+    streaming retune path."""
     applied = delivered = None
     if alive is not None:
         alive = jnp.asarray(alive, jnp.float32)
@@ -990,13 +1014,12 @@ def finish_codec_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
     # their ratio is the convergence signal the adaptive controllers guard
     # on (a bucket's residual growing toward its message norm means that
     # bucket's tier is dropping more than EF can recover per interval)
-    msg_norm = _bucket_norms(payloads.flat, layout)
+    msg_norm = _bucket_norms(flat, layout)
     new_resid, resid_norm = state.ef_residual, state.resid_norm
     if cfg.error_feedback:
-        new_resid = payloads.flat - payloads.local
+        new_resid = flat - local
         if delivered is not None:
-            new_resid = jnp.where(delivered[:, None] > 0, new_resid,
-                                  payloads.flat)
+            new_resid = jnp.where(delivered[:, None] > 0, new_resid, flat)
         resid_norm = _bucket_norms(new_resid, layout)
     if delivered is not None:
         msg_norm = msg_norm * delivered[:, None]
@@ -1011,6 +1034,113 @@ def finish_codec_sync(cfg: SyncConfig, params: Pytree, state: SyncState,
                                  tier=jnp.asarray(cfg.bucket_tiers,
                                                   jnp.int32),
                                  msg_norm=msg_norm, resid_norm=resid_norm)
+
+
+# ----------------------------------------------- streaming mid-round retune
+
+
+def reencode_unsent(cfg: SyncConfig, cfg_to: SyncConfig, flat: jnp.ndarray,
+                    layout: BucketLayout, sent: Mapping[str, int]
+                    ) -> Tuple[Dict[str, Tuple[ChunkPayload, ...]],
+                               Dict[str, jnp.ndarray]]:
+    """Re-encode every bucket's *unsent* chunk tail at ``cfg_to``'s
+    cheaper (topk, dtype) knobs — the streaming mid-round retune.
+
+    ``sent`` maps bucket name -> number of ``cfg``-schedule chunks already
+    shipped (buckets absent default to fully shipped).  Chunks split on
+    codec-block boundaries and ``cfg_to`` carries ``cfg``'s ``codec_block``
+    (the ladder only moves topk/dtype), so the sent prefix keeps its exact
+    encoding and the tail re-encodes standalone: block-local selection
+    never looks across the cut.  Returns ``(tail_chunks, tail_local)``
+    keyed by bucket (only buckets with an unsent tail appear); the caller
+    splices them into the round with :func:`finish_codec_sync_split`,
+    whose EF rollover then *exactly* carries the tail's fidelity delta —
+    the convergence guards' contract survives the retune."""
+    tails: Dict[str, Tuple[ChunkPayload, ...]] = {}
+    locals_: Dict[str, jnp.ndarray] = {}
+    for g, name in enumerate(layout.names):
+        off, size = layout.offsets[g], layout.sizes[g]
+        if size == 0:
+            continue
+        widths = _chunk_widths(cfg.for_bucket(name), size)
+        n_sent = sent.get(name, len(widths))
+        sw = int(sum(widths[:n_sent]))
+        if sw >= size:
+            continue
+        tchunks, tlocal = _encode_bucket(cfg_to.for_bucket(name),
+                                         flat[:, off + sw:off + size],
+                                         want_local=cfg.error_feedback)
+        tails[name] = tchunks
+        locals_[name] = tlocal
+    return tails, locals_
+
+
+def finish_codec_sync_split(cfg: SyncConfig, cfg_to: SyncConfig,
+                            params: Pytree, state: SyncState,
+                            payloads: SyncPayloads,
+                            shipped: Mapping[str, Tuple[ChunkPayload, ...]],
+                            tail_shipped: Mapping[str,
+                                                  Tuple[ChunkPayload, ...]],
+                            tail_local: Mapping[str, jnp.ndarray],
+                            sent: Mapping[str, int],
+                            lr: Union[jnp.ndarray, float] = 1.0,
+                            alive: Optional[jnp.ndarray] = None
+                            ) -> Tuple[Pytree, SyncState]:
+    """Finish a streaming round that retuned mid-round: each bucket's
+    peer message is the shipped ``cfg`` prefix chunks plus the shipped
+    ``cfg_to`` tail chunks, and the sender-side reconstruction is spliced
+    the same way — so ``ef_residual = flat - spliced_local`` carries
+    exactly the fidelity the cheaper tail dropped.  The persistent config
+    (and ``SyncState.tier`` telemetry) stays ``cfg``'s: the retune is
+    transient, owned by this round alone."""
+    layout = bucket_layout(cfg, state.ga_buffer)
+    peer_parts, local_parts = [], []
+    for g, name in enumerate(layout.names):
+        off, size = layout.offsets[g], layout.sizes[g]
+        if size == 0:
+            peer_parts.append(payloads.flat[:, :0])
+            continue
+        bcfg = cfg.for_bucket(name)
+        widths = _chunk_widths(bcfg, size)
+        n_sent = sent.get(name, len(widths))
+        sw = int(sum(widths[:n_sent]))
+        parts, lparts = [], []
+        if n_sent:
+            parts.append(_decode_chunks(bcfg, shipped[name][:n_sent],
+                                        widths[:n_sent], size))
+            if cfg.error_feedback:
+                lparts.append(payloads.local[:, off:off + sw])
+        if sw < size:
+            parts.append(_decode_bucket(cfg_to.for_bucket(name),
+                                        tail_shipped[name], size - sw))
+            if cfg.error_feedback:
+                lparts.append(tail_local[name])
+        peer_parts.append(parts[0] if len(parts) == 1
+                          else jnp.concatenate(parts, axis=1))
+        if cfg.error_feedback:
+            local_parts.append(lparts[0] if len(lparts) == 1
+                               else jnp.concatenate(lparts, axis=1))
+    peer_flat = jnp.concatenate(peer_parts, axis=1)
+    local = (jnp.concatenate(local_parts, axis=1) if local_parts
+             else (payloads.flat[:, :0] if cfg.error_feedback else None))
+    return _finish_from_peer(cfg, params, state, payloads.flat, local,
+                             peer_flat, layout, lr, alive)
+
+
+def bucket_chunk_mb(cfg: SyncConfig, layout: BucketLayout
+                    ) -> Dict[str, Tuple[float, ...]]:
+    """Per-chunk wire megabytes of each non-empty bucket (host-side,
+    static) — the streaming ship's chunk schedule, summing to the bucket's
+    :func:`bucket_wire_mb` entry up to float association."""
+    out: Dict[str, Tuple[float, ...]] = {}
+    for g, name in enumerate(layout.names):
+        size = layout.sizes[g]
+        if size == 0:
+            continue
+        bcfg = cfg.for_bucket(name)
+        out[name] = tuple(bcfg.payload_mb(m * 4 / 1e6)
+                          for m in _chunk_widths(bcfg, size))
+    return out
 
 
 def _bucket_norms(flat: jnp.ndarray, layout: BucketLayout) -> jnp.ndarray:

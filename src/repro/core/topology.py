@@ -61,7 +61,7 @@ import numpy as np
 from repro.core.autotune import WanProbeEstimator
 from repro.core.sync import _INLINE_RING, ChunkPayload
 from repro.core.transport import (MeasuredWanProbe, TransferRecord,
-                                  WanTransport)
+                                  WanTransport, _StreamRound)
 from repro.core.wan import BandwidthTrace, WANConfig, transfer_time
 
 _EPS = 1e-9
@@ -470,23 +470,7 @@ class HierarchicalTransport(WanTransport):
         total = sum(wire_mb.values())
         if total <= 0.0:
             return 0.0
-        t = 0.0
-        for phase in self.schedule.phases:
-            if not phase.legs:
-                continue
-            if not phase.wan:
-                t += total * 8.0 / self.spec.intra_mbps
-                continue
-            slowest = 0.0
-            for leg in phase.legs:
-                leg_t = 0.0
-                for a, b in leg.hops:
-                    hop_t = transfer_time(total, self.link_mbps(a, b),
-                                          self.wan, self._rng)
-                    self.beliefs.observe(a, b, total * 8.0 / hop_t)
-                    leg_t += hop_t
-                slowest = max(slowest, leg_t)
-            t += slowest
+        t = self._bill_round(total)
         for name, mb in wire_mb.items():
             self.records.append(TransferRecord(
                 bucket=name, payload_mb=mb, seconds=t * mb / total,
@@ -494,6 +478,100 @@ class HierarchicalTransport(WanTransport):
         if self.probe is not None:
             self.probe.observe_transfer(total, t)
         self._recompile(step)
+        return t
+
+    def _bill_round(self, total_mb: float) -> float:
+        """Price one schedule traversal of ``total_mb``: intra legs at
+        fabric speed, each WAN hop one seeded ``transfer_time`` draw at its
+        link's traced bandwidth, every billed hop feeding that link's
+        belief.  Shared by ``on_sync`` and the streaming round (which
+        draws it once at ``begin_stream_round`` and, on a retune, once
+        more for the re-encoded tail)."""
+        t = 0.0
+        for phase in self.schedule.phases:
+            if not phase.legs:
+                continue
+            if not phase.wan:
+                t += total_mb * 8.0 / self.spec.intra_mbps
+                continue
+            slowest = 0.0
+            for leg in phase.legs:
+                leg_t = 0.0
+                for a, b in leg.hops:
+                    hop_t = transfer_time(total_mb, self.link_mbps(a, b),
+                                          self.wan, self._rng)
+                    self.beliefs.observe(a, b, total_mb * 8.0 / hop_t)
+                    leg_t += hop_t
+                slowest = max(slowest, leg_t)
+            t += slowest
+        return t
+
+    # ------------------------------------------- streaming round protocol
+    supports_streaming = True
+
+    def begin_stream_round(self, wire_mb: Mapping[str, float],
+                           step: Optional[int] = None) -> bool:
+        """Arm a streaming round: bill the whole schedule traversal now
+        (same rng draws, same belief observations as ``on_sync`` would
+        make), so a zero-retune round is bit-identical to the classic
+        path.  Observing beliefs at round-open is safe: nothing consults
+        them mid-round — the planner reads them at the next step's top and
+        the schedule recompiles only at ``end_stream_round``."""
+        total = sum(wire_mb.values())
+        if total <= 0.0:
+            return False
+        t = self._bill_round(total)
+        self._stream = _StreamRound(step, wire_mb, t)
+        return True
+
+    def stream_chunk(self, name: str, chunk_mb: float) -> float:
+        secs = self._stream.bill(name, chunk_mb)
+        if self.probe is not None:
+            self.probe.observe_chunk(chunk_mb, secs)
+        return secs
+
+    def stream_ship_chunk(self, name: str, chunk: ChunkPayload, shift: int,
+                          chunk_mb: float) -> Tuple[ChunkPayload, float]:
+        shipped = _INLINE_RING.ship_bucket(name, (chunk,), shift,
+                                           chunk_mb)[0]
+        return shipped, self.stream_chunk(name, chunk_mb)
+
+    def retune_stream(self, tail_mb: float) -> None:
+        """Abort the unsent schedule: the re-encoded tail pays one fresh
+        schedule traversal at the links' *current* traced bandwidths
+        (feeding the beliefs a second round of samples — the collapsed
+        link is repriced twice in one round)."""
+        st = self._stream
+        st.retuned = True
+        st.tail_mb = float(tail_mb)
+        st.t_tail = self._bill_round(tail_mb) if tail_mb > 0.0 else 0.0
+
+    def end_stream_round(self) -> float:
+        st = self._stream
+        self._stream = None
+        if not st.retuned:
+            # canonical per-bucket split of the round traversal — NOT a
+            # sum of chunk slices, so records match ``on_sync`` bit for bit
+            for name, mb in st.wire_mb.items():
+                self.records.append(TransferRecord(
+                    bucket=name, payload_mb=mb,
+                    seconds=st.t_round * mb / st.total, step=st.step))
+        else:
+            for name, mb in st.shipped.items():
+                self.records.append(TransferRecord(
+                    bucket=name, payload_mb=mb,
+                    seconds=st.billed.get(name, 0.0), step=st.step))
+        t = st.t_total
+        mb_obs = st.total if not st.retuned else st.shipped_mb
+        if self.probe is not None:
+            self.probe.observe_transfer(mb_obs, t)
+        self._recompile(st.step)
+        self.stream_rounds.append({
+            "step": st.step, "total_mb": st.total, "t_round": st.t_round,
+            "chunks": list(st.chunks), "retuned": st.retuned,
+            "tail_mb": st.tail_mb, "t_tail": st.t_tail,
+            "shipped_mb": st.shipped_mb, "t_s": t,
+        })
         return t
 
 

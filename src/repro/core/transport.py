@@ -50,7 +50,8 @@ import numpy as np
 from repro.core.autotune import WanProbe, WanProbeEstimator
 from repro.core.sync import (_INLINE_RING, ChunkPayload, SyncConfig,
                              _chunk_widths, _decode_bucket, _encode_bucket)
-from repro.core.wan import BandwidthTrace, WANConfig, transfer_time
+from repro.core.wan import (BandwidthTrace, WANConfig, stream_chunk_time,
+                            transfer_time)
 
 _EPS = 1e-9
 
@@ -93,6 +94,15 @@ class MeasuredWanProbe:
                                                  cliff_snap=cliff_snap))
         self.n_observations = 0
         self.last_mbps: Optional[float] = None
+        # chunk-granular observations (the streaming seam): each chunk's
+        # (wire MB, seconds, mbps) lands here AS IT LANDS, mid-round — the
+        # StreamingShipController reads these to retune before the round
+        # finishes.  The shared estimator still folds exactly once per
+        # round (at the round barrier), so round-level controllers see the
+        # identical belief stream whether streaming is on or off.
+        self.n_chunk_observations = 0
+        self.last_chunk_mbps: Optional[float] = None
+        self.chunk_log: List[Tuple[float, float, float]] = []
 
     def observe_transfer(self, payload_mb: float, seconds: float) -> WanProbe:
         """Fold one (wire MB, seconds) sample into the bandwidth belief.
@@ -110,9 +120,84 @@ class MeasuredWanProbe:
         self.n_observations += 1
         return self.estimator.observe(mbps)
 
+    def observe_chunk(self, payload_mb: float, seconds: float) -> None:
+        """Record one landed chunk's measured transfer, mid-round.
+
+        Deliberately does NOT touch the estimator: the round-level belief
+        folds once per round via :meth:`observe_transfer` (bit-identical
+        to the non-streaming path), while the chunk log gives the
+        streaming controller its first-chunk feedback."""
+        if payload_mb <= 0.0 or seconds <= 0.0:
+            return
+        mbps = payload_mb * 8.0 / max(seconds, _EPS)
+        self.last_chunk_mbps = mbps
+        self.n_chunk_observations += 1
+        self.chunk_log.append((payload_mb, seconds, mbps))
+
     @property
     def probe(self) -> WanProbe:
         return self.estimator.probe
+
+
+class _StreamRound:
+    """Mutable per-round state of a streaming ship (transport-internal).
+
+    ``t_round`` is the round's ONE clean transfer draw — the same draw the
+    non-streaming ``on_sync`` would make, consumed in the same rng order —
+    and every pre-retune chunk bills its pro-rata share of it
+    (``wan.stream_chunk_time``), so the first chunk's achieved bandwidth
+    IS the round's achieved bandwidth.  A mid-round retune re-prices only
+    the re-encoded tail with a second draw (``t_tail`` over ``tail_mb``)."""
+
+    def __init__(self, step: Optional[int], wire_mb: Mapping[str, float],
+                 t_round: float):
+        self.step = step
+        self.wire_mb = dict(wire_mb)
+        self.total = float(sum(self.wire_mb.values()))
+        self.t_round = t_round
+        self.retuned = False
+        self.tail_mb = 0.0
+        self.t_tail = 0.0
+        self.prefix_s = 0.0             # billed seconds before the retune
+        self.billed: Dict[str, float] = {}     # bucket -> seconds shipped
+        self.shipped: Dict[str, float] = {}    # bucket -> wire MB shipped
+        self.chunks: List[Tuple[str, float, float]] = []
+        #   (bucket, chunk MB, seconds) in ship order — the replayable
+        #   per-chunk observation stream
+
+    def bill(self, name: str, chunk_mb: float) -> float:
+        if self.retuned:
+            secs = stream_chunk_time(self.t_tail, chunk_mb, self.tail_mb)
+        else:
+            secs = stream_chunk_time(self.t_round, chunk_mb, self.total)
+            self.prefix_s += secs
+        self._account(name, chunk_mb, secs)
+        return secs
+
+    def bill_measured(self, name: str, chunk_mb: float,
+                      secs: float) -> float:
+        """Account a chunk whose transfer was wall-clock measured (mesh):
+        no billing law, the measurement IS the cost."""
+        self._account(name, chunk_mb, secs)
+        return secs
+
+    def _account(self, name: str, chunk_mb: float, secs: float) -> None:
+        self.billed[name] = self.billed.get(name, 0.0) + secs
+        self.shipped[name] = self.shipped.get(name, 0.0) + chunk_mb
+        self.chunks.append((name, chunk_mb, secs))
+
+    @property
+    def t_total(self) -> float:
+        """Round wall-clock: the untouched clean draw when no retune fired
+        (NOT a sum of chunk slices — float associativity must not drift
+        the zero-retune bill), else prefix slices + the tail draw."""
+        if not self.retuned:
+            return self.t_round
+        return self.prefix_s + self.t_tail
+
+    @property
+    def shipped_mb(self) -> float:
+        return float(sum(self.shipped.values()))
 
 
 class WanTransport:
@@ -129,9 +214,19 @@ class WanTransport:
 
     in_graph: bool = True
     probe: Optional[MeasuredWanProbe] = None
+    #: transports that implement the chunk-granular streaming round
+    #: protocol (begin_stream_round / stream_* / end_stream_round) set
+    #: this True; the trainer falls back to the classic
+    #: ship_bucket+on_sync path otherwise.
+    supports_streaming: bool = False
 
     def __init__(self):
         self.records: List[TransferRecord] = []
+        # replayable per-round streaming summaries (only streaming-capable
+        # transports append; kept on the base so consumers can read it
+        # unconditionally)
+        self.stream_rounds: List[Dict] = []
+        self._stream: Optional[_StreamRound] = None
 
     def ship_bucket(self, name: str, chunks: Sequence[ChunkPayload],
                     shift: int, payload_mb: float = 0.0
@@ -141,6 +236,47 @@ class WanTransport:
     def on_sync(self, wire_mb: Mapping[str, float],
                 step: Optional[int] = None) -> float:
         return 0.0
+
+    # ------------------------------------------- streaming round protocol
+    # The chunk, not the round, as the unit of WAN feedback: a streaming
+    # round opens with the full planned per-bucket wire schedule, ships
+    # chunk by chunk (each chunk's measured/billed transfer landing in
+    # ``probe.observe_chunk`` AS IT LANDS), may retune ONCE mid-round
+    # (abort the unsent schedule, re-price a re-encoded tail), and closes
+    # with ``end_stream_round`` — which emits the same per-bucket records
+    # and the same single probe-estimator fold as ``on_sync`` would.
+    # Invariant (property-tested): a streaming round with zero retunes is
+    # bit-identical to the classic path — records, probe belief, rng
+    # stream and all.
+
+    def begin_stream_round(self, wire_mb: Mapping[str, float],
+                           step: Optional[int] = None) -> bool:
+        """Arm a streaming round.  Returns False to decline (caller must
+        fall back to the classic ship+on_sync path for this round)."""
+        del wire_mb, step
+        return False
+
+    def stream_chunk(self, name: str, chunk_mb: float) -> float:
+        """Billing-only ship of one chunk (no data movement) — the DES /
+        bench driver's entry point.  Returns the chunk's seconds."""
+        raise NotImplementedError
+
+    def stream_ship_chunk(self, name: str, chunk: ChunkPayload, shift: int,
+                          chunk_mb: float) -> Tuple[ChunkPayload, float]:
+        """Ship one chunk's payload to the ring peer and bill it.
+        Returns (shipped chunk, seconds) — the trainer's entry point."""
+        raise NotImplementedError
+
+    def retune_stream(self, tail_mb: float) -> None:
+        """Abort the unsent chunk schedule; subsequent chunks are the
+        re-encoded tail, priced as one fresh transfer of ``tail_mb``."""
+        raise NotImplementedError
+
+    def end_stream_round(self) -> float:
+        """Round barrier for a streaming round: emit per-bucket records,
+        fold the round's aggregate into the probe estimator exactly once,
+        and return the round's transfer seconds."""
+        raise NotImplementedError
 
 
 class SimTransport(WanTransport):
@@ -197,6 +333,76 @@ class SimTransport(WanTransport):
                 step=step))
         if self.probe is not None:
             self.probe.observe_transfer(total, t)
+        return t
+
+    # ------------------------------------------- streaming round protocol
+    supports_streaming = True
+
+    def begin_stream_round(self, wire_mb: Mapping[str, float],
+                           step: Optional[int] = None) -> bool:
+        """Arm a streaming round: draw the round's ONE clean transfer time
+        now (same trace lookup, same rng consumption as ``on_sync``), so a
+        zero-retune round bills bit-identically to the classic path."""
+        total = sum(wire_mb.values())
+        if total <= 0.0:
+            return False
+        bw = self.trace.at(self.clock_s)
+        t = transfer_time(total, bw, self.wan, self._rng)
+        self._stream = _StreamRound(step, wire_mb, t)
+        return True
+
+    def stream_chunk(self, name: str, chunk_mb: float) -> float:
+        secs = self._stream.bill(name, chunk_mb)
+        if self.probe is not None:
+            self.probe.observe_chunk(chunk_mb, secs)
+        return secs
+
+    def stream_ship_chunk(self, name: str, chunk: ChunkPayload, shift: int,
+                          chunk_mb: float) -> Tuple[ChunkPayload, float]:
+        shipped = _INLINE_RING.ship_bucket(name, (chunk,), shift,
+                                           chunk_mb)[0]
+        return shipped, self.stream_chunk(name, chunk_mb)
+
+    def retune_stream(self, tail_mb: float) -> None:
+        """Abort the unsent schedule: the re-encoded tail is priced as one
+        fresh ``transfer_time`` draw at the *current* traced bandwidth —
+        the whole point of reacting mid-round."""
+        st = self._stream
+        st.retuned = True
+        st.tail_mb = float(tail_mb)
+        st.t_tail = (transfer_time(tail_mb, self.trace.at(self.clock_s),
+                                   self.wan, self._rng)
+                     if tail_mb > 0.0 else 0.0)
+
+    def end_stream_round(self) -> float:
+        st = self._stream
+        self._stream = None
+        if not st.retuned:
+            # canonical per-bucket split of the clean draw — NOT a sum of
+            # chunk slices, so records match ``on_sync`` bit for bit
+            for name, mb in st.wire_mb.items():
+                self.records.append(TransferRecord(
+                    bucket=name, payload_mb=mb,
+                    seconds=st.t_round * mb / st.total, step=st.step))
+        else:
+            for name, mb in st.shipped.items():
+                self.records.append(TransferRecord(
+                    bucket=name, payload_mb=mb,
+                    seconds=st.billed.get(name, 0.0), step=st.step))
+        t = st.t_total
+        # at zero retune the observation is (round total, clean draw) —
+        # the exact sample on_sync feeds (chunk-sum float order must not
+        # leak into the belief); a retuned round observes what actually
+        # shipped over what it actually took
+        mb_obs = st.total if not st.retuned else st.shipped_mb
+        if self.probe is not None:
+            self.probe.observe_transfer(mb_obs, t)
+        self.stream_rounds.append({
+            "step": st.step, "total_mb": st.total, "t_round": st.t_round,
+            "chunks": list(st.chunks), "retuned": st.retuned,
+            "tail_mb": st.tail_mb, "t_tail": st.t_tail,
+            "shipped_mb": st.shipped_mb, "t_s": t,
+        })
         return t
 
 
@@ -295,6 +501,59 @@ class MeshTransport(WanTransport):
             self.probe.observe_transfer(mb, secs)
         return secs
 
+    # ------------------------------------------- streaming round protocol
+    supports_streaming = True
+
+    def begin_stream_round(self, wire_mb: Mapping[str, float],
+                           step: Optional[int] = None) -> bool:
+        """Arm a streaming round on the mesh.  No billing draw here: every
+        chunk's cost is its measured wall-clock, landing as it lands."""
+        if sum(wire_mb.values()) <= 0.0:
+            return False
+        self._stream = _StreamRound(step, wire_mb, 0.0)
+        return True
+
+    def stream_ship_chunk(self, name: str, chunk: ChunkPayload, shift: int,
+                          chunk_mb: float) -> Tuple[ChunkPayload, float]:
+        placed = self._place((chunk,))
+        jax.block_until_ready(placed)
+        t0 = time.perf_counter()
+        out = tuple(ChunkPayload(*(self._roll(p, shift=shift, axis=0)
+                                   for p in c)) for c in placed)
+        jax.block_until_ready(out)
+        if self.emulate_mbps:
+            time.sleep(chunk_mb * 8.0 / self.emulate_mbps)
+        secs = time.perf_counter() - t0
+        self._stream.bill_measured(name, chunk_mb, secs)
+        if self.probe is not None:
+            self.probe.observe_chunk(chunk_mb, secs)
+        return out[0], secs
+
+    def retune_stream(self, tail_mb: float) -> None:
+        """Nothing to re-price: the mesh measures every chunk for real, so
+        the re-encoded (smaller) tail is automatically cheaper.  Recorded
+        for the replayable round summary only."""
+        self._stream.retuned = True
+        self._stream.tail_mb = float(tail_mb)
+
+    def end_stream_round(self) -> float:
+        st = self._stream
+        self._stream = None
+        secs = float(sum(st.billed.values()))
+        for name, mb in st.shipped.items():
+            self.records.append(TransferRecord(
+                bucket=name, payload_mb=mb,
+                seconds=st.billed.get(name, 0.0), step=st.step))
+        if self.probe is not None and st.shipped_mb > 0.0:
+            self.probe.observe_transfer(st.shipped_mb, secs)
+        self.stream_rounds.append({
+            "step": st.step, "total_mb": st.total, "t_round": secs,
+            "chunks": list(st.chunks), "retuned": st.retuned,
+            "tail_mb": st.tail_mb, "t_tail": st.t_tail,
+            "shipped_mb": st.shipped_mb, "t_s": secs,
+        })
+        return secs
+
     # ------------------------------------------------- overlap measurement
     def measure_overlap(self, cfg: SyncConfig, n_pods: int, n_elems: int,
                         *, seed: int = 0, reps: int = 3) -> Dict:
@@ -361,8 +620,13 @@ class MeshTransport(WanTransport):
         # collective dispatches can rendezvous-deadlock XLA:CPU).  Worker
         # threads only *wait* for the shipped chunk and pay the emulated
         # WAN hop; that wait+hop is what overlaps the next chunk's encode.
-        def run(pipelined: bool) -> Tuple[float, jnp.ndarray]:
+        def run(pipelined: bool
+                ) -> Tuple[float, jnp.ndarray, List[float]]:
             shipped: List = [None] * len(widths)
+            # per-chunk transfer wall-clock (wait-for-permute + emulated
+            # hop), written by whichever thread pays the transfer — the
+            # chunk-granular observation stream the streaming seam needs
+            hop_s: List[float] = [0.0] * len(widths)
             prev: Optional[threading.Thread] = None
             t0 = time.perf_counter()
             for i, m in enumerate(widths):
@@ -372,10 +636,12 @@ class MeshTransport(WanTransport):
                                            for p in c)) for c in ch)
                 shipped[i] = out
 
-                def hop(out=out, mb=chunk_mb[i]):
+                def hop(out=out, mb=chunk_mb[i], i=i):
+                    h0 = time.perf_counter()
                     jax.block_until_ready(out)
                     if self.emulate_mbps:
                         time.sleep(mb * 8.0 / self.emulate_mbps)
+                    hop_s[i] = time.perf_counter() - h0
 
                 if pipelined:
                     if prev is not None:
@@ -391,18 +657,21 @@ class MeshTransport(WanTransport):
                      for i, m in enumerate(widths)]
             out = jnp.concatenate(parts, axis=1)
             jax.block_until_ready(out)
-            return time.perf_counter() - t0, out
+            return time.perf_counter() - t0, out, hop_s
 
-        def timeit(pipelined: bool) -> Tuple[float, jnp.ndarray]:
-            _, out = run(pipelined)   # warmup / compile
+        def timeit(pipelined: bool
+                   ) -> Tuple[float, jnp.ndarray, List[float]]:
+            _, out, _ = run(pipelined)   # warmup / compile
             best = float("inf")
+            best_hops: List[float] = []
             for _ in range(reps):
-                dt, out = run(pipelined)
-                best = min(best, dt)
-            return best, out
+                dt, out, hops = run(pipelined)
+                if dt < best:
+                    best, best_hops = dt, hops
+            return best, out, best_hops
 
-        t_serial, out_serial = timeit(pipelined=False)
-        t_pipe, out_pipe = timeit(pipelined=True)
+        t_serial, out_serial, hops_serial = timeit(pipelined=False)
+        t_pipe, out_pipe, hops_pipe = timeit(pipelined=True)
         assert np.array_equal(np.asarray(out_serial), np.asarray(out_pipe))
         return {
             "n_devices": jax.device_count(),
@@ -412,6 +681,11 @@ class MeshTransport(WanTransport):
             "chunks": len(widths),
             "emulate_mbps": self.emulate_mbps,
             "wire_mb": round(sum(chunk_mb), 4),
+            "chunk_mb": [round(mb, 6) for mb in chunk_mb],
+            "chunk_transfer_s": {
+                "serialized": [round(h, 6) for h in hops_serial],
+                "pipelined": [round(h, 6) for h in hops_pipe],
+            },
             "t_pipelined_s": round(t_pipe, 6),
             "t_serialized_s": round(t_serial, 6),
             "overlap_speedup": round(t_serial / max(t_pipe, _EPS), 3),

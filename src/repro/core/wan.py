@@ -217,6 +217,34 @@ def _transfer_time(size_mb: float, bandwidth_mbps: float, wan: WANConfig,
 transfer_time = _transfer_time
 
 
+def stream_chunk_time(t_total: float, chunk_mb: float,
+                      total_mb: float) -> float:
+    """One chunk's share of a round transfer: the pro-rata slice of the
+    round's single ``transfer_time`` draw.
+
+    This is the streaming seam's *only* chunk-billing law, shared by
+    ``transport.SimTransport`` (per-chunk streaming bills), the
+    mid-round-cliff benchmark and the regression replay gate — so a
+    recorded chunk-observation stream re-bills exactly from the recorded
+    round draw.  Slicing the one draw (instead of drawing per chunk)
+    keeps a zero-retune streaming round's wall-clock bit-identical to the
+    classic once-per-round bill, and makes the first chunk's achieved
+    bandwidth equal the round's achieved bandwidth — the signal the
+    streaming controller compares against the belief."""
+    if total_mb <= 0.0:
+        return 0.0
+    return t_total * chunk_mb / total_mb
+
+
+def stream_chunk_plan(payload_mb: float, n_chunks: int) -> List[float]:
+    """Equal-split chunk schedule for billing-only streaming (the DES /
+    bench driver, which moves no real payloads): ``n_chunks`` chunks of
+    ``payload_mb / n_chunks`` MB each.  The real trainer path derives its
+    schedule from the codec's block-aligned ``_chunk_widths`` instead."""
+    n = max(1, int(n_chunks))
+    return [payload_mb / n] * n
+
+
 @dataclass(frozen=True)
 class RetryPolicy:
     """Bounded retry with exponential backoff for one WAN transfer.

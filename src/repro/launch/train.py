@@ -39,6 +39,7 @@ from repro.configs import ARCH_IDS, get_arch
 from repro.configs.base import dense
 from repro.core.autotune import (AdaptiveSyncController, BucketStats,
                                  BucketedSyncController,
+                                 StreamingShipController,
                                  bucket_stats_from_sync_state)
 from repro.core.control_plane import (CloudEvent, ElasticityController,
                                       EventBus, ReconfigPlan,
@@ -425,6 +426,26 @@ def main(argv=None):
     ap.add_argument("--ef-guard", type=float, default=0.9,
                     help="adaptive sync: EF-residual ratio bound the "
                          "controller must never trade away")
+    ap.add_argument("--stream-retune", action="store_true",
+                    help="chunk-granular streaming rounds: ship sync "
+                         "payloads chunk by chunk, compare each chunk's "
+                         "achieved bandwidth against the measured belief, "
+                         "and on a mid-round cliff abort the unsent "
+                         "schedule and re-encode the tail one codec rung "
+                         "cheaper (EF residual carries the fidelity "
+                         "delta).  Needs the fused codec with error "
+                         "feedback and a streaming-capable transport with "
+                         "a measured probe (sim, mesh, or topology "
+                         "tree/auto).  See docs/sync-tuning.md")
+    ap.add_argument("--stream-cliff", type=float, default=4.0,
+                    help="with --stream-retune: a chunk's achieved "
+                         "bandwidth must fall this factor below the "
+                         "believed bandwidth to count as a cliff "
+                         "(same scale as the probe's cliff-snap)")
+    ap.add_argument("--stream-hysteresis", type=int, default=1,
+                    help="with --stream-retune: consecutive cliff chunks "
+                         "required before the mid-round retune fires "
+                         "(1 = react to the first chunk)")
     ap.add_argument("--transport", default="inline",
                     help="who ships sync payloads: 'inline' (legacy in-jit "
                          "ring), 'sim[:fluct=F,latency=L,seed=S]' (billed "
@@ -633,6 +654,45 @@ def main(argv=None):
                               f"(topk {f}, {d}, block {blk})"
                               for n, (f, d, blk) in knobs.items()))
 
+    # ------------------------------------------------- streaming retune
+    # the chunk-level control loop: first-chunk feedback, at most one
+    # mid-round retune, EF residual carries the unsent tail's fidelity
+    # delta (docs/sync-tuning.md / docs/control-loops.md)
+    stream_ctl = None
+    if args.stream_retune:
+        if not (sync_cfg.uses_codec and sync_cfg.error_feedback):
+            raise SystemExit(
+                "--stream-retune re-encodes the unsent tail against the "
+                "carried residual: add --compress-topk F --int8 "
+                "--error-feedback")
+        if transport is None or not getattr(transport,
+                                            "supports_streaming", False):
+            raise SystemExit(
+                "--stream-retune needs a streaming-capable transport: "
+                "--transport sim/mesh or --topology tree/auto "
+                "(the inline ring has no chunk barrier to observe)")
+        if transport.probe is None:
+            raise SystemExit(
+                "--stream-retune compares achieved vs believed bandwidth: "
+                "the transport must carry a measured probe")
+        stream_ctl = StreamingShipController(
+            sync_cfg, model_mb, cliff_ratio=args.stream_cliff,
+            hysteresis=args.stream_hysteresis, ef_guard=args.ef_guard,
+            probe_est=transport.probe.estimator)
+        trainer.stream = stream_ctl
+        print(f"[stream] chunk-granular rounds: cliff {args.stream_cliff}x "
+              f"below belief, hysteresis {args.stream_hysteresis}, "
+              f"{len(stream_ctl.ladder)} retune rungs")
+    else:
+        if args.stream_cliff != 4.0:
+            raise SystemExit(
+                "--stream-cliff tunes the streaming retune's cliff "
+                "threshold: it needs --stream-retune")
+        if args.stream_hysteresis != 1:
+            raise SystemExit(
+                "--stream-hysteresis tunes the streaming retune's "
+                "debounce: it needs --stream-retune")
+
     # -------------------------------------------------------- elasticity
     # one control plane: the EventBus carries bandwidth/cloud churn to BOTH
     # actuators — the ElasticityController (re-plan resources) and the
@@ -644,11 +704,16 @@ def main(argv=None):
     chaos = transport if isinstance(transport, ChaosTransport) else None
     need_elastic = bool(events) or (chaos is not None and chaos.tolerate
                                     and chaos.plan.has_crashes)
-    controller = ElasticityController(plan, bus=bus) if need_elastic else None
-    tuner = None
     # measured mode: the transport's probe owns the bandwidth belief —
     # the controller reads it and nothing else (no trace, no bus events)
     measured = transport is not None and transport.probe is not None
+    controller = (ElasticityController(
+        plan, bus=bus,
+        # the elasticity replan reads the same measured belief the sync
+        # controllers act on — one bandwidth picture across both actuators
+        probe_est=transport.probe.estimator if measured else None)
+        if need_elastic else None)
+    tuner = None
     if args.topology == "auto" and not args.adaptive_sync:
         raise SystemExit(
             "--topology auto is the controller's third actuator: it needs "
@@ -661,13 +726,10 @@ def main(argv=None):
         probe_kw = (dict(probe_est=transport.probe.estimator, bus=None)
                     if measured else dict(bus=bus))
         if args.topology == "auto":
-            if sync_cfg.bucket_policy == "layer-class":
-                raise SystemExit(
-                    "--topology auto composes with the single-bucket "
-                    "controller; the per-bucket controller does not carry "
-                    "the topology actuator yet")
             # the planner shares the transport's link beliefs and actuates
             # through its set_kind — controller decides, transport reshapes
+            # (both controllers carry the actuator, under the same
+            # fresh-stats-only consultation rule)
             probe_kw["topology"] = TopologyPlanner(
                 transport.spec, transport.beliefs, apply=transport.set_kind)
         if sync_cfg.bucket_policy == "layer-class":
@@ -966,6 +1028,13 @@ def main(argv=None):
              for n, r in tuner.max_ef_ratio_by_bucket.items()}
             if isinstance(tuner, BucketedSyncController) else None),
         "transport": args.transport,
+        "stream_retune": args.stream_retune,
+        "stream_retunes": (trainer.stream_retunes
+                           if stream_ctl is not None else None),
+        "stream_rounds": (len(transport.stream_rounds)
+                          if stream_ctl is not None else None),
+        "stream_decisions": (len(stream_ctl.decisions)
+                             if stream_ctl is not None else None),
         "topology": args.topology,
         "final_topology": (transport.spec.kind
                            if isinstance(transport, HierarchicalTransport)

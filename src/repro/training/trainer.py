@@ -28,14 +28,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sync import (SyncConfig, SyncState, apply_sync,
-                             bucket_layout, bucket_weights_of,
-                             bucket_wire_mb, finish_codec_sync, grow_pods,
-                             init_sync_state, is_sync_step,
+from repro.core.sync import (SyncConfig, SyncState, _chunk_widths,
+                             apply_sync, bucket_chunk_mb, bucket_layout,
+                             bucket_weights_of, bucket_wire_mb,
+                             finish_codec_sync, finish_codec_sync_split,
+                             grow_pods, init_sync_state, is_sync_step,
                              on_step_gradients, prepare_codec_sync,
-                             resize_sync_state, retune_sync_state,
-                             ship_sync_payloads, shrink_pods,
-                             traffic_per_step_mb)
+                             reencode_unsent, resize_sync_state,
+                             retune_sync_state, ship_sync_payloads,
+                             shrink_pods, traffic_per_step_mb)
 from repro.optim.optimizers import (Optimizer, clip_by_global_norm,
                                     constant_schedule, get_optimizer,
                                     global_norm)
@@ -69,7 +70,7 @@ class TrainerConfig:
 
 class Trainer:
     def __init__(self, loss_fn: Callable, init_fn: Callable,
-                 cfg: TrainerConfig, transport=None):
+                 cfg: TrainerConfig, transport=None, stream=None):
         """loss_fn(params, batch) -> (loss, metrics dict);
         init_fn(key) -> params (single-pod, unstacked).
 
@@ -80,11 +81,22 @@ class Trainer:
         billed host-side at the round barrier; a host-seam transport
         (``MeshTransport``) switches the codec sync to the split path —
         jitted prepare, host-timed per-bucket ship, jitted finish — so
-        each bucket's transfer time is measured on-host."""
+        each bucket's transfer time is measured on-host.
+
+        ``stream`` (a :class:`repro.core.autotune.StreamingShipController`)
+        turns sync rounds chunk-granular on streaming-capable transports:
+        jitted prepare, then per-chunk host-seam ship with the chunk's
+        measured transfer observed AS IT LANDS — and, on a mid-round
+        bandwidth cliff, a one-shot re-encode of the round's unsent
+        segments at a cheaper ladder rung (``sync.reencode_unsent`` /
+        ``finish_codec_sync_split``; the EF residual carries the fidelity
+        delta exactly).  A round with zero retunes is bit-identical to
+        the non-streaming path."""
         self.loss_fn = loss_fn
         self.init_fn = init_fn
         self.cfg = cfg
         self.transport = transport
+        self.stream = stream
         self._host_seam = (transport is not None
                            and not getattr(transport, "in_graph", True))
         self.optimizer = cfg.make_optimizer()
@@ -106,9 +118,16 @@ class Trainer:
             self._sync_key(cfg.sync): (self._prepare_sync,
                                        self._finish_sync,
                                        self._finish_sync_masked)}
+        # streaming retune path: (from-key, to-key, sent-signature) ->
+        # (jitted tail re-encode, jitted split finish).  The partial-round
+        # split point is part of the key — a re-encode that aborts after a
+        # different chunk is a different program
+        self._stream_cache: Dict[Tuple, Any] = {}
         self._bucket_weights: Optional[Dict[str, float]] = None
         self._wire_mb: Optional[Dict[str, float]] = None
+        self._chunk_mb: Optional[Dict[str, Tuple[float, ...]]] = None
         self.traffic_mb = 0.0
+        self.stream_retunes = 0
 
     @staticmethod
     def _sync_key(sync: SyncConfig) -> SyncConfig:
@@ -218,6 +237,133 @@ class Trainer:
             self._wire_mb = bucket_wire_mb(self.cfg.sync, layout)
         return self._wire_mb
 
+    def chunk_mb(self, state: TrainState) -> Dict[str, Tuple[float, ...]]:
+        """Per-chunk wire MB of each bucket (memoized per config) — the
+        streaming ship's chunk schedule."""
+        if self._chunk_mb is None:
+            layout = bucket_layout(self.cfg.sync,
+                                   state.sync_state.ga_buffer)
+            self._chunk_mb = bucket_chunk_mb(self.cfg.sync, layout)
+        return self._chunk_mb
+
+    # ------------------------------------------------ streaming sync path
+    def _can_stream(self) -> bool:
+        return (self.stream is not None
+                and self.cfg.sync.uses_codec
+                and self.transport is not None
+                and getattr(self.transport, "supports_streaming", False))
+
+    def _stream_fns(self, state: TrainState, cfg_to: SyncConfig,
+                    sent: Dict[str, int]):
+        """Jitted (tail re-encode, split finish) pair for one retune shape,
+        cached under the split-path key: (from config, to config, where
+        each bucket's schedule was cut)."""
+        sent_key = tuple(sorted(sent.items()))
+        key = (self._sync_key(self.cfg.sync), self._sync_key(cfg_to),
+               sent_key)
+        fns = self._stream_cache.get(key)
+        if fns is None:
+            cfg = self.cfg.sync
+            layout = bucket_layout(cfg, state.sync_state.ga_buffer)
+            sent_d = dict(sent)
+
+            def reenc(flat):
+                return reencode_unsent(cfg, cfg_to, flat, layout, sent_d)
+
+            def fin(st, payloads, shipped, tail_shipped, tail_local):
+                lr = self.schedule(st.step)
+                params, sync_state = finish_codec_sync_split(
+                    cfg, cfg_to, st.params, st.sync_state, payloads,
+                    shipped, tail_shipped, tail_local, sent_d, lr)
+                return st._replace(params=params, sync_state=sync_state)
+
+            fns = (jax.jit(reenc), jax.jit(fin))
+            self._stream_cache[key] = fns
+        return fns
+
+    def _stream_sync(self, state: TrainState,
+                     host_step: int) -> Optional[TrainState]:
+        """One chunk-granular sync round.  Returns None when the transport
+        declines the streaming protocol for this round (e.g. a chaos plan
+        armed a fault — the classic retry/degrade path must run instead).
+
+        The round: jitted prepare at the live config; per-chunk host-seam
+        ship, each landed chunk observed by the StreamingShipController
+        against the pre-round bandwidth belief; on a cliff, ONE transient
+        retune — the unsent segments re-encode at the cheaper rung, the
+        transport re-prices the tail at the current bandwidth, and the
+        split finish splices prefix + tail so the EF residual carries the
+        tail's fidelity delta exactly.  ``end_stream_round`` then emits
+        the same records/probe fold ``on_sync`` would — bit-identical when
+        no retune fired."""
+        from repro.core.autotune import BucketStats
+
+        cfg = self.cfg.sync
+        wire = self.wire_mb(state)
+        if not self.transport.begin_stream_round(wire, step=host_step):
+            return None
+        self.stream.note_stats(BucketStats.from_sync_state(state.sync_state))
+        self.stream.begin_round(host_step, cfg)
+        payloads = self._prepare_sync(state)
+        chunk_mb = self.chunk_mb(state)
+        shipped: Dict[str, List] = {}
+        # every bucket starts at 0 sent chunks: when a retune aborts the
+        # schedule, buckets not yet reached re-encode whole
+        sent: Dict[str, int] = {name: 0 for name in payloads.chunks}
+        cfg_to: Optional[SyncConfig] = None
+        for name, bchunks in payloads.chunks.items():
+            for i, chunk in enumerate(bchunks):
+                out, secs = self.transport.stream_ship_chunk(
+                    name, chunk, cfg.peer_shift, chunk_mb[name][i])
+                shipped.setdefault(name, []).append(out)
+                sent[name] = i + 1
+                cfg_to = self.stream.observe_chunk(name, chunk_mb[name][i],
+                                                   secs)
+                if cfg_to is not None:
+                    break
+            if cfg_to is not None:
+                break
+        shipped_t = {n: tuple(c) for n, c in shipped.items()}
+        tails = {}
+        if cfg_to is not None:
+            reenc, fin = self._stream_fns(state, cfg_to, sent)
+            tails, tail_local = reenc(payloads.flat)
+        if tails:
+            # price the re-encoded tail as one fresh transfer at the
+            # *current* bandwidth, then stream it out chunk by chunk
+            layout = bucket_layout(cfg, state.sync_state.ga_buffer)
+            tail_schedule: Dict[str, Tuple[float, ...]] = {}
+            for g, name in enumerate(layout.names):
+                if name not in tails:
+                    continue
+                size = layout.sizes[g]
+                widths = _chunk_widths(cfg.for_bucket(name), size)
+                sw = int(sum(widths[:sent.get(name, 0)]))
+                tcfg = cfg_to.for_bucket(name)
+                tail_schedule[name] = tuple(
+                    tcfg.payload_mb(m * 4 / 1e6)
+                    for m in _chunk_widths(tcfg, size - sw))
+            self.transport.retune_stream(
+                sum(mb for t in tail_schedule.values() for mb in t))
+            self.stream_retunes += 1
+            tail_shipped: Dict[str, List] = {}
+            for name, tchunks in tails.items():
+                for i, chunk in enumerate(tchunks):
+                    out, secs = self.transport.stream_ship_chunk(
+                        name, chunk, cfg.peer_shift,
+                        tail_schedule[name][i])
+                    tail_shipped.setdefault(name, []).append(out)
+                    self.stream.observe_chunk(name,
+                                              tail_schedule[name][i], secs)
+            state = fin(state, payloads, shipped_t,
+                        {n: tuple(c) for n, c in tail_shipped.items()},
+                        tail_local)
+        else:
+            state = self._finish_sync(state, payloads, shipped_t)
+        self.transport.end_stream_round()
+        self.stream.end_round()
+        return state
+
     def _host_sync(self, state: TrainState) -> TrainState:
         """Codec sync as three dispatches with the transport at the seam:
         the ship runs host-side so the transport can execute and time each
@@ -255,8 +401,9 @@ class Trainer:
                                       sync=sync or self.cfg.sync)
         new_state = resize_train_state(new_cfg.sync, state, n_pods, keep=keep)
         trainer = Trainer(self.loss_fn, self.init_fn, new_cfg,
-                          transport=self.transport)
+                          transport=self.transport, stream=self.stream)
         trainer.traffic_mb = self.traffic_mb
+        trainer.stream_retunes = self.stream_retunes
         return trainer, new_state
 
     def retune(self, state: TrainState, sync: SyncConfig
@@ -272,7 +419,7 @@ class Trainer:
         sync_state = retune_sync_state(sync, self.cfg.sync, state.sync_state,
                                        state.params)
         trainer = Trainer(self.loss_fn, self.init_fn, new_cfg,
-                          transport=self.transport)
+                          transport=self.transport, stream=self.stream)
         # the per-step path depends on the sync *strategy* (which a retune
         # cannot change), not the codec knobs — reuse the compiled train
         # step so a retune recompiles only the sync step.  And only when a
@@ -284,6 +431,8 @@ class Trainer:
         trainer._train_step = self._train_step
         trainer._sync_cache = self._sync_cache
         trainer._split_cache = self._split_cache
+        trainer._stream_cache = self._stream_cache
+        trainer.stream_retunes = self.stream_retunes
         key = self._sync_key(sync)
         cached = self._sync_cache.get(key)
         if cached is not None:
@@ -322,6 +471,12 @@ class Trainer:
             begin = getattr(self.transport, "begin_round", None)
             if begin is not None:
                 begin(host_step)
+            if self._can_stream():
+                streamed = self._stream_sync(state, host_step)
+                if streamed is not None:
+                    # the streaming round already billed itself
+                    # (end_stream_round IS this round's barrier)
+                    return streamed
             if self._host_seam and self.cfg.sync.uses_codec:
                 state = self._host_sync(state)
             else:

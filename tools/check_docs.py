@@ -50,6 +50,7 @@ SYNC_FLAGS = (
     "--adaptive-sync", "--ef-guard", "--wan-trace", "--step-time",
     "--transport", "--topology", "--faults", "--no-tolerance",
     "--async-checkpoint", "--snapshot-every", "--keep-snapshots",
+    "--stream-retune", "--stream-cliff", "--stream-hysteresis",
 )
 LAUNCHER = "src/repro/launch/train.py"
 
